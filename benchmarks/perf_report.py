@@ -1,0 +1,87 @@
+"""Render the §Roofline table (post-optimization sweep + baseline deltas)
+into EXPERIMENTS.md at the <!-- ROOFLINE_TABLE --> marker."""
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+CUR = ROOT / "artifacts" / "dryrun"
+BASE = ROOT / "artifacts" / "dryrun_baseline"
+MARK = "<!-- ROOFLINE_TABLE -->"
+
+
+def load(d, mesh="single_pod_16x16"):
+    out = {}
+    for f in sorted(d.glob("*.json")):
+        r = json.loads(f.read_text())
+        if r.get("mesh") == mesh:
+            out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def fmt(x, n=3):
+    return f"{x:.{n}f}"
+
+
+def build_table() -> str:
+    cur = load(CUR)
+    base = load(BASE)
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | dominant "
+        "| fraction | frac (baseline) | useful |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for key in sorted(cur):
+        r = cur[key]
+        if r["status"] == "skipped":
+            lines.append(f"| {key[0]} | {key[1]} | - | - | - | - | skip "
+                         f"(full-attention @500k ctx) | - | - |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {key[0]} | {key[1]} | ERROR | | | | | | |")
+            continue
+        rl = r["roofline"]
+        b = base.get(key)
+        bfrac = (fmt(b["roofline"]["roofline_fraction"])
+                 if b and b.get("status") == "ok" else "-")
+        useful = r.get("useful_flops_ratio")
+        lines.append(
+            f"| {key[0]} | {key[1]} | {fmt(rl['compute_s'])} "
+            f"| {fmt(rl['memory_s'])} | {fmt(rl['collective_s'])} "
+            f"| {rl['dominant']} | **{fmt(rl['roofline_fraction'])}** "
+            f"| {bfrac} | {fmt(useful, 2) if useful else '-'} |")
+    ok = [r for r in cur.values() if r["status"] == "ok"]
+    mean = sum(r["roofline"]["roofline_fraction"] for r in ok) / max(len(ok), 1)
+    ok_b = [b for b in base.values() if b.get("status") == "ok"]
+    mean_b = sum(b["roofline"]["roofline_fraction"]
+                 for b in ok_b) / max(len(ok_b), 1)
+    lines.append("")
+    lines.append(f"Mean roofline fraction across runnable single-pod cells: "
+                 f"**{mean:.3f}** (baseline archive: {mean_b:.3f}).  "
+                 f"Multi-pod (2x16x16) twins of every cell compile and are "
+                 f"recorded alongside (`*multi_pod_2x16x16.json`).")
+    lines.append("")
+    lines.append(
+        "Baseline-column caveat: the three hillclimbed train cells "
+        "(gemma-7b 0.212, command-r-plus-104b 0.122, xlstm-1.3b 0.021) and "
+        "qwen2 train (0.031) were re-measured during iteration, so the "
+        "archive stores post-optimization values for them; their true "
+        "baselines are the §Perf scoreboard numbers.")
+    return "\n".join(lines)
+
+
+def main():
+    md = (ROOT / "EXPERIMENTS.md").read_text()
+    table = MARK + "\n" + build_table()
+    if MARK in md:
+        pre = md.split(MARK)[0]
+        post = md.split(MARK)[-1]
+        # replace everything from marker to the next section header
+        rest = post.split("\n## ", 1)
+        tail = ("\n## " + rest[1]) if len(rest) > 1 else ""
+        md = pre + table + "\n" + tail
+    (ROOT / "EXPERIMENTS.md").write_text(md)
+    print("EXPERIMENTS.md roofline table updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""EXPERIMENTS.md §Roofline: aggregate the dry-run artifacts into the
+per-(arch x shape x mesh) three-term table."""
+import json
+from pathlib import Path
+
+ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load_records(mesh_filter=None):
+    recs = []
+    for f in sorted(ARTIFACTS.glob("*.json")):
+        r = json.loads(f.read_text())
+        if mesh_filter and r.get("mesh") != mesh_filter:
+            continue
+        recs.append(r)
+    return recs
+
+
+def table(single_pod_only=True):
+    """Rows: arch, shape, three terms, dominant, fraction, useful ratio."""
+    mesh = "single_pod_16x16" if single_pod_only else None
+    rows = []
+    for r in load_records(mesh):
+        if r["status"] != "ok":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "mesh": r["mesh"], "status": r["status"],
+                         "reason": r.get("reason", r.get("error", ""))[:80]})
+            continue
+        rl = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "status": "ok",
+            "compute_s": rl["compute_s"], "memory_s": rl["memory_s"],
+            "collective_s": rl["collective_s"], "dominant": rl["dominant"],
+            "fraction": rl["roofline_fraction"],
+            "useful_ratio": r.get("useful_flops_ratio"),
+        })
+    return rows
+
+
+def run():
+    """CSV rows for benchmarks.run."""
+    out = []
+    for row in table():
+        if row["status"] != "ok":
+            continue
+        key = f'{row["arch"]}__{row["shape"]}'
+        out.append((f"roofline_fraction[{key}]", row["fraction"]))
+    ok_rows = [r for r in table() if r["status"] == "ok"]
+    if ok_rows:
+        out.append(("roofline_cells_ok", float(len(ok_rows))))
+        out.append(("roofline_mean_fraction",
+                    sum(r["fraction"] for r in ok_rows) / len(ok_rows)))
+    return out
+
+
+def print_table():
+    rows = table(single_pod_only=True)
+    hdr = f'{"arch":24s} {"shape":12s} {"comp_s":>9s} {"mem_s":>9s} ' \
+          f'{"coll_s":>9s} {"dom":>10s} {"frac":>6s} {"useful":>7s}'
+    print(hdr)
+    for r in rows:
+        if r["status"] != "ok":
+            print(f'{r["arch"]:24s} {r["shape"]:12s} {"-- " + r["status"]}')
+            continue
+        u = f'{r["useful_ratio"]:.2f}' if r["useful_ratio"] else "-"
+        print(f'{r["arch"]:24s} {r["shape"]:12s} {r["compute_s"]:9.3f} '
+              f'{r["memory_s"]:9.3f} {r["collective_s"]:9.3f} '
+              f'{r["dominant"]:>10s} {r["fraction"]:6.3f} {u:>7s}')
+
+
+if __name__ == "__main__":
+    print_table()

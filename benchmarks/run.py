@@ -1,0 +1,56 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: one module per paper table/figure.
+
+  Table 1 / §3  -> bf_table        (B/F ratios, staging-vs-matrix analysis)
+  Fig. 3        -> ai_curves       (AI(n)=n/5 + crossovers)
+  Fig. 4        -> householder     (fragment-from-rule vs staged)
+  Fig. 5        -> givens          (map-generated rotation, embedded vs arg)
+  Fig. 7        -> ai_curves       (TCEC staging roofline, 52 -> 104 TFlop/s)
+  Fig. 8        -> tcec_accuracy   (measured: emulation matches fp32)
+                   tcec_throughput (bounds + compiled HBM-traffic ratio)
+  §Roofline     -> roofline        (cluster table from dry-run artifacts)
+
+Every row prints as ``name,value,derived`` where timing rows use us_per_call
+and analysis rows carry the derived quantity.
+"""
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bf_table, ai_curves, householder, givens,
+                            tcec_accuracy, tcec_throughput, roofline)
+    modules = [
+        ("bf_table", bf_table),
+        ("ai_curves", ai_curves),
+        ("householder", householder),
+        ("givens", givens),
+        ("tcec_accuracy", tcec_accuracy),
+        ("tcec_throughput", tcec_throughput),
+        ("roofline", roofline),
+    ]
+    failures = 0
+    print("name,us_per_call,derived")
+    for name, mod in modules:
+        t0 = time.perf_counter()
+        try:
+            rows = mod.run()
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            print(f"{name},ERROR,{type(e).__name__}")
+            failures += 1
+            continue
+        dt_us = (time.perf_counter() - t0) * 1e6
+        print(f"{name}.total,{dt_us:.1f},")
+        for key, val in rows:
+            if key.endswith("_us"):
+                print(f"{name}.{key},{val:.2f},")
+            else:
+                print(f"{name}.{key},,{val:.6g}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

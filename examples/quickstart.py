@@ -1,0 +1,63 @@
+"""Quickstart: the paper's two contributions in 60 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. TCEC — FP32-accurate matmul emulated with bf16 MXU passes, without
+   staging split matrices (WMMAe-TCEC, TPU-adapted).
+2. foreach_ij — structured operands generated from rules in registers
+   (no memory staging): triangular scan, Householder, Givens.
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (tc_matmul, split3, reconstruct, foreach_ij,
+                        triangular_ones, householder, givens)
+from repro.core import roofline as rl
+
+
+def main():
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((512, 512)).astype(np.float32)
+    b = rng.standard_normal((512, 512)).astype(np.float32)
+    ref = a.astype(np.float64) @ b.astype(np.float64)
+    scale = np.max(np.abs(ref))
+
+    print("== TCEC: error-corrected matmul emulation on the MXU ==")
+    for pol in ("bf16x1", "bf16x3", "bf16x6", "fp32_vpu"):
+        out = np.asarray(tc_matmul(jnp.asarray(a), jnp.asarray(b), pol))
+        err = np.max(np.abs(out - ref)) / scale
+        note = {"bf16x1": "plain bf16 (uncorrected)",
+                "bf16x3": "2-word split, 3 passes",
+                "bf16x6": "3-word split, 6 passes (fp32-accurate)",
+                "fp32_vpu": "native fp32 (the SIMT baseline)"}[pol]
+        print(f"  {pol:9s} max_rel_err={err:.2e}   <- {note}")
+
+    hi, mid, lo = split3(jnp.asarray(a))
+    exact = np.max(np.abs(np.asarray(reconstruct(hi, mid, lo)) - a))
+    print(f"  split3 reconstruction error: {exact} (Dekker-exact)")
+
+    print("\n== foreach_ij: fragments from structural rules ==")
+    u = triangular_ones(8)
+    x = jnp.arange(8, dtype=jnp.float32)[None]
+    print("  cumsum via x @ U (scan on the MXU):", np.asarray(x @ u)[0, :5])
+    v = jnp.asarray(rng.standard_normal(8).astype(np.float32))
+    v = v / jnp.linalg.norm(v)
+    h = householder(v)
+    print("  Householder H v == -v:",
+          np.allclose(np.asarray(h @ v), -np.asarray(v), atol=1e-5))
+    g = givens(8, 1, 5, jnp.float32(0.3))
+    print("  Givens det(G) == 1:",
+          np.isclose(np.linalg.det(np.asarray(g)), 1.0, atol=1e-5))
+    checker = foreach_ij(lambda i, j: ((i + j) % 2).astype(jnp.float32), 4, 4)
+    print("  arbitrary rule (checkerboard):\n", np.asarray(checker))
+
+    print("\n== why it matters (paper §3, v5e numbers) ==")
+    for frag in ("staged", "on_the_fly"):
+        t = rl.tcec_attainable_tflops(32, 3, frag, rl.TPU_V5E)
+        print(f"  bf16x3 emulated-fp32 bound, {frag:10s}: {t:6.1f} TFlop/s")
+    print(f"  fp32 vector-unit peak:                 "
+          f"{rl.TPU_V5E.vector_tflops:6.1f} TFlop/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Scan (cumulative sum) executed on the matrix unit via a rule-generated
+triangular fragment — the paper's §4.1 example (after Dakkak et al.),
+end to end through the Pallas kernel.
+
+    PYTHONPATH=src python examples/scan_on_mxu.py
+"""
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.core import triangular_ones
+
+
+def main():
+    rng = np.random.default_rng(0)
+    rows, n = 64, 1024
+    x = rng.standard_normal((rows, n)).astype(np.float32)
+
+    # the operand U is never materialized in HBM: the kernel generates it
+    # from its structural rule (Eq. 3) inside VMEM/VREGs per block.
+    out = np.asarray(ops.cumsum(jnp.asarray(x), block_n=256, interpret=True))
+    exact = np.cumsum(x.astype(np.float64), axis=-1)
+    rel = np.max(np.abs(out - exact)) / np.max(np.abs(exact))
+    print(f"scan-on-MXU (blockwise x@U + carry): rel err vs fp64 = {rel:.2e}")
+
+    # the same rule as a jnp fragment, fused by XLA:
+    u = triangular_ones(256)
+    xb = jnp.asarray(x[:, :256])
+    fused = jax.jit(lambda t: t @ u)
+    got = np.asarray(fused(xb))
+    np.testing.assert_allclose(got, np.cumsum(x[:, :256], -1), rtol=1e-3,
+                               atol=1e-3)
+    print("XLA-fused fragment path matches cumsum.")
+
+    # bytes the rule saves: U would be n_block^2 * 4 bytes per tile
+    print(f"staging bytes avoided per 256-tile: {256*256*4/1024:.0f} KiB "
+          f"(U generated from its rule instead)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Batched serving example: prefill a batch of prompts, decode with KV
+caches, report tokens/sec.
+
+    PYTHONPATH=src python examples/serve_batched.py --arch qwen2-0.5b \
+        --batch 8 --gen 48
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, ARCH_IDS
+from repro.data.pipeline import make_frontend_inputs
+from repro.launch.mesh import make_host_mesh
+from repro.launch.serve import generate
+from repro.models import init_params, param_count
+from repro.models.base import activation_sharding
+from repro.parallel import sharding as shd
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS), default="qwen2-0.5b")
+    ap.add_argument("--full", action="store_true",
+                    help="full config (default: reduced smoke config)")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=48)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=not args.full)
+    print(f"serving {cfg.name}: {param_count(cfg)/1e6:.1f}M params, "
+          f"batch={args.batch}")
+    mesh = make_host_mesh()
+    rng = jax.random.PRNGKey(0)
+    params = init_params(rng, cfg)
+    pspecs = shd.param_pspecs(cfg, mesh)
+    params = jax.device_put(params, jax.tree.map(
+        lambda p: NamedSharding(mesh, p), pspecs,
+        is_leaf=lambda x: isinstance(x, P)))
+
+    tokens = jax.random.randint(rng, (args.batch, args.prompt_len), 0,
+                                cfg.vocab, dtype=jnp.int32)
+    extras = {k: jnp.asarray(v) for k, v in
+              make_frontend_inputs(cfg, args.batch, 0).items()}
+    max_len = args.prompt_len + (cfg.vision_tokens or 0) + args.gen + 1
+    with mesh, activation_sharding(mesh):
+        gen, tps = generate(cfg, params, tokens, max_len, args.gen,
+                            batch_extras=extras)
+    print(f"generated {gen.shape[0]}x{gen.shape[1]} tokens "
+          f"at {tps:.1f} tok/s (host CPU)")
+    print("first sequence:", np.asarray(gen[0, :16]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""End-to-end driver: train a ~100M-param qwen2-family LM for a few hundred
+steps on the synthetic pipeline, with checkpoints, watchdog and resume.
+
+    PYTHONPATH=src python examples/train_tiny_lm.py [--steps 300]
+
+Uses the REAL framework path: sharded train state on the host mesh, jitted
+train step (TCEC logits policy), resumable data iterator, async checkpoints.
+"""
+import argparse
+import dataclasses
+from pathlib import Path
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, BlockSpec
+from repro.data.pipeline import DataConfig
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_host_mesh
+from repro.models import param_count
+from repro.models.base import activation_sharding
+from repro.optim.adamw import AdamWConfig
+from repro.optim.schedule import warmup_cosine
+from repro.runtime.train_loop import TrainLoop, TrainLoopConfig
+
+
+def tiny_100m() -> ArchConfig:
+    """~100M-param dense LM (qwen2 family shape, scaled)."""
+    return ArchConfig(
+        name="tiny-100m", family="dense",
+        n_layers=10, d_model=768, n_heads=12, n_kv_heads=4,
+        d_ff=3072, vocab=32768,
+        pattern=(BlockSpec("attn", "dense"),),
+        act="silu", qkv_bias=True, tie_embeddings=True,
+        remat="none", logits_policy="bf16x3",
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--data-vocab", type=int, default=1024,
+                    help="token range of the synthetic stream (narrower "
+                         "than the model vocab -> enough updates per "
+                         "embedding row to learn in a few hundred steps)")
+    ap.add_argument("--ckpt", default="/tmp/repro_tiny100m")
+    args = ap.parse_args()
+
+    cfg = tiny_100m()
+    print(f"model: {cfg.name}  params={param_count(cfg)/1e6:.1f}M")
+    mesh = make_host_mesh()
+    opt_cfg = AdamWConfig(lr=6e-3, use_master=True,
+                          schedule=warmup_cosine(6e-3, 20, args.steps))
+    state = steps_mod.init_train_state(jax.random.PRNGKey(0), cfg, opt_cfg)
+    pspecs = steps_mod.train_state_pspecs(cfg, opt_cfg, mesh)
+    shardings = jax.tree.map(lambda p: NamedSharding(mesh, p), pspecs,
+                             is_leaf=lambda x: isinstance(x, P))
+    state = jax.device_put(state, shardings)
+
+    with mesh, activation_sharding(mesh):
+        jit_step = jax.jit(steps_mod.make_train_step(cfg, opt_cfg),
+                           in_shardings=(shardings, None),
+                           donate_argnums=(0,))
+        loop = TrainLoop(
+            cfg, TrainLoopConfig(total_steps=args.steps, checkpoint_every=100,
+                                 log_every=20),
+            opt_cfg, jit_step, Path(args.ckpt),
+            DataConfig(vocab=min(args.data_vocab, cfg.vocab),
+                       seq_len=args.seq, global_batch=args.batch))
+        loop.run(state, resume=False)
+    losses = [h["loss"] for h in loop.history]
+    print(f"\nloss: {losses[0]:.3f} -> {np.mean(losses[-10:]):.3f} "
+          f"over {len(losses)} steps")
+    if args.steps >= 100:
+        assert np.mean(losses[-10:]) < losses[0] - 0.5, \
+            "training failed to learn"
+        print("OK: model learned the synthetic structure.")
+
+
+if __name__ == "__main__":
+    main()

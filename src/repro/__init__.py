@@ -1,0 +1,10 @@
+"""repro — WMMAe-on-TPU: shared-memory(VMEM)-footprint-reduced matrix engines
+for JAX, plus the multi-pod training/serving framework built around them.
+
+Reproduction of Ootomo & Yokota, "Reducing shared memory footprint to leverage
+high throughput on Tensor Cores and its flexible API extension library"
+(HPC ASIA 2023), adapted to the TPU memory hierarchy (HBM->VMEM->VREG) and
+integrated as the matmul precision-policy layer of a production-style
+training framework.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,2 @@
+"""Sharded atomic checkpointing with elastic resharding."""
+from .checkpointer import Checkpointer

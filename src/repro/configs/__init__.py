@@ -1,0 +1,4 @@
+"""Architecture + shape configs (``--arch`` / ``--shape`` flag values)."""
+from .base import ArchConfig, BlockSpec, MoeConfig, MlaConfig, SsmConfig, \
+    XlstmConfig, get_config, ARCH_IDS
+from .shapes import SHAPES, SHAPE_IDS, ShapeSpec, input_specs, cell_runnable

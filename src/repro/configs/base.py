@@ -1,0 +1,150 @@
+"""Architecture configuration schema + registry.
+
+One ``ArchConfig`` describes every assigned architecture.  Layer stacks are
+expressed as a repeating *pattern group* of ``BlockSpec``s (mixer kind + ffn
+kind); the model scans over pattern repetitions, so HLO size is O(group), not
+O(layers) — this is what keeps CPU compiles of 60–72-layer 100B+ configs
+tractable in the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional, Sequence, Tuple
+
+# Mixer kinds: attn | mla | mamba | mlstm | slstm | none
+# FFN kinds:   dense | moe | none
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    mixer: str = "attn"
+    ffn: str = "dense"
+
+
+@dataclasses.dataclass(frozen=True)
+class MoeConfig:
+    n_experts: int = 8
+    top_k: int = 2
+    d_ff_expert: int = 1024
+    n_shared_experts: int = 0
+    d_ff_shared: int = 0          # per shared expert; 0 -> use d_ff_expert
+    capacity_factor: float = 1.25
+    group_size: int = 1024        # routing group (tokens) for dispatch einsum
+    router_policy: str = "bf16x3"  # TCEC policy for routing logits (fp32-acc)
+
+
+@dataclasses.dataclass(frozen=True)
+class MlaConfig:
+    """DeepSeek-V2 Multi-head Latent Attention."""
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 0          # 0 -> dense q projection
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SsmConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0              # 0 -> ceil(d_model / 16)
+    chunk: int = 256              # chunked-scan block length
+
+
+@dataclasses.dataclass(frozen=True)
+class XlstmConfig:
+    proj_factor_mlstm: float = 2.0
+    proj_factor_slstm: float = 1.34
+    conv_kernel: int = 4
+    chunk: int = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0             # 0 -> d_model // n_heads
+    pattern: Tuple[BlockSpec, ...] = (BlockSpec(),)
+    act: str = "silu"             # silu (SwiGLU) | gelu (GeGLU)
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    rope_theta: float = 10000.0
+    moe: Optional[MoeConfig] = None
+    mla: Optional[MlaConfig] = None
+    ssm: Optional[SsmConfig] = None
+    xlstm: Optional[XlstmConfig] = None
+    # Encoder-decoder (whisper): encoder layer count + fixed source length.
+    encoder_layers: int = 0
+    encoder_len: int = 0          # stubbed frame/patch embeddings length
+    # VLM: number of stub vision-patch embeddings prepended to the text.
+    vision_tokens: int = 0
+    # Precision / paper-technique policy.
+    param_dtype: str = "bfloat16"
+    matmul_policy: str = "bf16x1"     # bulk dense layers
+    logits_policy: str = "bf16x3"     # LM head (TCEC fp32-accurate)
+    remat: str = "full"               # full | dots | none
+    sub_quadratic: bool = False       # supports long_500k decode
+
+    # ---- derived ----
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def group_len(self) -> int:
+        return len(self.pattern)
+
+    @property
+    def n_groups(self) -> int:
+        assert self.n_layers % self.group_len == 0, \
+            f"{self.name}: {self.n_layers} layers not divisible by pattern {self.group_len}"
+        return self.n_layers // self.group_len
+
+    def validate(self) -> None:
+        _ = self.n_groups
+        if any(b.ffn == "moe" for b in self.pattern):
+            assert self.moe is not None, f"{self.name}: moe pattern without MoeConfig"
+        if any(b.mixer == "mla" for b in self.pattern):
+            assert self.mla is not None
+        if any(b.mixer == "mamba" for b in self.pattern):
+            assert self.ssm is not None
+        if any(b.mixer in ("mlstm", "slstm") for b in self.pattern):
+            assert self.xlstm is not None
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+_ARCH_MODULES = {
+    "gemma-7b": "gemma_7b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "command-r-plus-104b": "command_r_plus_104b",
+    "qwen2-0.5b": "qwen2_0_5b",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "whisper-small": "whisper_small",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "internvl2-2b": "internvl2_2b",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+
+def get_config(arch_id: str, reduced: bool = False) -> ArchConfig:
+    """Load an architecture config by id (``--arch`` flag values)."""
+    if arch_id not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {list(_ARCH_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch_id]}")
+    cfg = mod.reduced_config() if reduced else mod.config()
+    cfg.validate()
+    return cfg

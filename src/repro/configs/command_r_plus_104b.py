@@ -1,0 +1,24 @@
+"""command-r-plus-104b [dense] — 64L d12288 96H (GQA kv=8) ff=33792
+vocab=256000.  GQA, no-bias, tied embeddings.
+[hf:CohereForAI/c4ai-command-r-v01; unverified]"""
+from .base import ArchConfig, BlockSpec
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="command-r-plus-104b", family="dense",
+        n_layers=64, d_model=12288, n_heads=96, n_kv_heads=8,
+        d_ff=33792, vocab=256000,
+        pattern=(BlockSpec("attn", "dense"),),
+        act="silu", tie_embeddings=True,
+    )
+
+
+def reduced_config() -> ArchConfig:
+    return ArchConfig(
+        name="command-r-plus-104b-reduced", family="dense",
+        n_layers=2, d_model=96, n_heads=6, n_kv_heads=2,
+        d_ff=256, vocab=512,
+        pattern=(BlockSpec("attn", "dense"),),
+        act="silu", tie_embeddings=True, remat="none",
+    )

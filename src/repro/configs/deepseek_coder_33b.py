@@ -1,0 +1,23 @@
+"""deepseek-coder-33b [dense] — 62L d7168 56H (GQA kv=8) ff=19200
+vocab=32256.  llama-arch (SwiGLU).  [arXiv:2401.14196; hf]"""
+from .base import ArchConfig, BlockSpec
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="deepseek-coder-33b", family="dense",
+        n_layers=62, d_model=7168, n_heads=56, n_kv_heads=8,
+        d_ff=19200, vocab=32256,
+        pattern=(BlockSpec("attn", "dense"),),
+        act="silu", rope_theta=100000.0,
+    )
+
+
+def reduced_config() -> ArchConfig:
+    return ArchConfig(
+        name="deepseek-coder-33b-reduced", family="dense",
+        n_layers=2, d_model=64, n_heads=8, n_kv_heads=2,
+        d_ff=192, vocab=512,
+        pattern=(BlockSpec("attn", "dense"),),
+        act="silu", remat="none",
+    )

@@ -1,0 +1,37 @@
+"""deepseek-v2-236b [moe] — 60L d5120 128H ff_expert=1536 vocab=102400.
+MLA (kv_lora=512, q_lora=1536, rope head 64), MoE 2 shared + 160 routed
+top-6.  All layers MoE (the real model's single dense first layer is folded
+into the repeating pattern; noted in DESIGN.md).  [arXiv:2405.04434; hf]"""
+from .base import ArchConfig, BlockSpec, MoeConfig, MlaConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="deepseek-v2-236b", family="moe",
+        n_layers=60, d_model=5120, n_heads=128, n_kv_heads=128,
+        d_ff=1536, vocab=102400,
+        pattern=(BlockSpec("mla", "moe"),),
+        act="silu",
+        moe=MoeConfig(n_experts=160, top_k=6, d_ff_expert=1536,
+                      n_shared_experts=2),
+        mla=MlaConfig(kv_lora_rank=512, q_lora_rank=1536,
+                      qk_nope_head_dim=128, qk_rope_head_dim=64,
+                      v_head_dim=128),
+    )
+
+
+def reduced_config() -> ArchConfig:
+    return ArchConfig(
+        name="deepseek-v2-236b-reduced", family="moe",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=96, vocab=512,
+        pattern=(BlockSpec("mla", "moe"),),
+        act="silu",
+        moe=MoeConfig(n_experts=8, top_k=2, d_ff_expert=96,
+                      n_shared_experts=2, group_size=64,
+                      capacity_factor=4.0),
+        mla=MlaConfig(kv_lora_rank=32, q_lora_rank=48,
+                      qk_nope_head_dim=16, qk_rope_head_dim=8,
+                      v_head_dim=16),
+        remat="none",
+    )

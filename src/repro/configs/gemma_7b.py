@@ -1,0 +1,23 @@
+"""gemma-7b [dense] — 28L d3072 16H (GQA kv=16) ff=24576 vocab=256000.
+GeGLU, head_dim=256, tied embeddings.  [arXiv:2403.08295; hf]"""
+from .base import ArchConfig, BlockSpec
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="gemma-7b", family="dense",
+        n_layers=28, d_model=3072, n_heads=16, n_kv_heads=16,
+        d_ff=24576, vocab=256000, head_dim=256,
+        pattern=(BlockSpec("attn", "dense"),),
+        act="gelu", tie_embeddings=True,
+    )
+
+
+def reduced_config() -> ArchConfig:
+    return ArchConfig(
+        name="gemma-7b-reduced", family="dense",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=256, vocab=512, head_dim=32,
+        pattern=(BlockSpec("attn", "dense"),),
+        act="gelu", tie_embeddings=True, remat="none",
+    )

@@ -1,0 +1,26 @@
+"""internvl2-2b [vlm] — 24L d2048 16H (GQA kv=8) ff=8192 vocab=92553.
+InternViT frontend is a STUB per assignment: ``input_specs`` provides 256
+precomputed patch embeddings prepended to the text.  [arXiv:2404.16821; hf]"""
+from .base import ArchConfig, BlockSpec
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="internvl2-2b", family="vlm",
+        n_layers=24, d_model=2048, n_heads=16, n_kv_heads=8,
+        d_ff=8192, vocab=92553,
+        pattern=(BlockSpec("attn", "dense"),),
+        act="silu",
+        vision_tokens=256,
+    )
+
+
+def reduced_config() -> ArchConfig:
+    return ArchConfig(
+        name="internvl2-2b-reduced", family="vlm",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=128, vocab=512,
+        pattern=(BlockSpec("attn", "dense"),),
+        act="silu",
+        vision_tokens=8, remat="none",
+    )

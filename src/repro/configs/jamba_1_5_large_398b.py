@@ -1,0 +1,43 @@
+"""jamba-1.5-large-398b [hybrid] — 72L d8192 64H (GQA kv=8) ff=24576
+vocab=65536, MoE 16e top-2.  Mamba:attention 7:1 interleave (attention at
+position 4 of each 8-layer group), MoE every other layer.
+[arXiv:2403.19887; hf]"""
+from .base import ArchConfig, BlockSpec, MoeConfig, SsmConfig
+
+
+def _pattern():
+    blocks = []
+    for i in range(8):
+        mixer = "attn" if i == 4 else "mamba"
+        ffn = "moe" if i % 2 == 1 else "dense"
+        blocks.append(BlockSpec(mixer, ffn))
+    return tuple(blocks)
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="jamba-1.5-large-398b", family="hybrid",
+        n_layers=72, d_model=8192, n_heads=64, n_kv_heads=8,
+        d_ff=24576, vocab=65536,
+        pattern=_pattern(),
+        act="silu",
+        moe=MoeConfig(n_experts=16, top_k=2, d_ff_expert=24576),
+        ssm=SsmConfig(d_state=16, d_conv=4, expand=2),
+        sub_quadratic=True,
+    )
+
+
+def reduced_config() -> ArchConfig:
+    pattern = (BlockSpec("mamba", "dense"), BlockSpec("mamba", "moe"),
+               BlockSpec("attn", "dense"), BlockSpec("mamba", "moe"))
+    return ArchConfig(
+        name="jamba-1.5-large-398b-reduced", family="hybrid",
+        n_layers=4, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=128, vocab=512,
+        pattern=pattern,
+        act="silu",
+        moe=MoeConfig(n_experts=4, top_k=2, d_ff_expert=128, group_size=64,
+                      capacity_factor=4.0),
+        ssm=SsmConfig(d_state=8, d_conv=4, expand=2, chunk=16),
+        sub_quadratic=True, remat="none",
+    )

@@ -1,0 +1,30 @@
+"""moonshot-v1-16b-a3b [moe] — 48L d2048 16H (GQA kv=16) expert-ff=1408
+vocab=163840, MoE 64e top-6 (+2 shared experts, kimi/moonlight style).
+[hf:moonshotai/Moonlight-16B-A3B; hf]"""
+from .base import ArchConfig, BlockSpec, MoeConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="moonshot-v1-16b-a3b", family="moe",
+        n_layers=48, d_model=2048, n_heads=16, n_kv_heads=16,
+        d_ff=1408, vocab=163840,
+        pattern=(BlockSpec("attn", "moe"),),
+        act="silu",
+        moe=MoeConfig(n_experts=64, top_k=6, d_ff_expert=1408,
+                      n_shared_experts=2),
+    )
+
+
+def reduced_config() -> ArchConfig:
+    return ArchConfig(
+        name="moonshot-v1-16b-a3b-reduced", family="moe",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=96, vocab=512,
+        pattern=(BlockSpec("attn", "moe"),),
+        act="silu",
+        moe=MoeConfig(n_experts=8, top_k=2, d_ff_expert=96,
+                      n_shared_experts=2, group_size=64,
+                      capacity_factor=4.0),
+        remat="none",
+    )

@@ -1,0 +1,78 @@
+"""The four assigned input-shape sets + per-arch input_specs builders.
+
+`input_specs` returns ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, no device allocation — used by the dry-run
+and by benchmarks.  ``decode_*``/``long_*`` target ``serve_step`` (one new
+token against a seq_len KV cache); ``train_*`` targets ``train_step``;
+``prefill_*`` targets ``prefill_step``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+SHAPE_IDS = tuple(SHAPES)
+
+
+def cell_runnable(cfg: ArchConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """Whether (arch x shape) is a runnable dry-run cell; reason if not."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("pure full-attention arch: a 524288-token decode "
+                       "needs sub-quadratic attention (skip noted in "
+                       "DESIGN.md §Arch-applicability)")
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def frontend_specs(cfg: ArchConfig, batch: int) -> Dict:
+    """Stub modality frontends: precomputed frame/patch embeddings."""
+    out = {}
+    if cfg.encoder_layers:
+        out["frames"] = _sds((batch, cfg.encoder_len, cfg.d_model), "bfloat16")
+    if cfg.vision_tokens:
+        out["patches"] = _sds((batch, cfg.vision_tokens, cfg.d_model), "bfloat16")
+    return out
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict:
+    """Abstract model inputs for one (arch x shape) cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        out = {"tokens": _sds((b, s), "int32"), "labels": _sds((b, s), "int32")}
+        out.update(frontend_specs(cfg, b))
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": _sds((b, s), "int32")}
+        out.update(frontend_specs(cfg, b))
+        return out
+    # decode: one token against a seq_len cache
+    from repro.models.model import decode_cache_specs
+    return {
+        "token": _sds((b, 1), "int32"),
+        "caches": decode_cache_specs(cfg, b, s),
+        "cache_index": _sds((), "int32"),
+    }

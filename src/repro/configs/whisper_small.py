@@ -1,0 +1,27 @@
+"""whisper-small [audio] — 12L d768 12H (MHA) ff=3072 vocab=51865.
+Encoder-decoder; conv frontend is a STUB per assignment (``input_specs``
+supplies precomputed frame embeddings, encoder_len=1500).
+[arXiv:2212.04356; unverified]"""
+from .base import ArchConfig, BlockSpec
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="whisper-small", family="audio",
+        n_layers=12, d_model=768, n_heads=12, n_kv_heads=12,
+        d_ff=3072, vocab=51865,
+        pattern=(BlockSpec("attn", "dense"),),
+        act="gelu",
+        encoder_layers=12, encoder_len=1500,
+    )
+
+
+def reduced_config() -> ArchConfig:
+    return ArchConfig(
+        name="whisper-small-reduced", family="audio",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab=512,
+        pattern=(BlockSpec("attn", "dense"),),
+        act="gelu",
+        encoder_layers=2, encoder_len=32, remat="none",
+    )

@@ -1,0 +1,30 @@
+"""xlstm-1.3b [ssm] — 48L d2048 4H ff=0 vocab=50304.
+sLSTM + mLSTM blocks, xLSTM[7:1] interleave (7 mLSTM : 1 sLSTM per group);
+no separate FFN (projection factors inside the blocks).
+[arXiv:2405.04517; unverified]"""
+from .base import ArchConfig, BlockSpec, XlstmConfig
+
+
+def config() -> ArchConfig:
+    pattern = tuple(BlockSpec("mlstm", "none") for _ in range(7)) \
+        + (BlockSpec("slstm", "none"),)
+    return ArchConfig(
+        name="xlstm-1.3b", family="ssm",
+        n_layers=48, d_model=2048, n_heads=4, n_kv_heads=4,
+        d_ff=0, vocab=50304,
+        pattern=pattern,
+        xlstm=XlstmConfig(),
+        sub_quadratic=True,
+    )
+
+
+def reduced_config() -> ArchConfig:
+    pattern = (BlockSpec("mlstm", "none"), BlockSpec("slstm", "none"))
+    return ArchConfig(
+        name="xlstm-1.3b-reduced", family="ssm",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=0, vocab=512,
+        pattern=pattern,
+        xlstm=XlstmConfig(chunk=16),
+        sub_quadratic=True, remat="none",
+    )

@@ -1,0 +1,19 @@
+"""Core library: the paper's contribution as composable JAX modules.
+
+* ``precision`` — bf16 multi-word splits (TPU analogue of fp16+Delta).
+* ``policy``    — TCEC policy objects (pass count / backend / fragment gen).
+* ``tcec``      — error-corrected matmul emulation (custom_vjp).
+* ``fragment``  — foreach_ij / map: structured operand generation in registers.
+* ``roofline``  — paper §3 roofline algebra + cluster three-term roofline.
+"""
+from .policy import (
+    TcecPolicy, get_policy, PRESETS,
+    BF16X1, BF16X3, BF16X6, BF16X9, FP32_VPU, BF16X3_STAGED, BF16X6_STAGED,
+)
+from .precision import split2, split3, reconstruct, SPLIT2_REL_ERR, SPLIT3_REL_ERR
+from .tcec import tc_matmul, tc_dot_general, split_words
+from .fragment import (
+    foreach_ij, map_set, map_get,
+    triangular_ones, identity, householder, givens, banded,
+)
+from . import roofline

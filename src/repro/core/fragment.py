@@ -1,0 +1,110 @@
+"""Fragment generation from structural rules — the ``foreach_ij``/``map`` analogue.
+
+WMMAe's ``foreach_ij`` hands a lambda the (i, j) matrix position plus the
+register indices that own it, so a structured matrix (triangular, Householder,
+Givens, ...) can be built directly in registers with zero shared-memory
+traffic.  On TPU the register layout is owned by Mosaic, so the honest
+translation keeps the API contract — *rule(i, j) -> element, evaluated in
+vector registers, no staging buffer* — and lets the compiler own placement:
+
+    frag = foreach_ij(lambda i, j: jnp.where(i <= j, 1.0, 0.0), 16, 16)
+
+``foreach_ij`` works identically in three contexts:
+  * plain jnp (traced under jit: the rule fuses into consumers),
+  * inside a Pallas kernel body (VREG generation — the true analogue),
+  * inside scan/vmap.
+
+It is implemented with 2-D ``broadcasted_iota`` so no host loop or gather is
+ever emitted.  ``map_set``/``map_get`` mirror WMMAe's ``map`` primitive
+(manipulate one (i, j) element of a matrix held "as a fragment").
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "foreach_ij", "map_set", "map_get",
+    "triangular_ones", "identity", "householder", "givens", "banded",
+]
+
+Rule = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+
+def foreach_ij(rule: Rule, m: int, n: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Build an (m, n) matrix from ``rule(i, j)`` without a staging buffer.
+
+    ``rule`` receives int32 index arrays of shape (m, n) (broadcasted iota)
+    and must return the element values; everything stays in registers.
+    """
+    i = jax.lax.broadcasted_iota(jnp.int32, (m, n), 0)
+    j = jax.lax.broadcasted_iota(jnp.int32, (m, n), 1)
+    return rule(i, j).astype(dtype)
+
+
+def map_set(frag: jnp.ndarray, i, j, value) -> jnp.ndarray:
+    """WMMAe ``map``: set element (i, j) of a matrix held as a fragment."""
+    return frag.at[..., i, j].set(value)
+
+
+def map_get(frag: jnp.ndarray, i, j) -> jnp.ndarray:
+    """WMMAe ``map``: read element (i, j) of a matrix held as a fragment."""
+    return frag[..., i, j]
+
+
+# ---------------------------------------------------------------------------
+# Prebuilt structural rules (the paper's §4 examples).
+# ---------------------------------------------------------------------------
+
+def triangular_ones(n: int, upper: bool = True, strict: bool = False,
+                    dtype=jnp.float32) -> jnp.ndarray:
+    """U with u_ij = 1 iff i<=j (paper Eq. 3) — the scan/cumsum operand."""
+    if upper:
+        rule = (lambda i, j: i < j) if strict else (lambda i, j: i <= j)
+    else:
+        rule = (lambda i, j: i > j) if strict else (lambda i, j: i >= j)
+    return foreach_ij(lambda i, j: rule(i, j).astype(jnp.float32), n, n, dtype)
+
+
+def identity(n: int, dtype=jnp.float32) -> jnp.ndarray:
+    return foreach_ij(lambda i, j: (i == j).astype(jnp.float32), n, n, dtype)
+
+
+def householder(v: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:
+    """H = I - 2 v v^T from vector v, generated element-wise (paper Code 4/5).
+
+    v: (..., m) -> (..., m, m).  The rule is exactly the WMMAe lambda
+    ``elm = -2 v[i] v[j]; if (i==j) elm += 1``; batched inputs reuse one
+    index-mapping evaluation across the batch (the paper's Code-5 lesson:
+    amortize the mapping computation over several fragments).
+    """
+    m = v.shape[-1]
+    if v.ndim == 1:
+        def rule(i, j):
+            return (i == j).astype(jnp.float32) - 2.0 * v[i] * v[j]
+        return foreach_ij(rule, m, m, dtype)
+    # Batched: one iota evaluation shared across the whole batch.
+    eye = foreach_ij(lambda i, j: (i == j).astype(jnp.float32), m, m, jnp.float32)
+    h = eye - 2.0 * v[..., :, None].astype(jnp.float32) * v[..., None, :].astype(jnp.float32)
+    return h.astype(dtype)
+
+
+def givens(n: int, i: int, j: int, theta: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:
+    """Givens rotation G(i, j, theta) (paper §4.3) built via fill + map."""
+    c = jnp.cos(theta).astype(dtype)
+    s = jnp.sin(theta).astype(dtype)
+    g = identity(n, dtype)  # fill_fragment-equivalent base
+    g = map_set(g, i, i, c)
+    g = map_set(g, j, j, c)
+    g = map_set(g, i, j, s)
+    g = map_set(g, j, i, -s)
+    return g
+
+
+def banded(n: int, k_low: int, k_up: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Band matrix of ones: nonzero where -k_low <= j - i <= k_up."""
+    return foreach_ij(
+        lambda i, j: ((j - i <= k_up) & (i - j <= k_low)).astype(jnp.float32),
+        n, n, dtype)

@@ -1,0 +1,85 @@
+"""Policy-based design for TCEC matmuls — mirrors WMMAe-TCEC's policy template.
+
+The paper's WMMAe-TCEC fragment takes an optional *policy* template parameter
+selecting (1) wmma vs mma instruction, (2) error correction on/off, (3) Tensor
+Core vs software systolic backend.  The TPU translation:
+
+  * ``backend``      — "mxu" (matrix unit, bf16 passes) vs "vpu"
+                       (plain FP32 vector-unit dot; the FP32-SIMT analogue).
+  * ``passes``       — error-correction depth: 1 (plain bf16 cast),
+                       3 (2-word split, ~fp24), 6 (3-word split, ~fp32,
+                       the paper-equivalent accuracy point), 9 (all terms).
+  * ``fragment_gen`` — "on_the_fly" (WMMAe: split words generated in
+                       registers/VREGs, no staged split matrices — the
+                       paper's footprint reduction) vs "staged" (WMMA-API
+                       baseline: split words materialized in the staging
+                       memory tier; forced with an optimization barrier so
+                       XLA cannot silently fuse them away).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+Backend = Literal["mxu", "vpu"]
+FragmentGen = Literal["on_the_fly", "staged"]
+
+VALID_PASSES = (1, 3, 6, 9)
+
+
+@dataclasses.dataclass(frozen=True)
+class TcecPolicy:
+    passes: int = 6
+    backend: Backend = "mxu"
+    fragment_gen: FragmentGen = "on_the_fly"
+
+    def __post_init__(self):
+        if self.passes not in VALID_PASSES:
+            raise ValueError(f"passes must be one of {VALID_PASSES}, got {self.passes}")
+        if self.backend not in ("mxu", "vpu"):
+            raise ValueError(f"bad backend {self.backend}")
+        if self.fragment_gen not in ("on_the_fly", "staged"):
+            raise ValueError(f"bad fragment_gen {self.fragment_gen}")
+
+    @property
+    def n_words(self) -> int:
+        """How many bf16 words per input matrix this policy splits into."""
+        return {1: 1, 3: 2, 6: 3, 9: 3}[self.passes]
+
+    @property
+    def error_correction(self) -> bool:
+        return self.passes > 1
+
+    def flops_multiplier(self) -> int:
+        """MXU passes per logical matmul (the paper divides peak by 3 for fp16)."""
+        return self.passes if self.backend == "mxu" else 1
+
+
+# Presets -------------------------------------------------------------------
+BF16X1 = TcecPolicy(passes=1)
+BF16X3 = TcecPolicy(passes=3)
+BF16X6 = TcecPolicy(passes=6)          # paper-equivalent accuracy point
+BF16X9 = TcecPolicy(passes=9)
+FP32_VPU = TcecPolicy(passes=1, backend="vpu")           # "FP32 SIMT" analogue
+# WMMA-API-only baseline: error correction with *staged* split matrices.
+BF16X3_STAGED = TcecPolicy(passes=3, fragment_gen="staged")
+BF16X6_STAGED = TcecPolicy(passes=6, fragment_gen="staged")
+
+PRESETS = {
+    "bf16x1": BF16X1,
+    "bf16x3": BF16X3,
+    "bf16x6": BF16X6,
+    "bf16x9": BF16X9,
+    "fp32_vpu": FP32_VPU,
+    "bf16x3_staged": BF16X3_STAGED,
+    "bf16x6_staged": BF16X6_STAGED,
+}
+
+
+def get_policy(name_or_policy) -> TcecPolicy:
+    if isinstance(name_or_policy, TcecPolicy):
+        return name_or_policy
+    try:
+        return PRESETS[name_or_policy]
+    except KeyError:
+        raise KeyError(f"unknown TCEC policy {name_or_policy!r}; known: {sorted(PRESETS)}")

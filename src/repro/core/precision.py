@@ -1,0 +1,60 @@
+"""bf16 multi-word splitting — the TPU analogue of the paper's FP16+Delta split.
+
+Ootomo & Yokota split an FP32 matrix into ``A_f16 = toFP16(A)`` and a scaled
+residual ``dA = toFP16((A - toFP32(A_f16)) * 2^11)`` so that three Tensor-Core
+passes recover FP32-level accuracy.  FP16 needs the ``2^11`` scale because of
+its 5-bit exponent; bf16 shares FP32's 8-bit exponent, so the residual words
+need no range scaling (scale == 1.0).  What changes on TPU is the mantissa
+budget: bf16 carries 8 significand bits (vs 11 for fp16), so a 2-word split
+captures ~16 bits and a 3-word split captures ~24 bits (full FP32).
+
+All splits are Dekker-exact: ``r = a - f32(bf16(a))`` is exactly representable
+in FP32 under round-to-nearest, so the words satisfy
+``a ≈ hi + mid (+ lo)`` with reconstruction error bounded by the last word's
+truncation (see tests/test_precision_property.py for the Hypothesis bounds).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+# Mantissa bits contributed per bf16 word.
+BF16_MANTISSA_BITS = 8
+# Relative reconstruction error bounds (per element, vs FP32 source).
+SPLIT2_REL_ERR = 2.0 ** (-16)
+SPLIT3_REL_ERR = 2.0 ** (-24)
+
+
+def _to_bf16(x: jnp.ndarray) -> jnp.ndarray:
+    return x.astype(jnp.bfloat16)
+
+
+def _back(x_bf16: jnp.ndarray) -> jnp.ndarray:
+    return x_bf16.astype(jnp.float32)
+
+
+def split2(a: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """FP32 -> (hi, lo) bf16 words; a ~= hi + lo with ~2^-16 rel err."""
+    a = a.astype(jnp.float32)
+    hi = _to_bf16(a)
+    lo = _to_bf16(a - _back(hi))
+    return hi, lo
+
+
+def split3(a: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """FP32 -> (hi, mid, lo) bf16 words; a ~= hi + mid + lo with ~2^-24 rel err."""
+    a = a.astype(jnp.float32)
+    hi = _to_bf16(a)
+    r1 = a - _back(hi)
+    mid = _to_bf16(r1)
+    lo = _to_bf16(r1 - _back(mid))
+    return hi, mid, lo
+
+
+def reconstruct(*words: jnp.ndarray) -> jnp.ndarray:
+    """Sum bf16 words back to FP32 (smallest-first for accuracy)."""
+    acc = jnp.zeros(words[0].shape, jnp.float32)
+    for w in reversed(words):
+        acc = acc + _back(w)
+    return acc

@@ -1,0 +1,153 @@
+"""TCEC — FP32-accurate matmul emulation on the MXU (paper §4.4, TPU-adapted).
+
+``tc_matmul(a, b, policy)`` computes ``a @ b`` in FP32-level accuracy using
+only bf16 MXU passes, following Ootomo & Yokota's error-correction scheme:
+
+    A = A_hi + A_mid (+ A_lo)      (bf16 words, Dekker-exact split)
+    C = sum of cross-term matmuls, accumulated smallest-first in FP32.
+
+Pass schedules (word magnitudes: hi ~ 1, mid ~ 2^-8, lo ~ 2^-16):
+
+    passes=1 : hh                                        (plain bf16)
+    passes=3 : hh + hm + mh                              (~2^-16 rel err)
+    passes=6 : hh + hm + mh + hl + mm + lh               (~2^-24 ≈ FP32)
+    passes=9 : all 3x3 terms                             (>= FP32)
+
+``fragment_gen="staged"`` reproduces the WMMA-API-only data flow from the
+paper's Fig. 6: the split words are materialized as real buffers (an
+``optimization_barrier`` stops XLA from fusing the conversion into the
+matmul), doubling staging-tier traffic.  ``"on_the_fly"`` is the WMMAe data
+flow: splits stay fusible into the matmul operands (and the Pallas kernel in
+``repro.kernels.tcec_matmul`` performs them inside VMEM/VREGs explicitly).
+
+The function is differentiable: a ``custom_vjp`` runs the backward matmuls
+through the same machinery, so a model trained with a TCEC policy uses the
+emulation end-to-end.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .policy import TcecPolicy, get_policy
+from .precision import split2, split3
+
+__all__ = ["tc_matmul", "tc_dot_general", "split_words"]
+
+
+def split_words(a: jnp.ndarray, n_words: int, staged: bool) -> Sequence[jnp.ndarray]:
+    """Split an FP32 array into bf16 words per policy.
+
+    staged=True forces the words to be materialized (WMMA-API baseline data
+    flow); otherwise XLA is free to fuse the conversions (WMMAe data flow).
+    """
+    if n_words == 1:
+        words = (a.astype(jnp.bfloat16),)
+    elif n_words == 2:
+        words = split2(a)
+    elif n_words == 3:
+        words = split3(a)
+    else:
+        raise ValueError(f"n_words must be 1..3, got {n_words}")
+    if staged:
+        words = jax.lax.optimization_barrier(tuple(words))
+    return words
+
+
+# Cross-term schedule per pass count: (a_word_idx, b_word_idx) in
+# smallest-magnitude-first order so FP32 accumulation preserves low bits.
+_SCHEDULES = {
+    1: ((0, 0),),
+    3: ((1, 0), (0, 1), (0, 0)),
+    6: ((2, 0), (1, 1), (0, 2), (1, 0), (0, 1), (0, 0)),
+    9: (
+        (2, 2), (2, 1), (1, 2),
+        (2, 0), (1, 1), (0, 2),
+        (1, 0), (0, 1), (0, 0),
+    ),
+}
+
+
+def _dot(a, b, dimension_numbers, preferred):
+    return jax.lax.dot_general(
+        a, b, dimension_numbers=dimension_numbers,
+        preferred_element_type=preferred,
+    )
+
+
+def tc_dot_general(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    dimension_numbers,
+    policy: TcecPolicy | str = "bf16x6",
+) -> jnp.ndarray:
+    """Policy-dispatched dot_general (no custom_vjp — used as the primitive)."""
+    policy = get_policy(policy)
+    if policy.backend == "vpu":
+        # "FP32 SIMT" analogue: plain FP32 dot on the vector unit.
+        return _dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                    dimension_numbers, jnp.float32)
+    if policy.passes == 1 and a.dtype == jnp.bfloat16 and b.dtype == jnp.bfloat16:
+        return _dot(a, b, dimension_numbers, jnp.float32)
+
+    staged = policy.fragment_gen == "staged"
+    aw = split_words(a, policy.n_words, staged)
+    bw = split_words(b, policy.n_words, staged)
+    acc = None
+    for (i, j) in _SCHEDULES[policy.passes]:
+        term = _dot(aw[i], bw[j], dimension_numbers, jnp.float32)
+        acc = term if acc is None else acc + term
+    return acc
+
+
+def _matmul_dims(a_ndim: int, b_ndim: int):
+    """dimension_numbers for (..., m, k) @ (k, n) | (..., k, n) with batching."""
+    if b_ndim == 2:
+        return (((a_ndim - 1,), (0,)), ((), ()))
+    # batched: leading dims of a and b are batch dims (must match count)
+    nbatch = min(a_ndim, b_ndim) - 2
+    return (
+        ((a_ndim - 1,), (nbatch,)),
+        (tuple(range(nbatch)), tuple(range(nbatch))),
+    )
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def tc_matmul(a: jnp.ndarray, b: jnp.ndarray, policy: str = "bf16x6") -> jnp.ndarray:
+    """Emulated FP32 matmul ``a @ b`` on the MXU.
+
+    a: (..., m, k)  b: (k, n) or (..., k, n)  ->  (..., m, n) float32.
+    ``policy`` is a preset name (hashable — required for custom_vjp static arg).
+    """
+    dn = _matmul_dims(a.ndim, b.ndim)
+    return tc_dot_general(a, b, dn, policy)
+
+
+def _tc_matmul_fwd(a, b, policy):
+    return tc_matmul(a, b, policy), (a, b)
+
+
+def _tc_matmul_bwd(policy, res, g):
+    a, b = res
+    # dA = g @ B^T ; dB = A^T @ g — both through TCEC with the same policy.
+    if b.ndim == 2:
+        dn_a = (((a.ndim - 1,), (1,)), ((), ()))       # g (...,m,n) x b (k,n) -> contract n
+        da = tc_dot_general(g, b, dn_a, policy)
+        # dB = sum over batch+m: a (...,m,k), g (...,m,n) -> (k, n)
+        lead = tuple(range(a.ndim - 1))
+        dn_b = ((lead, lead), ((), ()))
+        db = tc_dot_general(a, g, dn_b, policy)
+    else:
+        nbatch = min(a.ndim, b.ndim) - 2
+        batch = tuple(range(nbatch))
+        dn_a = (((a.ndim - 1,), (b.ndim - 1,)), (batch, batch))  # contract n
+        da = tc_dot_general(g, b, dn_a, policy)
+        dn_b = (((nbatch,), (nbatch,)), (batch, batch))          # contract m
+        db = tc_dot_general(a, g, dn_b, policy)
+    return da.astype(a.dtype), db.astype(b.dtype)
+
+
+tc_matmul.defvjp(_tc_matmul_fwd, _tc_matmul_bwd)

@@ -1,0 +1,2 @@
+"""Data pipeline: deterministic, resumable, shardable synthetic token source."""
+from .pipeline import TokenSource, DataIterator, DataConfig, make_frontend_inputs

@@ -1,0 +1,62 @@
+"""jit'd public wrappers for the Pallas kernels with backend dispatch.
+
+On TPU the Pallas (Mosaic) kernels run natively; everywhere else callers get
+either interpret-mode execution (bit-faithful kernel-body semantics, slow —
+tests use this) or the pure-JAX oracle path (fast, XLA-compiled — the
+distributed models use this so every mesh/backend can compile them).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tcec import tc_matmul
+from . import ref as _ref
+from .tcec_matmul import tcec_matmul_pallas, tcec_matmul_staged
+from .structured import householder_apply, givens_apply, scan_cumsum
+from .flash_attention import flash_attention
+
+__all__ = [
+    "on_tpu", "tcec_matmul", "householder", "givens", "cumsum", "attention",
+    "tcec_matmul_pallas", "tcec_matmul_staged",
+]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def tcec_matmul(a, b, policy: str = "bf16x6", *, force_pallas: bool = False,
+                interpret: bool = False):
+    """Error-corrected emulated-FP32 matmul; Pallas on TPU, jnp elsewhere."""
+    if on_tpu() or force_pallas or interpret:
+        return tcec_matmul_pallas(a, b, policy, interpret=interpret or not on_tpu())
+    return tc_matmul(a, b, policy)
+
+
+def householder(v, a, *, force_pallas: bool = False, interpret: bool = False):
+    if on_tpu() or force_pallas or interpret:
+        return householder_apply(v, a, interpret=interpret or not on_tpu())
+    return _ref.householder_ref(v, a)
+
+
+def givens(theta, a, gi: int, gj: int, *, force_pallas: bool = False,
+           interpret: bool = False):
+    if on_tpu() or force_pallas or interpret:
+        return givens_apply(theta, a, gi, gj, interpret=interpret or not on_tpu())
+    return _ref.givens_ref(theta, a, gi, gj)
+
+
+def cumsum(x, block_n: int = 256, *, force_pallas: bool = False,
+           interpret: bool = False):
+    if on_tpu() or force_pallas or interpret:
+        return scan_cumsum(x, block_n, interpret=interpret or not on_tpu())
+    return _ref.scan_cumsum_ref(x, block_n)
+
+
+def attention(q, k, v, causal: bool = True, *, force_pallas: bool = False,
+              interpret: bool = False):
+    if on_tpu() or force_pallas or interpret:
+        return flash_attention(q, k, v, causal=causal,
+                               interpret=interpret or not on_tpu())
+    return _ref.attention_ref(q, k, v, causal=causal)

@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tcec import tc_matmul
+
+
+def tcec_matmul_ref(a: jnp.ndarray, b: jnp.ndarray, policy: str = "bf16x6") -> jnp.ndarray:
+    """Oracle for tcec_matmul_pallas: the pure-JAX TCEC path."""
+    return tc_matmul(a.astype(jnp.float32), b.astype(jnp.float32), policy)
+
+
+def matmul_fp64_ref(a, b) -> jnp.ndarray:
+    """High-precision oracle (numpy fp64, outside jit) for accuracy studies."""
+    import numpy as np
+    return jnp.asarray(
+        np.asarray(a, dtype=np.float64) @ np.asarray(b, dtype=np.float64))
+
+
+def _bf16_mma(x, y, dims):
+    return jax.lax.dot_general(
+        x.astype(jnp.bfloat16), y.astype(jnp.bfloat16), dims,
+        preferred_element_type=jnp.float32)
+
+
+def householder_ref(v: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
+    """(b, m), (b, m, k) -> (I - 2 v v^T) A with bf16 MMA semantics."""
+    m = v.shape[-1]
+    eye = jnp.eye(m, dtype=jnp.float32)
+    h = eye - 2.0 * v[..., :, None].astype(jnp.float32) * v[..., None, :].astype(jnp.float32)
+    return _bf16_mma(h, a.astype(jnp.float32),
+                     (((2,), (1,)), ((0,), (0,))))
+
+
+def givens_ref(theta: jnp.ndarray, a: jnp.ndarray, gi: int, gj: int) -> jnp.ndarray:
+    b, m, k = a.shape
+    c, s = jnp.cos(theta.astype(jnp.float32)), jnp.sin(theta.astype(jnp.float32))
+    g = jnp.broadcast_to(jnp.eye(m, dtype=jnp.float32), (b, m, m))
+    g = g.at[:, gi, gi].set(c).at[:, gj, gj].set(c)
+    g = g.at[:, gi, gj].set(s).at[:, gj, gi].set(-s)
+    return _bf16_mma(g, a.astype(jnp.float32), (((2,), (1,)), ((0,), (0,))))
+
+
+def scan_cumsum_ref(x: jnp.ndarray, block_n: int = 256) -> jnp.ndarray:
+    """Blockwise bf16-MMA cumsum oracle matching the kernel's arithmetic."""
+    rows, n = x.shape
+    block_n = min(block_n, n)
+    x = x.astype(jnp.float32)
+    outs = []
+    carry = jnp.zeros((rows, 1), jnp.float32)
+    i = jnp.arange(block_n)
+    u = (i[:, None] <= i[None, :]).astype(jnp.float32)
+    for blk in range(n // block_n):
+        xb = x[:, blk * block_n:(blk + 1) * block_n]
+        ob = _bf16_mma(xb, u, (((1,), (0,)), ((), ()))) + carry
+        carry = ob[:, -1:]
+        outs.append(ob)
+    return jnp.concatenate(outs, axis=1)
+
+
+def cumsum_exact_ref(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.cumsum(x.astype(jnp.float32), axis=-1)
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True) -> jnp.ndarray:
+    """Dense softmax attention oracle (bf16 MMA for the two matmuls)."""
+    b, h, sq, d = q.shape
+    skv = k.shape[2]
+    scale = 1.0 / (d ** 0.5)
+    s = _bf16_mma(q, k, (((3,), (3,)), ((0, 1), (0, 1)))) * scale
+    if causal:
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(skv)[None, :]
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = _bf16_mma(p, v, (((3,), (2,)), ((0, 1), (0, 1))))
+    return o.astype(q.dtype)

@@ -1,0 +1,154 @@
+"""Pallas kernels using fragment-from-rule generation (paper §4.1–4.3).
+
+Three kernels, mirroring the paper's evaluation workloads:
+
+* ``householder_apply`` — batched H_b · A_b where H = I - 2 v v^T is
+  generated *inside the kernel* from v (Fig. 4's WMMAe variant).  The
+  baseline variant (H staged through memory) is ``repro.kernels.ops.
+  householder_apply_staged``.
+* ``givens_apply``      — batched G(i, j, θ_b) · A_b with G built by
+  fill + map-style element sets in registers (Fig. 5).
+* ``scan_cumsum``       — cumulative sum via x · U with the triangular-ones
+  U generated from its structural rule (paper Eq. 3 / Dakkak et al.), i.e.
+  a scan executed on the MXU.
+
+All matrices are generated via ``broadcasted_iota`` rules — zero staging
+buffers, the TPU translation of "generate the fragment without storing the
+matrix in shared memory".
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["householder_apply", "givens_apply", "scan_cumsum"]
+
+
+def _iota2(m, n):
+    i = jax.lax.broadcasted_iota(jnp.int32, (m, n), 0)
+    j = jax.lax.broadcasted_iota(jnp.int32, (m, n), 1)
+    return i, j
+
+
+# ---------------------------------------------------------------------------
+# Batched Householder transform (paper §4.2.1).
+# ---------------------------------------------------------------------------
+
+def _householder_kernel(v_ref, a_ref, o_ref):
+    m = v_ref.shape[-1]
+    v = v_ref[0, :].astype(jnp.float32)              # (m,)
+    i, j = _iota2(m, m)
+    # foreach_ij rule: elm = -2 v[i] v[j]; if i==j: elm += 1  (in VREGs)
+    h = (i == j).astype(jnp.float32) - 2.0 * v[:, None] * v[None, :]
+    a = a_ref[0].astype(jnp.float32)                 # (m, k)
+    o_ref[0, ...] = jax.lax.dot_general(
+        h.astype(jnp.bfloat16), a.astype(jnp.bfloat16),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def householder_apply(v: jnp.ndarray, a: jnp.ndarray,
+                      interpret: bool = False) -> jnp.ndarray:
+    """(b, m) vectors + (b, m, k) matrices -> (b, m, k) = (I - 2vv^T) A."""
+    b, m = v.shape
+    _, _, k = a.shape
+    return pl.pallas_call(
+        _householder_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, m), lambda bi: (bi, 0)),
+            pl.BlockSpec((1, m, k), lambda bi: (bi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, m, k), lambda bi: (bi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, m, k), jnp.float32),
+        interpret=interpret,
+    )(v.astype(jnp.float32), a.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Batched Givens rotation (paper §4.3.1).  (i, j) are compile-time-embedded
+# (the paper's fast variant: "Embedded (i,j)"), theta varies per batch.
+# ---------------------------------------------------------------------------
+
+def _givens_kernel(theta_ref, a_ref, o_ref, *, gi, gj):
+    m = a_ref.shape[-2]
+    th = theta_ref[0].astype(jnp.float32)
+    c, s = jnp.cos(th), jnp.sin(th)
+    i, j = _iota2(m, m)
+    # fill_fragment(identity) then map-set the four rotation entries — the
+    # whole G stays in VREGs; compile-time (gi, gj) lets the compiler fold
+    # the masks (the paper's "Embedded (i,j)" speedup).
+    g = (i == j).astype(jnp.float32)
+    g = jnp.where((i == gi) & (j == gi), c, g)
+    g = jnp.where((i == gj) & (j == gj), c, g)
+    g = jnp.where((i == gi) & (j == gj), s, g)
+    g = jnp.where((i == gj) & (j == gi), -s, g)
+    a = a_ref[0].astype(jnp.float32)
+    o_ref[0, ...] = jax.lax.dot_general(
+        g.astype(jnp.bfloat16), a.astype(jnp.bfloat16),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("gi", "gj", "interpret"))
+def givens_apply(theta: jnp.ndarray, a: jnp.ndarray, gi: int, gj: int,
+                 interpret: bool = False) -> jnp.ndarray:
+    """(b,) angles + (b, m, k) matrices -> G(gi, gj, θ_b) · A_b."""
+    b, m, k = a.shape
+    return pl.pallas_call(
+        functools.partial(_givens_kernel, gi=gi, gj=gj),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi: (bi,)),
+            pl.BlockSpec((1, m, k), lambda bi: (bi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, m, k), lambda bi: (bi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, m, k), jnp.float32),
+        interpret=interpret,
+    )(theta.astype(jnp.float32), a.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Scan (cumulative sum) on the MXU via triangular-ones fragment (paper Eq. 3).
+# ---------------------------------------------------------------------------
+
+def _scan_kernel(x_ref, o_ref, carry_ref, *, nblk):
+    blk = pl.program_id(1)
+
+    @pl.when(blk == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    n = x_ref.shape[-1]
+    i, j = _iota2(n, n)
+    u = (i <= j).astype(jnp.float32)                  # foreach_ij rule, Eq. (3)
+    x = x_ref[...].astype(jnp.float32)                # (rows, n)
+    partial = jax.lax.dot_general(
+        x.astype(jnp.bfloat16), u.astype(jnp.bfloat16),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    o_ref[...] = partial + carry_ref[...]
+    carry_ref[...] = o_ref[..., -1:]                  # block offset for next
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def scan_cumsum(x: jnp.ndarray, block_n: int = 256,
+                interpret: bool = False) -> jnp.ndarray:
+    """Row-wise cumulative sum of (rows, n) computed as blockwise x·U on the
+    MXU with a carried block offset (two-level scan)."""
+    rows, n = x.shape
+    block_n = min(block_n, n)
+    assert n % block_n == 0, (n, block_n)
+    nblk = n // block_n
+    return pl.pallas_call(
+        functools.partial(_scan_kernel, nblk=nblk),
+        grid=(1, nblk),   # blocks sequential ('arbitrary') for the carry
+        in_specs=[pl.BlockSpec((rows, block_n), lambda r, bi: (r, bi))],
+        out_specs=pl.BlockSpec((rows, block_n), lambda r, bi: (r, bi)),
+        out_shape=jax.ShapeDtypeStruct((rows, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((rows, 1), jnp.float32)],
+        interpret=interpret,
+    )(x.astype(jnp.float32))

@@ -1,0 +1,189 @@
+"""Pallas TPU kernel: TCEC emulated-FP32 matmul with in-VMEM/VREG splitting.
+
+This is the paper's headline data-flow (Fig. 6, bottom) on the TPU memory
+hierarchy.  The WMMA-API baseline stages the split matrices ``A_16`` and
+``dA_16`` in shared memory; the WMMAe version generates both fragments
+directly from the FP32 source.  Here:
+
+  * HBM -> VMEM moves only the FP32 source blocks of A and B
+    (``BlockSpec``-pipelined, double-buffered by Mosaic);
+  * the bf16 words (hi/mid/lo) are produced *inside the kernel body* — they
+    live in VREGs / kernel-local values, never as separate staged buffers;
+  * 1/3/6/9 MXU passes accumulate into an FP32 VMEM scratch accumulator,
+    smallest-magnitude terms first (the RZ-avoidance ordering).
+
+VMEM working set per grid step (block sizes bm, bn, bk):
+    on_the_fly : 4*(bm*bk + bk*bn) + 4*bm*bn          (fp32 src + fp32 acc)
+    staged     : 2*w*(bm*bk + bk*bn) + 4*bm*bn        (w bf16 word buffers)
+For w=3 the staged footprint of the inputs is 1.5x the on-the-fly one; the
+saved bytes translate directly to a higher staging-roofline exactly as in
+paper §4.4.1 (52.0 -> 104.0 TFlop/s on A100; see benchmarks/ai_curves.py for
+the v5e numbers).
+
+The staged variant is also provided (as ``tcec_matmul_staged``) as the
+faithful WMMA-API-baseline: split words are materialized in HBM by the host
+function and streamed through VMEM as separate inputs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.policy import TcecPolicy, get_policy
+from repro.core.tcec import _SCHEDULES, split_words
+
+__all__ = ["tcec_matmul_pallas", "tcec_matmul_staged", "default_blocks"]
+
+
+def _split_vregs(x, n_words: int):
+    """Split an FP32 block into bf16 words without leaving registers."""
+    words = []
+    rest = x
+    for _ in range(n_words - 1):
+        w = rest.astype(jnp.bfloat16)
+        words.append(w)
+        rest = rest - w.astype(jnp.float32)
+    words.append(rest.astype(jnp.bfloat16))
+    return words
+
+
+def _mma_passes(aw, bw, schedule):
+    """Run the MXU pass schedule; returns the fp32 partial sum."""
+    acc = None
+    for (i, j) in schedule:
+        term = jax.lax.dot_general(
+            aw[i], bw[j], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc = term if acc is None else acc + term
+    return acc
+
+
+def _tcec_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_words, schedule, nk):
+    """Grid: (m/bm, n/bn, k/bk); k innermost ('arbitrary')."""
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # The footprint reduction: split in VREGs, no staged word buffers.
+    aw = _split_vregs(a_ref[...].astype(jnp.float32), n_words)
+    bw = _split_vregs(b_ref[...].astype(jnp.float32), n_words)
+    acc_ref[...] += _mma_passes(aw, bw, schedule)
+
+    @pl.when(k_idx == nk - 1)
+    def _done():
+        o_ref[...] = acc_ref[...]
+
+
+def _staged_kernel(*refs, n_words, schedule, nk):
+    """WMMA-API baseline: split words arrive as separate staged inputs."""
+    a_refs = refs[:n_words]
+    b_refs = refs[n_words:2 * n_words]
+    o_ref, acc_ref = refs[2 * n_words], refs[2 * n_words + 1]
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    aw = [r[...] for r in a_refs]
+    bw = [r[...] for r in b_refs]
+    acc_ref[...] += _mma_passes(aw, bw, schedule)
+
+    @pl.when(k_idx == nk - 1)
+    def _done():
+        o_ref[...] = acc_ref[...]
+
+
+def default_blocks(m: int, n: int, k: int) -> Tuple[int, int, int]:
+    """MXU-aligned (multiple-of-128 where possible) VMEM-fitting blocks."""
+    bm = min(m, 128)
+    bn = min(n, 128)
+    bk = min(k, 512)
+    return bm, bn, bk
+
+
+def _compiler_params():
+    try:
+        return pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+    except (AttributeError, TypeError):  # older naming
+        return pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+
+
+@functools.partial(jax.jit, static_argnames=("policy", "block", "interpret"))
+def tcec_matmul_pallas(a: jnp.ndarray, b: jnp.ndarray,
+                       policy: str = "bf16x6",
+                       block: Tuple[int, int, int] | None = None,
+                       interpret: bool = False) -> jnp.ndarray:
+    """C = A @ B with FP32-level accuracy via in-kernel bf16 splitting.
+
+    a: (m, k) fp32, b: (k, n) fp32 -> (m, n) fp32.
+    """
+    pol = get_policy(policy)
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bn, bk = block or default_blocks(m, n, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, \
+        f"dims {(m, n, k)} must divide blocks {(bm, bn, bk)}"
+    nk = k // bk
+    grid = (m // bm, n // bn, nk)
+    kernel = functools.partial(
+        _tcec_kernel, n_words=pol.n_words,
+        schedule=_SCHEDULES[pol.passes], nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=_compiler_params(),
+        interpret=interpret,
+    )(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("policy", "block", "interpret"))
+def tcec_matmul_staged(a: jnp.ndarray, b: jnp.ndarray,
+                       policy: str = "bf16x6",
+                       block: Tuple[int, int, int] | None = None,
+                       interpret: bool = False) -> jnp.ndarray:
+    """WMMA-API-baseline data flow: split words are materialized in HBM and
+    each streamed through VMEM as its own staged buffer (Fig. 6, top)."""
+    pol = get_policy(policy)
+    m, k = a.shape
+    _, n = b.shape
+    bm, bn, bk = block or default_blocks(m, n, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    nk = k // bk
+    grid = (m // bm, n // bn, nk)
+    aw = split_words(a.astype(jnp.float32), pol.n_words, staged=True)
+    bw = split_words(b.astype(jnp.float32), pol.n_words, staged=True)
+    kernel = functools.partial(
+        _staged_kernel, n_words=pol.n_words,
+        schedule=_SCHEDULES[pol.passes], nk=nk)
+    in_specs = (
+        [pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))] * pol.n_words
+        + [pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))] * pol.n_words
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=_compiler_params(),
+        interpret=interpret,
+    )(*aw, *bw)

@@ -1,0 +1,373 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. assembles the step function (train_step / prefill_step / serve_step)
+     with in/out shardings from the logical-axis rules,
+  3. ``.lower()`` s it on ShapeDtypeStruct stand-ins (zero allocation),
+  4. ``.compile()`` s — success proves the sharding config is coherent,
+  5. records ``memory_analysis()`` (fits-in-HBM proof), ``cost_analysis()``
+     (FLOPs/bytes) and the collective schedule parsed from the post-SPMD HLO
+     into ``artifacts/dryrun/<arch>__<shape>__<mesh>.json``.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma-7b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# Dry-run lowers the TPU-real mixed-precision data flow (bf16 MXU inputs).
+os.environ.setdefault("REPRO_MMA_DTYPE", "bfloat16")
+
+from repro.configs import get_config, ARCH_IDS, SHAPES, input_specs, cell_runnable
+from repro.configs.shapes import ShapeSpec
+from repro.launch.mesh import make_production_mesh
+from repro.launch import steps as steps_mod
+from repro.optim.adamw import AdamWConfig
+from repro.parallel import sharding as shd
+from repro.core.roofline import cluster_roofline, TPU_V5E
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|[a-z0-9]+\[[^\]]*\][^ ]*)\s+([a-z0-9\-]+)")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OPERAND_RE = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str, mesh_axes: dict) -> dict:
+    """Sum operand bytes of every collective op in the post-SPMD HLO.
+
+    Also estimates wire bytes per device per op kind (ring algorithms)."""
+    shapes: dict = {}
+    coll_lines = []
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op = m.groups()
+        shapes[name] = type_str
+        base = op.rstrip("-start").rstrip("-done")
+        for c in COLLECTIVES:
+            if op == c or op.startswith(c):
+                coll_lines.append((name, type_str, c, line))
+                break
+
+    out = {c: {"count": 0, "operand_bytes": 0, "result_bytes": 0,
+               "wire_bytes": 0} for c in COLLECTIVES}
+    n_total = int(np.prod(list(mesh_axes.values()))) or 1
+    for name, type_str, kind, line in coll_lines:
+        result_b = _shape_bytes(type_str)
+        # operand bytes: look up named operands in the args list
+        operand_b = 0
+        mo = _OPERAND_RE.search(line.split(" = ", 1)[1])
+        if mo:
+            for arg in mo.group(1).split(","):
+                arg = arg.strip().lstrip("%")
+                if arg in shapes:
+                    operand_b += _shape_bytes(shapes[arg])
+        if operand_b == 0:
+            # fall back: infer from result by op kind
+            operand_b = result_b
+        # replica group size (how many devices participate)
+        gm = re.search(r"replica_groups=\{\{([0-9,]+)\}", line)
+        gsize = len(gm.group(1).split(",")) if gm else n_total
+        gsize = max(gsize, 1)
+        frac = (gsize - 1) / gsize
+        if kind == "all-gather":
+            wire = result_b * frac
+        elif kind == "reduce-scatter":
+            wire = operand_b * frac
+        elif kind == "all-reduce":
+            wire = 2 * operand_b * frac
+        elif kind == "all-to-all":
+            wire = operand_b * frac
+        else:  # collective-permute
+            wire = operand_b
+        d = out[kind]
+        d["count"] += 1
+        d["operand_bytes"] += int(operand_b)
+        d["result_bytes"] += int(result_b)
+        d["wire_bytes"] += int(wire)
+    out["total_operand_bytes"] = int(sum(
+        v["operand_bytes"] for k, v in out.items() if isinstance(v, dict)))
+    out["total_wire_bytes"] = int(sum(
+        v["wire_bytes"] for k, v in out.items() if isinstance(v, dict)))
+    return out
+
+
+def active_param_count(cfg) -> float:
+    """Active params per token (MoE experts scaled by routed fraction)."""
+    from repro.models import param_specs
+    from repro.models.base import PSpec
+    import numpy as np
+    specs = param_specs(cfg)
+    total = 0.0
+    def walk(node):
+        nonlocal total
+        if isinstance(node, dict):
+            for v in node.values():
+                walk(v)
+            return
+        n = float(np.prod(node.shape))
+        if "experts" in (node.logical_axes or ()):
+            m = cfg.moe
+            n *= m.top_k / m.n_experts
+        total += n
+    walk(specs)
+    return total
+
+
+def total_param_count(cfg) -> float:
+    from repro.models import abstract_params
+    return float(sum(np.prod(l.shape) for l in jax.tree.leaves(abstract_params(cfg))))
+
+
+def _mem_analysis_dict(compiled) -> dict:
+    out = {}
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    if ma is None:
+        return {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if not out:
+        out["repr"] = str(ma)
+    return out
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool):
+    """Returns (fn, args, in_shardings, donate) for one dry-run cell."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    opt_cfg = AdamWConfig()
+
+    specs = input_specs(cfg, shape)
+    if shape.kind == "train":
+        fn = steps_mod.make_train_step(cfg, opt_cfg)
+        state = steps_mod.abstract_train_state(cfg, opt_cfg)
+        state_ps = steps_mod.train_state_pspecs(cfg, opt_cfg, mesh)
+        batch_ps = shd.batch_pspecs(specs, mesh)
+        args = (state, specs)
+        in_shardings = (state_ps, batch_ps)
+        donate = (0,)
+    elif shape.kind == "prefill":
+        fn = steps_mod.make_prefill_step(cfg)
+        params = steps_mod.abstract_params(cfg)
+        params_ps = shd.param_pspecs(cfg, mesh)
+        batch_ps = shd.batch_pspecs(specs, mesh)
+        args = (params, specs)
+        in_shardings = (params_ps, batch_ps)
+        donate = ()
+    else:  # decode
+        fn = steps_mod.make_serve_step(cfg)
+        params = steps_mod.abstract_params(cfg)
+        params_ps = shd.param_pspecs(cfg, mesh)
+        token_ps = shd.batch_pspecs(specs["token"], mesh)
+        cache_ps = shd.tree_pspecs(
+            specs["caches"],
+            __import__("repro.models.model", fromlist=["decode_cache_axes"])
+            .decode_cache_axes(cfg), mesh)
+        args = (params, specs["token"], specs["caches"], specs["cache_index"])
+        in_shardings = (params_ps, token_ps, cache_ps, P())
+        donate = (2,)
+    return cfg, shape, mesh, fn, args, in_shardings, donate
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: Path = ARTIFACTS, verbose: bool = True) -> dict:
+    mesh_name = "multi_pod_2x16x16" if multi_pod else "single_pod_16x16"
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = cell_runnable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "kind": shape.kind}
+    if not ok:
+        rec.update({"status": "skipped", "reason": reason})
+        _write(rec, out_dir)
+        return rec
+
+    t0 = time.time()
+    try:
+        cfg, shape, mesh, fn, args, in_shardings, donate = build_cell(
+            arch, shape_name, multi_pod)
+        n_chips = int(np.prod(list(mesh.shape.values())))
+        in_shardings = jax.tree.map(
+            lambda p: NamedSharding(mesh, p), in_shardings,
+            is_leaf=lambda x: isinstance(x, P))
+        from repro.models.base import activation_sharding
+        with mesh, activation_sharding(mesh):
+            jitted = jax.jit(fn, in_shardings=in_shardings,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            t1 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t1
+
+        cost = dict(compiled.cost_analysis() or {})
+        hlo = compiled.as_text()
+        if os.environ.get("REPRO_DUMP_HLO"):
+            import gzip
+            out_dir.mkdir(parents=True, exist_ok=True)
+            with gzip.open(out_dir / (
+                    f"{arch}__{shape_name}__{mesh_name}.hlo.gz"), "wt") as f:
+                f.write(hlo)
+        # Trip-count-aware analysis (XLA's cost_analysis counts while bodies
+        # once; our models scan over layer groups, so loops must be scaled).
+        from repro.launch import hlo_cost
+        res = hlo_cost.analyze(hlo)
+        coll = {k: {kk: float(vv) for kk, vv in v.items()}
+                for k, v in res.collectives.items()}
+        coll["total_operand_bytes"] = res.total_collective("operand_bytes")
+        coll["total_wire_bytes"] = res.total_collective("wire_bytes")
+        mem = _mem_analysis_dict(compiled)
+
+        flops_dev = float(res.flops)
+        bytes_dev = float(res.hbm_bytes)
+        terms = cluster_roofline(
+            hlo_flops=flops_dev * n_chips,
+            hlo_bytes=bytes_dev * n_chips,
+            collective_bytes=float(coll["total_wire_bytes"]) * n_chips,
+            n_chips=n_chips, chip=TPU_V5E)
+
+        n_tokens = shape.global_batch * (shape.seq_len if shape.kind == "train"
+                                         else 1)
+        n_active = active_param_count(cfg)
+        mf = (6.0 if shape.kind == "train" else 2.0) * n_active * n_tokens
+
+        rec.update({
+            "status": "ok",
+            "n_chips": n_chips,
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "per_device": {"flops": flops_dev, "bytes": bytes_dev},
+            "xla_cost_analysis_raw": {
+                "flops": float(cost.get("flops", 0.0)),
+                "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+                "note": "while bodies counted once by XLA; see per_device "
+                        "for trip-count-scaled values",
+            },
+            "collectives_per_device": coll,
+            "memory_analysis": mem,
+            "roofline": {
+                "compute_s": terms.compute_s,
+                "memory_s": terms.memory_s,
+                "collective_s": terms.collective_s,
+                "dominant": terms.dominant,
+                "roofline_fraction": terms.roofline_fraction,
+            },
+            "model_flops": mf,
+            "hlo_flops_global": flops_dev * n_chips,
+            "useful_flops_ratio": mf / (flops_dev * n_chips)
+            if flops_dev else None,
+            "params_total": total_param_count(cfg),
+            "params_active": n_active,
+        })
+    except Exception as e:
+        rec.update({"status": "error", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-4000:]})
+    _write(rec, out_dir)
+    if verbose:
+        if rec["status"] == "ok":
+            r = rec["roofline"]
+            print(f"[ok] {arch} {shape_name} {mesh_name}: "
+                  f"compile={rec['compile_s']}s dominant={r['dominant']} "
+                  f"frac={r['roofline_fraction']:.3f}", flush=True)
+        else:
+            print(f"[{rec['status']}] {arch} {shape_name} {mesh_name}: "
+                  f"{rec.get('reason') or rec.get('error')}", flush=True)
+    return rec
+
+
+def _write(rec: dict, out_dir: Path):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
+    (out_dir / name).write_text(json.dumps(rec, indent=2, default=float))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS))
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", default=str(ARTIFACTS))
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                for mp in meshes:
+                    cells.append((arch, shape, mp))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        cells = [(args.arch, args.shape, mp) for mp in meshes]
+
+    n_ok = n_err = 0
+    for arch, shape, mp in cells:
+        mesh_name = "multi_pod_2x16x16" if mp else "single_pod_16x16"
+        f = out_dir / f"{arch}__{shape}__{mesh_name}.json"
+        if args.skip_existing and f.exists():
+            prev = json.loads(f.read_text())
+            if prev.get("status") in ("ok", "skipped"):
+                print(f"[cached] {arch} {shape} {mesh_name}", flush=True)
+                continue
+        rec = run_cell(arch, shape, mp, out_dir)
+        if rec["status"] == "error":
+            n_err += 1
+        else:
+            n_ok += 1
+    print(f"dry-run done: {n_ok} ok/skipped, {n_err} errors", flush=True)
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,553 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any
+model folded as ``lax.scan`` over layers (ours — required for tractable
+compiles) under-reports FLOPs/bytes/collectives by the trip count.  This
+module re-derives the three roofline inputs from the post-SPMD HLO text with
+loop scaling:
+
+  * **flops**            — 2 * result_elems * K for every ``dot`` (K parsed
+                           from ``lhs_contracting_dims`` against the operand
+                           shape), x convolution spatial size for ``conv``;
+                           scaled by enclosing while-loop trip counts.
+  * **hbm bytes**        — sum of (operand + result) bytes over
+                           *materializing* top-level ops (post-fusion HLO:
+                           each fusion reads operands from HBM and writes its
+                           result — intermediates stay in registers/VMEM),
+                           x trip counts.
+  * **collective bytes** — per-kind operand/result/wire bytes, x trip counts.
+
+Trip counts come from ``known_trip_count`` backend configs when present,
+falling back to the largest integer constant compared against the loop
+induction variable in the ``condition`` computation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*.*\{\s*$")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_KIND_RE = re.compile(r"\s*([a-z][a-z0-9\-]*)\((.*)$", re.DOTALL)
+
+
+def _parse_op_line(line: str):
+    """Parse '  %name = TYPE kind(args), attrs' (TYPE may be a tuple with
+    nested parens and /*index=N*/ comments)."""
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = line[m.end():]
+    if rest.startswith("("):          # tuple type: balanced-paren scan
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    type_str, rest = rest[:i + 1], rest[i + 1:]
+                    break
+        else:
+            return None
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str, rest = rest[:sp], rest[sp:]
+    km = _KIND_RE.match(rest)
+    if not km:
+        return None
+    return name, type_str, km.group(1), km.group(2)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# Ops that do NOT materialize memory traffic at the top level.
+_NON_MATERIAL = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "partition-id",
+    "replica-id", "custom-call", "domain", "opt-barrier", "optimization-barrier",
+}
+
+
+def _shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d.strip()]))
+    return out
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    total = 0
+    for _, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    kind: str
+    rest: str          # everything after the open paren (args + attrs)
+    is_root: bool = False
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+
+
+def parse_module(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                cur = Computation(m.group(1), [])
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        parsed = _parse_op_line(line)
+        if parsed:
+            name, type_str, kind, rest = parsed
+            cur.ops.append(Op(name, type_str, kind, rest,
+                              is_root=line.lstrip().startswith("ROOT")))
+    return comps
+
+
+def _entry_name(comps: Dict[str, Computation], hlo: str) -> str:
+    m = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo)
+    if m and m.group(1) in comps:
+        return m.group(1)
+    # fallback: computation not referenced by others
+    called = set()
+    for c in comps.values():
+        for op in c.ops:
+            called.update(_CALLS_RE.findall(op.rest))
+    for name in comps:
+        if name not in called:
+            return name
+    return next(iter(comps))
+
+
+def _args_of(op: Op) -> List[str]:
+    """Operand names (up to the first attribute)."""
+    depth = 0
+    end = len(op.rest)
+    for i, ch in enumerate(op.rest):
+        if ch == "(" :
+            depth += 1
+        elif ch == ")":
+            if depth == 0:
+                end = i
+                break
+            depth -= 1
+    args = op.rest[:end]
+    names = []
+    for a in args.split(","):
+        a = a.strip().lstrip("%")
+        # strip inline type prefix: "f32[8,16]{1,0} %name"
+        if " " in a:
+            a = a.split()[-1].lstrip("%")
+        if a:
+            names.append(a)
+    return names
+
+
+def _dot_flops(op: Op, local: Dict[str, str],
+               shapes_global: Dict[str, str]) -> float:
+    result_elems = _shape_elems(op.type_str)
+    args = _args_of(op)
+    k = 1
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+    if m and args:
+        lhs_type = local.get(args[0]) or shapes_global.get(args[0], "")
+        dims = _shape_dims(lhs_type)
+        if dims:
+            lhs_dims = dims[0][1]
+            for idx in m.group(1).split(","):
+                if idx.strip() and int(idx) < len(lhs_dims):
+                    k *= lhs_dims[int(idx)]
+    return 2.0 * result_elems * k
+
+
+def _trip_count(op: Op, comps: Dict[str, Computation]) -> int:
+    m = _TRIP_RE.search(op.rest)
+    if m:
+        return max(int(m.group(1)), 1)
+    mc = re.search(r"condition=%?([\w.\-]+)", op.rest)
+    if mc and mc.group(1) in comps:
+        best = 1
+        for cop in comps[mc.group(1)].ops:
+            if cop.kind == "constant":
+                mnum = re.search(r"constant\((\d+)\)", "constant(" + cop.rest)
+                if mnum:
+                    best = max(best, int(mnum.group(1)))
+        return best
+    return 1
+
+
+@dataclasses.dataclass
+class CostResult:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collectives: Dict[str, Dict[str, float]] = None
+    byte_items: Optional[list] = None   # (comp, kind, name, type, bytes/call)
+    flop_items: Optional[list] = None
+
+    def total_collective(self, key: str = "wire_bytes") -> float:
+        return sum(v[key] for v in self.collectives.values())
+
+    def top_bytes(self, n=20, multipliers=None):
+        """Aggregate per-op byte contributions x reach multipliers."""
+        if not self.byte_items or multipliers is None:
+            return []
+        rows = [(b * multipliers.get(c, 0), b, multipliers.get(c, 0),
+                 c, k, nm, t) for (c, k, nm, t, b) in self.byte_items]
+        rows.sort(reverse=True)
+        return rows[:n]
+
+
+_SLICE_KINDS = ("dynamic-slice", "slice", "gather")
+
+
+def _local_shapes(comp: Computation) -> Dict[str, str]:
+    return {op.name: op.type_str for op in comp.ops}
+
+
+def _param_names_by_index(comp: Computation) -> Dict[int, str]:
+    out = {}
+    for op in comp.ops:
+        if op.kind == "parameter":
+            m = re.match(r"\s*(\d+)", op.rest)
+            if m:
+                out[int(m.group(1))] = op.name
+    return out
+
+
+_WRAPPERS = ("convert", "bitcast", "copy", "reshape", "transpose")
+
+
+def _unwrap(name: str, by_name: Dict[str, "Op"], max_depth: int = 8):
+    """Follow convert/bitcast/copy chains to the producing op."""
+    for _ in range(max_depth):
+        op = by_name.get(name)
+        if op is None or op.kind not in _WRAPPERS:
+            return op
+        args = _args_of(op)
+        if not args:
+            return op
+        name = args[0]
+    return by_name.get(name)
+
+
+def _fusion_io_bytes(comp: Computation, fusion_type: str,
+                     arg_types: list) -> float:
+    """HBM bytes moved by one fusion execution (reads + writes).
+
+    In-place dynamic-update-slice roots (possibly wrapped in converts —
+    XLA's scan-residual-stacking pattern) write only the update slice and
+    alias their destination operand instead of reading it.  Operands that
+    are only *sliced* inside the fusion count at slice size."""
+    local = _local_shapes(comp)
+    params = _param_names_by_index(comp)
+    param_names = set(params.values())
+    by_name = {op.name: op for op in comp.ops}
+    root = next((op for op in comp.ops if op.is_root), None)
+
+    aliased_params: set = set()
+
+    def dus_write(op: Op) -> float:
+        args = _args_of(op)
+        # operand 0 = destination: aliased if it traces to a parameter
+        if args:
+            dest = _unwrap(args[0], by_name)
+            if dest is not None and dest.kind == "parameter":
+                aliased_params.add(dest.name)
+        if len(args) > 1 and args[1] in local:
+            return _shape_bytes(local[args[1]])
+        return _shape_bytes(op.type_str)
+
+    # ---- writes ----
+    write_b = 0.0
+    if root is None:
+        write_b = _shape_bytes(fusion_type)
+    else:
+        def root_write(op: Op) -> float:
+            base = _unwrap(op.name, by_name) or op
+            if base.kind == "dynamic-update-slice":
+                return dus_write(base)
+            return _shape_bytes(op.type_str)
+
+        if root.kind == "tuple":
+            for a in _args_of(root):
+                aop = by_name.get(a)
+                if aop is not None:
+                    write_b += root_write(aop)
+                else:
+                    write_b += _shape_bytes(local.get(a, ""))
+        else:
+            write_b = root_write(root)
+
+    # ---- reads ----
+    sliced_bytes: Dict[str, float] = {}
+    consumed_full: set = set()
+    for op in comp.ops:
+        if op.kind in _WRAPPERS:
+            continue  # wrappers don't consume; their consumers decide
+        args = _args_of(op)
+        for i, a in enumerate(args):
+            src = _unwrap(a, by_name)
+            if src is None or src.kind != "parameter":
+                continue
+            pname = src.name
+            if op.kind in _SLICE_KINDS and i == 0:
+                sliced_bytes[pname] = sliced_bytes.get(pname, 0.0) \
+                    + _shape_bytes(op.type_str)
+            elif op.kind == "dynamic-update-slice" and i == 0:
+                sliced_bytes.setdefault(pname, 0.0)
+            else:
+                consumed_full.add(pname)
+    read_b = 0.0
+    for idx, tstr in enumerate(arg_types):
+        pname = params.get(idx)
+        if pname is None:
+            read_b += _shape_bytes(tstr)
+        elif pname in aliased_params and pname not in consumed_full:
+            pass  # in-place destination: not read
+        elif pname in sliced_bytes and pname not in consumed_full:
+            read_b += sliced_bytes[pname]
+        else:
+            read_b += _shape_bytes(tstr)
+    return read_b + write_b
+
+
+def reach_multipliers(hlo: str) -> Dict[str, float]:
+    """Trip-count multiplier per computation (debug/attribution)."""
+    comps = parse_module(hlo)
+    entry = _entry_name(comps, hlo)
+    mult: Dict[str, float] = {}
+
+    def walk(name, m):
+        mult[name] = mult.get(name, 0) + m
+        comp = comps.get(name)
+        if comp is None:
+            return
+        for op in comp.ops:
+            if op.kind == "while":
+                trips = _trip_count(op, comps)
+                mb = re.search(r"body=%?([\w.\-]+)", op.rest)
+                if mb:
+                    walk(mb.group(1), m * trips)
+            elif op.kind in ("fusion", "call", "conditional"):
+                for callee in _CALLS_RE.findall(op.rest):
+                    walk(callee, m)
+    walk(entry, 1)
+    return mult
+
+
+def top_contributors(hlo: str, metric: str = "flops", n: int = 20):
+    """Largest (flops|bytes) ops with their trip multipliers (debug)."""
+    comps = parse_module(hlo)
+    mult = reach_multipliers(hlo)
+    shapes_global = {}
+    for c in comps.values():
+        for op in c.ops:
+            shapes_global[op.name] = op.type_str
+    rows = []
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0)
+        if not m:
+            continue
+        local = _local_shapes(comp)
+        for op in comp.ops:
+            if metric == "flops":
+                if not op.kind.startswith("dot"):
+                    continue
+                val = _dot_flops(op, local, shapes_global)
+            else:
+                if op.kind in _NON_MATERIAL or op.kind == "parameter":
+                    continue
+                val = _shape_bytes(op.type_str)
+            rows.append((val * m, val, m, cname, op.kind, op.name,
+                         op.type_str[:60]))
+    rows.sort(reverse=True)
+    return rows[:n]
+
+
+def analyze(hlo: str, default_group_size: int = 1) -> CostResult:
+    comps = parse_module(hlo)
+    entry = _entry_name(comps, hlo)
+
+    # global name -> type map (fallback when a name is module-unique)
+    shapes_global: Dict[str, str] = {}
+    for c in comps.values():
+        for op in c.ops:
+            shapes_global[op.name] = op.type_str
+
+    coll = {k: {"count": 0.0, "operand_bytes": 0.0, "result_bytes": 0.0,
+                "wire_bytes": 0.0} for k in COLLECTIVE_KINDS}
+    # memo: computation name -> (flops, bytes, [collective events per call])
+    memo: Dict[str, Tuple[float, float, list]] = {}
+    visiting: set = set()
+
+    def lookup(name: str, local: Dict[str, str]) -> str:
+        return local.get(name) or shapes_global.get(name, "")
+
+    def comp_cost(name: str) -> Tuple[float, float, list]:
+        """(flops, hbm_bytes, collective events) for ONE invocation of the
+        computation; nested while trip counts already folded in."""
+        if name in memo:
+            return memo[name]
+        if name in visiting:
+            return 0.0, 0.0, []
+        comp = comps.get(name)
+        if comp is None:
+            return 0.0, 0.0, []
+        visiting.add(name)
+        local = _local_shapes(comp)
+        flops = 0.0
+        bts = 0.0
+        events: list = []
+        items: list = []
+
+        def rec(op, b):
+            nonlocal bts
+            bts += b
+            items.append((name, op.kind, op.name, op.type_str[:64], b))
+
+        for op in comp.ops:
+            kind = op.kind
+            base = kind
+            for suffix in ("-start", "-done", "-update"):
+                if base.endswith(suffix):
+                    base = base[: -len(suffix)]
+            ckind = next((c for c in COLLECTIVE_KINDS if base == c), None)
+            if ckind and not kind.endswith("-done"):
+                res_b = _shape_bytes(op.type_str)
+                opnd_b = sum(_shape_bytes(lookup(a, local))
+                             for a in _args_of(op)) or res_b
+                gm = re.search(r"replica_groups=\{\{([0-9,]+)\}", op.rest)
+                if gm:
+                    gsize = len(gm.group(1).split(","))
+                else:
+                    gm2 = re.search(r"replica_groups=\[(\d+),(\d+)\]", op.rest)
+                    gsize = int(gm2.group(2)) if gm2 else default_group_size
+                gsize = max(gsize, 1)
+                frac = (gsize - 1) / gsize
+                wire = {"all-gather": res_b * frac,
+                        "reduce-scatter": opnd_b * frac,
+                        "all-reduce": 2 * opnd_b * frac,
+                        "all-to-all": opnd_b * frac,
+                        "collective-permute": opnd_b}[ckind]
+                events.append((ckind, opnd_b, res_b, wire))
+                rec(op, opnd_b + res_b)
+                continue
+
+            if kind == "while":
+                trips = _trip_count(op, comps)
+                mb = re.search(r"body=%?([\w.\-]+)", op.rest)
+                if mb:
+                    f, b, ev = comp_cost(mb.group(1))
+                    flops += f * trips
+                    bts += b * trips
+                    events.extend([(k2, o2 * trips, r2 * trips, w2 * trips)
+                                   for (k2, o2, r2, w2) in ev])
+                continue
+            if kind in ("call", "conditional"):
+                for callee in _CALLS_RE.findall(op.rest):
+                    f, b, ev = comp_cost(callee)
+                    flops += f
+                    bts += b
+                    events.extend(ev)
+                continue
+            if kind == "fusion":
+                m = re.search(r"calls=%?([\w.\-]+)", op.rest)
+                if m:
+                    f, _, ev = comp_cost(m.group(1))
+                    flops += f
+                    events.extend(ev)
+                    callee = comps.get(m.group(1))
+                    arg_types = [lookup(a, local) for a in _args_of(op)]
+                    if callee is not None:
+                        rec(op, _fusion_io_bytes(callee, op.type_str,
+                                                 arg_types))
+                    else:
+                        rec(op, _shape_bytes(op.type_str))
+                continue
+            if kind.startswith("dot"):
+                flops += _dot_flops(op, local, shapes_global)
+                rec(op, _shape_bytes(op.type_str) + sum(
+                    _shape_bytes(lookup(a, local)) for a in _args_of(op)))
+                continue
+            if kind.startswith("convolution"):
+                args = _args_of(op)
+                kern = _shape_elems(lookup(args[1], local)) if len(args) > 1 else 1
+                flops += 2.0 * _shape_elems(op.type_str) * max(kern, 1) ** 0.5
+                rec(op, _shape_bytes(op.type_str))
+                continue
+            if kind in _NON_MATERIAL:
+                continue
+            if kind in _SLICE_KINDS:
+                rec(op, 2.0 * _shape_bytes(op.type_str))
+                continue
+            if kind == "dynamic-update-slice":
+                args = _args_of(op)
+                upd = _shape_bytes(lookup(args[1], local)) if len(args) > 1 \
+                    else _shape_bytes(op.type_str)
+                rec(op, 2.0 * upd)
+                continue
+            if kind in ("broadcast", "iota", "concatenate", "reshape", "copy",
+                        "convert", "transpose"):
+                rec(op, 2.0 * _shape_bytes(op.type_str))
+                continue
+            # other materializing op (reduce, reduce-window, sort, cumsum...)
+            res_b = _shape_bytes(op.type_str)
+            opnd_b = sum(_shape_bytes(lookup(a, local)) for a in _args_of(op))
+            rec(op, res_b + opnd_b)
+        visiting.discard(name)
+        all_items.extend(items)
+        memo[name] = (flops, bts, events)
+        return memo[name]
+
+    all_items: list = []
+    flops, bts, events = comp_cost(entry)
+    for (k, o, r, w) in events:
+        c = coll[k]
+        c["count"] += 1
+        c["operand_bytes"] += o
+        c["result_bytes"] += r
+        c["wire_bytes"] += w
+    return CostResult(flops=flops, hbm_bytes=bts, collectives=coll,
+                      byte_items=all_items)

@@ -1,0 +1,106 @@
+"""Batched serving launcher: prefill + decode loop with KV caches.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
+        --batch 4 --prompt-len 16 --gen 32
+
+Demonstrates the production serving path on any mesh: sharded params,
+prefill emits caches, decode_step consumes/updates them in place
+(donated buffers).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, ARCH_IDS
+from repro.data.pipeline import make_frontend_inputs
+from repro.launch.mesh import make_host_mesh
+from repro.models import init_params, prefill, decode_step, init_decode_caches
+from repro.models.base import activation_sharding
+from repro.parallel import sharding as shd
+
+
+def write_prefill_caches(caches, prefill_caches):
+    """Insert prompt-length prefill caches into max-length decode caches."""
+    def write(dst, src):
+        if (dst.ndim >= 3 and src.shape != dst.shape
+                and src.shape[:2] == dst.shape[:2]
+                and src.shape[2] <= dst.shape[2]):
+            return jax.lax.dynamic_update_slice_in_dim(
+                dst, src.astype(dst.dtype), 0, axis=2)
+        return src.astype(dst.dtype)
+    return jax.tree.map(write, caches, prefill_caches)
+
+
+def generate(cfg, params, tokens, max_len, gen_steps, batch_extras=None,
+             greedy=True, rng=None):
+    """Prefill + decode loop.  Returns (generated tokens, tokens/sec)."""
+    b, prompt_len = tokens.shape
+    batch = {"tokens": tokens}
+    batch.update(batch_extras or {})
+    logits, pf_caches = jax.jit(
+        lambda p, bt: prefill(p, bt, cfg))(params, batch)
+    caches = init_decode_caches(cfg, b, max_len)
+    caches = write_prefill_caches(caches, pf_caches)
+
+    step_fn = jax.jit(
+        lambda p, t, c, i: decode_step(p, t, c, i, cfg),
+        donate_argnums=(2,))
+
+    out = []
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    n_prompt = prompt_len + (cfg.vision_tokens or 0)
+    t0 = time.time()
+    for i in range(gen_steps):
+        out.append(tok)
+        logits, caches = step_fn(params, tok, caches,
+                                 jnp.int32(n_prompt + i))
+        if greedy:
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        else:
+            rng, k = jax.random.split(rng)
+            tok = jax.random.categorical(k, logits)[:, None].astype(jnp.int32)
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    return jnp.concatenate(out, axis=1), b * gen_steps / dt
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS), default="qwen2-0.5b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    mesh = make_host_mesh()
+    rng = jax.random.PRNGKey(args.seed)
+    params = init_params(rng, cfg)
+    pspecs = shd.param_pspecs(cfg, mesh)
+    params = jax.device_put(params, jax.tree.map(
+        lambda p: NamedSharding(mesh, p), pspecs,
+        is_leaf=lambda x: isinstance(x, P)))
+
+    tokens = jax.random.randint(rng, (args.batch, args.prompt_len), 0,
+                                cfg.vocab, dtype=jnp.int32)
+    extras = {k: jnp.asarray(v) for k, v in make_frontend_inputs(
+        cfg, args.batch, 0, args.seed).items()}
+    max_len = args.prompt_len + (cfg.vision_tokens or 0) + args.gen + 1
+    with mesh, activation_sharding(mesh):
+        gen, tps = generate(cfg, params, tokens, max_len, args.gen,
+                            batch_extras=extras, greedy=True)
+    print(f"generated {gen.shape} tokens at {tps:.1f} tok/s")
+    print("sample:", np.asarray(gen[0][:16]))
+    return gen
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,117 @@
+"""Step functions (train / prefill / serve) + their sharding assemblies.
+
+These are the units the dry-run lowers and the real launchers execute.  A
+train state is a plain pytree ``{"params": ..., "opt": ...}`` so checkpointing
+and resharding stay trivial.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import abstract_params, loss_fn, prefill, decode_step
+from repro.optim import adamw as adamw_mod
+from repro.optim.adamw import AdamWConfig
+from repro.parallel import sharding as shd
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig):
+    def train_step(state, batch):
+        def lf(params):
+            return loss_fn(params, batch, cfg)
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(
+            state["params"])
+        new_params, new_opt, stats = adamw_mod.update(
+            grads, state["opt"], state["params"], opt_cfg)
+        return ({"params": new_params, "opt": new_opt},
+                {**metrics, **stats})
+    return train_step
+
+
+def make_grad_accum_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig,
+                               n_micro: int):
+    """Gradient-accumulation train step: scan over microbatches.
+
+    Structured so XLA's latency-hiding scheduler can overlap the
+    reduce-scatter of microbatch i's gradients with microbatch i+1's compute
+    (the batch dim of each microbatch stays sharded on the data axes)."""
+    def train_step(state, batch):
+        def micro(carry, mb):
+            acc = carry
+            def lf(params):
+                return loss_fn(params, mb, cfg)
+            (loss, _), grads = jax.value_and_grad(lf, has_aux=True)(
+                state["params"])
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), acc, grads)
+            return acc, loss
+
+        split = jax.tree.map(
+            lambda x: x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:]),
+            batch)
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), state["params"])
+        gsum, losses = jax.lax.scan(micro, zeros, split)
+        grads = jax.tree.map(lambda g: g / n_micro, gsum)
+        new_params, new_opt, stats = adamw_mod.update(
+            grads, state["opt"], state["params"], opt_cfg)
+        metrics = {"loss": jnp.mean(losses), **stats}
+        return {"params": new_params, "opt": new_opt}, metrics
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        return prefill(params, batch, cfg)
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    def serve_step(params, token, caches, cache_index):
+        return decode_step(params, token, caches, cache_index, cfg)
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Abstract state + shardings
+# ---------------------------------------------------------------------------
+
+def abstract_opt_state(cfg: ArchConfig, opt_cfg: AdamWConfig):
+    params = abstract_params(cfg)
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    st = {
+        "m": jax.tree.map(f32, params),
+        "v": jax.tree.map(f32, params),
+        "count": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    if opt_cfg.use_master:
+        st["master"] = jax.tree.map(f32, params)
+    return st
+
+
+def abstract_train_state(cfg: ArchConfig, opt_cfg: AdamWConfig):
+    return {"params": abstract_params(cfg),
+            "opt": abstract_opt_state(cfg, opt_cfg)}
+
+
+def train_state_pspecs(cfg: ArchConfig, opt_cfg: AdamWConfig, mesh):
+    pp = shd.param_pspecs(cfg, mesh)
+    opt = {"m": pp, "v": pp, "count": P()}
+    if opt_cfg.use_master:
+        opt["master"] = pp
+    return {"params": pp, "opt": opt}
+
+
+def init_train_state(rng, cfg: ArchConfig, opt_cfg: AdamWConfig):
+    from repro.models import init_params
+    params = init_params(rng, cfg)
+    return {"params": params, "opt": adamw_mod.init(params, opt_cfg)}

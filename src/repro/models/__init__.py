@@ -1,0 +1,8 @@
+"""Model zoo: dense GQA / MLA / MoE / Mamba / xLSTM / enc-dec / VLM blocks,
+assembled per-``ArchConfig`` with scanned layer groups and TCEC matmul
+policies throughout."""
+from .model import (
+    param_specs, abstract_params, init_params, logical_axes, param_count,
+    loss_fn, prefill, decode_step, decode_cache_specs, init_decode_caches,
+    backbone,
+)

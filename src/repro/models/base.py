@@ -1,0 +1,287 @@
+"""Functional parameter machinery + primitive layers.
+
+Models are pure functions over nested-dict params.  Every parameter is
+declared as a ``PSpec`` carrying (shape, dtype, logical_axes, init); from the
+same declaration we derive:
+  * abstract params (ShapeDtypeStructs) for the dry-run,
+  * PartitionSpecs via the logical-axis rules in ``repro.parallel.sharding``,
+  * concrete initialization for smoke tests / real training.
+
+Dense layers route every matmul through the TCEC policy layer
+(``repro.core.tcec``) — the paper's technique as a first-class framework
+feature: ``policy="bf16x1"`` is standard mixed precision; ``"bf16x3/6"``
+runs FP32-accurate error-corrected emulation with on-the-fly splits (no
+staged fp32->bf16 weight copies).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tcec import tc_dot_general
+from repro.core import fragment
+
+Params = Any  # nested dict of arrays / PSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class PSpec:
+    """Declaration of one parameter tensor."""
+    shape: Tuple[int, ...]
+    logical_axes: Tuple[Optional[str], ...]
+    dtype: str = "bfloat16"
+    init: str = "normal"          # normal | zeros | ones
+    init_scale: float = 1.0       # multiplier on fan-in init
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical_axes), (self.shape, self.logical_axes)
+
+
+def abstract(tree):
+    """PSpec tree -> ShapeDtypeStruct tree (dry-run params)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype)),
+        tree, is_leaf=lambda x: isinstance(x, PSpec))
+
+
+def initialize(rng: jax.Array, tree):
+    """PSpec tree -> concrete params (smoke tests / examples)."""
+    leaves, treedef = jax.tree.flatten(
+        tree, is_leaf=lambda x: isinstance(x, PSpec))
+    keys = jax.random.split(rng, len(leaves))
+    out = []
+    for key, spec in zip(keys, leaves):
+        dt = jnp.dtype(spec.dtype)
+        if spec.init == "zeros":
+            arr = jnp.zeros(spec.shape, dt)
+        elif spec.init == "ones":
+            arr = jnp.ones(spec.shape, dt)
+        else:
+            fan_in = spec.shape[0] if len(spec.shape) > 1 else max(spec.shape[-1], 1)
+            std = spec.init_scale / (fan_in ** 0.5)
+            arr = (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dt)
+        out.append(arr)
+    return jax.tree.unflatten(treedef, out)
+
+
+def logical_axes_tree(tree):
+    """PSpec tree -> logical-axes tree (for sharding rules)."""
+    return jax.tree.map(lambda s: s.logical_axes, tree,
+                        is_leaf=lambda x: isinstance(x, PSpec))
+
+
+# ---------------------------------------------------------------------------
+# Primitive layers (functional)
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def _mm_bf16(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """bf16 matmul with a bandwidth-disciplined backward (§Perf H5).
+
+    Forward accumulates fp32 on the MXU; the backward dx dot emits bf16
+    directly, so the tensor-parallel partial-sum all-reduce of dx runs at
+    bf16 wire width (autodiff would reduce the fp32 dot output and convert
+    after — 2x the dominant cross-model-axis collective).  dw keeps fp32
+    accumulation (it contracts the long token dimension)."""
+    dn = (((x.ndim - 1,), (0,)), ((), ()))
+    return jax.lax.dot_general(
+        x, w, dn, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def _mm_bf16_fwd(x, w):
+    return _mm_bf16(x, w), (x, w)
+
+
+def _mm_bf16_bwd(res, g):
+    x, w = res
+    g = g.astype(x.dtype)
+    # dx = g @ w^T, emitted in bf16 (collective-width discipline)
+    dn_x = (((g.ndim - 1,), (1,)), ((), ()))
+    dx = jax.lax.dot_general(g, w, dn_x, preferred_element_type=x.dtype)
+    # dw = x^T @ g over all leading dims, fp32 accumulation
+    lead = tuple(range(x.ndim - 1))
+    dn_w = ((lead, lead), ((), ()))
+    dw = jax.lax.dot_general(x, g, dn_w,
+                             preferred_element_type=jnp.float32)
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+_mm_bf16.defvjp(_mm_bf16_fwd, _mm_bf16_bwd)
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray, policy: str = "bf16x1",
+          bias: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """x (..., d) @ w (d, f) through the TCEC policy layer.
+
+    bf16x1 + bf16 operands -> single MXU pass (standard mixed precision,
+    bf16 backward collectives).  bf16x3/6/9 -> error-corrected emulation,
+    splits fused (never staged).  Output dtype follows x for bf16x1, fp32
+    for corrected policies.
+    """
+    dn = (((x.ndim - 1,), (0,)), ((), ()))
+    if policy == "bf16x1":
+        if w.dtype == jnp.bfloat16:
+            y = _mm_bf16(x.astype(w.dtype), w).astype(x.dtype)
+        else:
+            y = jax.lax.dot_general(
+                x, w, dn, preferred_element_type=jnp.float32).astype(x.dtype)
+    else:
+        y = tc_dot_general(x.astype(jnp.float32), w.astype(jnp.float32), dn, policy)
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    return y
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """RMSNorm with a memory-disciplined backward (§Perf H4).
+
+    Statistics are fp32; the saved residuals are (x bf16, rstd (b,s,1) f32)
+    and the hand-written VJP emits bf16 dx directly — the autodiff backward
+    would save/flow fp32 (b, s, d) tensors through the whole residual stack."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def _rms_norm_fwd(x, scale, eps):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    rstd = jax.lax.rsqrt(var + eps)
+    y = (x32 * rstd * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+    return y, (x, rstd, scale)
+
+
+def _rms_norm_bwd(eps, res, g):
+    x, rstd, scale = res
+    d = x.shape[-1]
+    rstd_c = rstd.astype(x.dtype)
+    xn = x * rstd_c                                    # normalized, bf16
+    g32 = g.astype(jnp.float32)
+    dscale = jnp.sum(g32 * xn.astype(jnp.float32),
+                     axis=tuple(range(x.ndim - 1)))
+    dxn = g * (1.0 + scale).astype(g.dtype)
+    # dx = rstd * (dxn - xn * mean(dxn . xn)); inner product in fp32
+    inner = jnp.mean(dxn.astype(jnp.float32) * xn.astype(jnp.float32),
+                     axis=-1, keepdims=True)
+    dx = rstd_c * (dxn - xn * inner.astype(x.dtype))
+    return dx.astype(x.dtype), dscale.astype(scale.dtype)
+
+
+rms_norm.defvjp(_rms_norm_fwd, _rms_norm_bwd)
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               eps: float = 1e-6) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding hints (logical axis names -> mesh axes).
+#
+# Model code is mesh-agnostic: it annotates activations with *logical* names
+# ("batch", "heads", "mlp", ...).  The launcher/dry-run installs a rules
+# context; without one (CPU unit tests) hints are identity.  This is what
+# keeps GSPMD from replicating attention/MoE compute across the model axis
+# (scan-carried values otherwise default to replicated).
+# ---------------------------------------------------------------------------
+import contextlib
+import contextvars
+
+_SHARD_CTX: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_shard_ctx", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, rules=None):
+    """Install logical-axis sharding rules for model activations."""
+    from repro.parallel import sharding as shd
+    token = _SHARD_CTX.set((mesh, rules or shd.default_rules(mesh)))
+    try:
+        yield
+    finally:
+        _SHARD_CTX.reset(token)
+
+
+def shard_hint(x: jnp.ndarray, *logical) -> jnp.ndarray:
+    """Constrain an activation's sharding by logical axis names (no-op
+    without an activation_sharding context)."""
+    ctx = _SHARD_CTX.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    from jax.sharding import NamedSharding
+    from repro.parallel.sharding import spec_for
+    spec = spec_for(x.shape, logical, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def mma_dtype() -> jnp.dtype:
+    """Input dtype for matrix-unit einsums.
+
+    bf16 on TPU (MXU) and during dry-run lowering (REPRO_MMA_DTYPE=bfloat16,
+    so compiled byte counts reflect the real mixed-precision data flow);
+    fp32 on the CPU test backend, whose dot thunks lack batched bf16 support.
+    """
+    import os
+    env = os.environ.get("REPRO_MMA_DTYPE")
+    if env:
+        return jnp.dtype(env)
+    return jnp.dtype(jnp.bfloat16) if jax.default_backend() == "tpu" \
+        else jnp.dtype(jnp.float32)
+
+
+def mma_einsum(eq: str, *ops: jnp.ndarray) -> jnp.ndarray:
+    """einsum on the matrix unit: operands in mma_dtype, fp32 accumulate."""
+    dt = mma_dtype()
+    return jnp.einsum(eq, *[o.astype(dt) for o in ops],
+                      preferred_element_type=jnp.float32)
+
+
+def largest_divisor_leq(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (chunk-size selection)."""
+    target = min(n, target)
+    for c in range(target, 0, -1):
+        if n % c == 0:
+            return c
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings — generated from their structural rule on the fly
+# (a ``foreach_ij`` fragment: no precomputed cos/sin tables in HBM).
+# ---------------------------------------------------------------------------
+
+def rope_cos_sin(positions: jnp.ndarray, head_dim: int, theta: float):
+    """positions (b, s) -> cos/sin (b, s, head_dim/2), rule-generated."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq  # (b, s, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x (b, s, h, d) with cos/sin (b, s, d/2) — rotate-half convention.
+
+    The rotation runs in the compute dtype (angles were computed fp32):
+    fp32 rotation would flow fp32 (b,s,h,d) cotangents through attention
+    backward (§Perf H4)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[:, :, None, :].astype(x.dtype)
+    s = sin[:, :, None, :].astype(x.dtype)
+    return jnp.concatenate(
+        [x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)

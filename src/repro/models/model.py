@@ -1,0 +1,298 @@
+"""Model assembly: embeddings -> scanned block groups -> norm -> LM head.
+
+The layer stack is folded as ``lax.scan`` over *pattern groups* (HLO size is
+O(pattern), compile time independent of depth — required for CPU dry-runs of
+60–72-layer configs).  Three execution modes:
+
+  * ``loss_fn``     — training forward + chunked cross-entropy (the LM-head
+                      matmul runs the TCEC ``logits_policy``, fp32-accurate
+                      without an fp32 weight copy).
+  * ``prefill``     — forward emitting per-block KV/state caches.
+  * ``decode_step`` — one-token step consuming/updating the caches.
+
+Encoder-decoder (whisper) and VLM (internvl2) wrap the same machinery: the
+modality frontends are stubs per the assignment — ``frames``/``patches``
+arrive as precomputed embeddings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, BlockSpec
+from .base import PSpec, abstract, initialize, logical_axes_tree, dense, rms_norm, shard_hint
+from .blocks import block_param_specs, block_apply, block_cache_spec
+
+Params = Any
+LOSS_CHUNK = 512
+
+
+# ---------------------------------------------------------------------------
+# Parameter declaration
+# ---------------------------------------------------------------------------
+
+def _stack_specs(tree, n: int):
+    return jax.tree.map(
+        lambda s: PSpec((n,) + s.shape, (None,) + s.logical_axes, s.dtype,
+                        s.init, s.init_scale),
+        tree, is_leaf=lambda x: isinstance(x, PSpec))
+
+
+def param_specs(cfg: ArchConfig) -> Dict:
+    d, v = cfg.d_model, cfg.vocab
+    dt = cfg.param_dtype
+    is_encdec = cfg.encoder_layers > 0
+    group = {f"pos{i}": block_param_specs(cfg, spec, cross_attn=is_encdec)
+             for i, spec in enumerate(cfg.pattern)}
+    specs: Dict = {
+        "embed": PSpec((v, d), ("vocab", "embed"), dt),
+        "blocks": _stack_specs(group, cfg.n_groups),
+        "final_norm": PSpec((d,), (None,), dt, init="zeros"),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = PSpec((d, v), ("embed", "vocab"), dt)
+    if is_encdec:
+        enc_group = {"pos0": block_param_specs(cfg, BlockSpec("attn", "dense"))}
+        specs["encoder"] = {
+            "blocks": _stack_specs(enc_group, cfg.encoder_layers),
+            "final_norm": PSpec((d,), (None,), dt, init="zeros"),
+        }
+    return specs
+
+
+def abstract_params(cfg: ArchConfig):
+    return abstract(param_specs(cfg))
+
+
+def init_params(rng: jax.Array, cfg: ArchConfig):
+    return initialize(rng, param_specs(cfg))
+
+
+def logical_axes(cfg: ArchConfig):
+    return logical_axes_tree(param_specs(cfg))
+
+
+def param_count(cfg: ArchConfig) -> int:
+    import numpy as np
+    leaves = jax.tree.leaves(abstract_params(cfg))
+    return int(sum(np.prod(l.shape) for l in leaves))
+
+
+# ---------------------------------------------------------------------------
+# Block-stack execution
+# ---------------------------------------------------------------------------
+
+def _remat(fn, cfg: ArchConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def _run_blocks(blocks, x, cfg: ArchConfig, positions, causal=True,
+                enc_out=None, caches=None, cache_index=None,
+                emit_cache=False, use_remat=False):
+    """Scan over pattern groups.  Returns (x, new_caches_or_None)."""
+
+    def group_body(x, gparams, gcaches):
+        new_caches = {}
+        for i, spec in enumerate(cfg.pattern):
+            key = f"pos{i}"
+            cache_i = None if gcaches is None else gcaches.get(key)
+            x, nc = block_apply(gparams[key], x, cfg, spec, positions,
+                                cache=cache_i, cache_index=cache_index,
+                                causal=causal, enc_out=enc_out,
+                                emit_cache=emit_cache)
+            if nc is not None:
+                new_caches[key] = nc
+        return x, new_caches
+
+    if caches is not None:
+        def body(x, xs):
+            gp, gc = xs
+            x, nc = group_body(x, gp, gc)
+            return x, nc
+        if use_remat:
+            body = _remat(body, cfg)
+        x, new_caches = jax.lax.scan(body, x, (blocks, caches))
+        return x, new_caches
+
+    if emit_cache:
+        def body(x, gp):
+            return group_body(x, gp, None)
+        if use_remat:
+            body = _remat(body, cfg)
+        x, new_caches = jax.lax.scan(body, x, blocks)
+        return x, new_caches
+
+    def body(x, gp):
+        y, _ = group_body(x, gp, None)
+        return y, None
+    if use_remat:
+        body = _remat(body, cfg)
+    x, _ = jax.lax.scan(body, x, blocks)
+    return x, None
+
+
+def _embed_tokens(params, tokens: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    e = jnp.take(params["embed"], tokens, axis=0)
+    e = shard_hint(e, "batch", None, None)
+    return (e.astype(jnp.float32) * (cfg.d_model ** 0.5)).astype(e.dtype)
+
+
+def _encode(params, frames: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """Whisper encoder over stubbed frame embeddings (bidirectional)."""
+    b, s, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    enc = params["encoder"]
+    x, _ = _run_blocks(enc["blocks"], frames.astype(jnp.dtype(cfg.param_dtype)),
+                       cfg, positions, causal=False)
+    return rms_norm(x, enc["final_norm"], cfg.norm_eps)
+
+
+def _prepend_vision(params, embeds, batch, cfg: ArchConfig):
+    patches = batch["patches"].astype(embeds.dtype)
+    return jnp.concatenate([patches, embeds], axis=1)
+
+
+def backbone(params, batch: Dict, cfg: ArchConfig, *, emit_cache=False,
+             use_remat=False) -> Tuple[jnp.ndarray, Optional[Any], Optional[jnp.ndarray]]:
+    """Token/frontend embeddings -> final hidden states.
+
+    Returns (hidden (b, s_total, d), caches, enc_out)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = _embed_tokens(params, tokens, cfg)
+    if cfg.vision_tokens:
+        x = _prepend_vision(params, x, batch, cfg)
+    s_total = x.shape[1]
+    positions = jnp.broadcast_to(
+        jnp.arange(s_total, dtype=jnp.int32)[None], (b, s_total))
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out = _encode(params, batch["frames"], cfg)
+    x, caches = _run_blocks(params["blocks"], x, cfg, positions, causal=True,
+                            enc_out=enc_out, emit_cache=emit_cache,
+                            use_remat=use_remat)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, caches, enc_out
+
+
+def _logits(params, h: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        w = params["embed"]          # (v, d)
+        dn = (((h.ndim - 1,), (1,)), ((), ()))
+        if cfg.logits_policy == "bf16x1":
+            out = jax.lax.dot_general(h, w, dn, preferred_element_type=jnp.float32)
+        else:
+            from repro.core.tcec import tc_dot_general
+            out = tc_dot_general(h.astype(jnp.float32), w.astype(jnp.float32),
+                                 dn, cfg.logits_policy)
+        return out
+    return dense(h, params["lm_head"], cfg.logits_policy).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Training loss (chunked cross-entropy)
+# ---------------------------------------------------------------------------
+
+def loss_fn(params, batch: Dict, cfg: ArchConfig,
+            use_remat: bool = True) -> Tuple[jnp.ndarray, Dict]:
+    """Next-token cross-entropy.  labels < 0 are masked out."""
+    h, _, _ = backbone(params, batch, cfg, use_remat=use_remat)
+    labels = batch["labels"]
+    if cfg.vision_tokens:                      # loss only on text positions
+        h = h[:, cfg.vision_tokens:]
+    b, s, d = h.shape
+    chunk = min(LOSS_CHUNK, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    hc = h.reshape(b, nc, chunk, d).swapaxes(0, 1)
+    lc = labels.reshape(b, nc, chunk).swapaxes(0, 1)
+
+    def chunk_loss(carry, xs):
+        hcj, lcj = xs
+        logits = shard_hint(_logits(params, hcj, cfg),
+                            "batch", None, "vocab")      # (b, c, v) fp32
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        lab = jnp.clip(lcj, 0, cfg.vocab - 1)
+        gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        mask = (lcj >= 0).astype(jnp.float32)
+        tot, cnt = carry
+        return (tot + jnp.sum((lse - gold) * mask), cnt + jnp.sum(mask)), None
+
+    # Rematerialize per-chunk: (b, chunk, vocab) logits are recomputed in the
+    # backward pass instead of being saved across the scan (vocab is huge).
+    (tot, cnt), _ = jax.lax.scan(
+        jax.checkpoint(chunk_loss),
+        (jnp.float32(0.0), jnp.float32(0.0)), (hc, lc))
+    loss = tot / jnp.maximum(cnt, 1.0)
+    return loss, {"loss": loss, "tokens": cnt}
+
+
+# ---------------------------------------------------------------------------
+# Inference: prefill + decode
+# ---------------------------------------------------------------------------
+
+def prefill(params, batch: Dict, cfg: ArchConfig) -> Tuple[jnp.ndarray, Any]:
+    """Forward over the prompt, emitting caches.  Returns (last-position
+    logits (b, v), caches)."""
+    h, caches, _ = backbone(params, batch, cfg, emit_cache=True)
+    logits = _logits(params, h[:, -1:], cfg)[:, 0]
+    return logits, caches
+
+
+def decode_step(params, token: jnp.ndarray, caches: Any,
+                cache_index: jnp.ndarray, cfg: ArchConfig) -> Tuple[jnp.ndarray, Any]:
+    """One decode step.  token (b, 1) int32; cache_index scalar int32.
+    Returns (logits (b, v), updated caches)."""
+    b = token.shape[0]
+    x = _embed_tokens(params, token, cfg)
+    positions = jnp.full((b, 1), cache_index, jnp.int32)
+    x, new_caches = _run_blocks(params["blocks"], x, cfg, positions,
+                                causal=True, caches=caches,
+                                cache_index=cache_index)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, x, cfg)[:, 0]
+    return logits, new_caches
+
+
+def decode_cache_specs(cfg: ArchConfig, b: int, max_len: int) -> Any:
+    """Abstract cache pytree for serve_step lowering (stacked over groups)."""
+    cross_len = cfg.encoder_len if cfg.encoder_layers else 0
+    group = {}
+    for i, spec in enumerate(cfg.pattern):
+        c = block_cache_spec(cfg, spec, b, max_len, cross_len=cross_len)
+        if c is not None:
+            group[f"pos{i}"] = c
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((cfg.n_groups,) + s.shape, s.dtype),
+        group)
+
+
+def init_decode_caches(cfg: ArchConfig, b: int, max_len: int):
+    """Concrete zero caches (for real decoding in examples/tests)."""
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        decode_cache_specs(cfg, b, max_len))
+
+
+def decode_cache_axes(cfg: ArchConfig) -> Any:
+    """Logical-axis tree matching decode_cache_specs (stacked: +'layers')."""
+    from .blocks import block_cache_axes
+    cross_len = cfg.encoder_len if cfg.encoder_layers else 0
+    group = {}
+    for i, spec in enumerate(cfg.pattern):
+        a = block_cache_axes(cfg, spec, cross_len=cross_len)
+        if a is not None:
+            group[f"pos{i}"] = a
+
+    def stack(node):
+        if isinstance(node, dict):
+            return {k: stack(v) for k, v in node.items()}
+        return ("layers",) + tuple(node)
+    return stack(group)

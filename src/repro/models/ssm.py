@@ -1,0 +1,356 @@
+"""Recurrent mixers: Mamba selective SSM (Jamba) and xLSTM (mLSTM/sLSTM).
+
+All recurrences are *chunked*: a ``lax.scan`` carries the recurrent state
+across chunks while within-chunk work is parallel (associative scan for
+Mamba; a decay-matrix quadratic form for mLSTM whose decay matrix is
+generated from its structural rule — a ``foreach_ij`` fragment, paper §4.1).
+This bounds activation memory at O(chunk) instead of O(seq) and gives the
+sub-quadratic long-context decode path (``long_500k``): decode is a single
+state update per token.
+
+States (decode cache):
+  mamba: {"h": (b, d_in, n), "conv": (b, k-1, d_in)}
+  mlstm: {"C": (b, nh, dk, dv), "n": (b, nh, dk)}
+  slstm: {"c","n","h","m": (b, nh, dh)}
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from .base import PSpec, dense, rms_norm, act_fn, shard_hint
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM)
+# ---------------------------------------------------------------------------
+
+def _mamba_dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or max(1, -(-cfg.d_model // 16))
+    return d_in, dt_rank
+
+
+def mamba_params(cfg: ArchConfig) -> Dict[str, PSpec]:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, dt_rank = _mamba_dims(cfg)
+    dt = cfg.param_dtype
+    return {
+        "w_in": PSpec((d, 2 * d_in), ("embed", "mlp"), dt),
+        "conv_w": PSpec((s.d_conv, d_in), (None, "mlp"), dt),
+        "conv_b": PSpec((d_in,), ("mlp",), dt, init="zeros"),
+        "w_x": PSpec((d_in, dt_rank + 2 * s.d_state), ("mlp", None), dt),
+        "w_dt": PSpec((dt_rank, d_in), (None, "mlp"), dt),
+        "dt_bias": PSpec((d_in,), ("mlp",), "float32", init="zeros"),
+        "a_log": PSpec((d_in, s.d_state), ("mlp", None), "float32",
+                       init="ones"),
+        "d_skip": PSpec((d_in,), ("mlp",), "float32", init="ones"),
+        "w_out": PSpec((d_in, d), ("mlp", "embed"), dt),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv along time.  x (b, s, d_in), w (k, d_in).
+    Returns (y, new_state) where state is the last k-1 inputs."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)               # (b, s+k-1, d)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else None
+    return y + b[None, None].astype(y.dtype), new_state
+
+
+def _ssm_chunk_scan(x, dt, B, C, a, chunk):
+    """Chunked selective scan.  x, dt (b, s, d_in); B, C (b, s, n); a (d_in, n).
+    h_t = exp(dt_t a) h_{t-1} + dt_t B_t x_t ;  y_t = (h_t C_t).sum(n)."""
+    b, s, d_in = x.shape
+    n = B.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+
+    xs = x.reshape(b, nc, chunk, d_in).swapaxes(0, 1)
+    dts = dt.reshape(b, nc, chunk, d_in).swapaxes(0, 1)
+    Bs = B.reshape(b, nc, chunk, n).swapaxes(0, 1)
+    Cs = C.reshape(b, nc, chunk, n).swapaxes(0, 1)
+
+    def chunk_step(h0, xs_):
+        xc, dtc, Bc, Cc = xs_
+        # decay (b, t, d, n), input (b, t, d, n)
+        da = dtc[..., None] * a[None, None]               # dt*A  (<,= 0)
+        decay = jnp.exp(da)
+        inp = (dtc * xc)[..., None] * Bc[:, :, None, :]
+        # associative prefix of h_t = decay_t h_{t-1} + inp_t
+        def comb(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, bl * ar + br
+        A_pre, B_pre = jax.lax.associative_scan(comb, (decay, inp), axis=1)
+        h = A_pre * h0[:, None] + B_pre                   # (b, t, d, n)
+        y = jnp.sum(h * Cc[:, :, None, :], axis=-1)       # (b, t, d)
+        return h[:, -1], y
+
+    h0 = shard_hint(jnp.zeros((b, d_in, n), jnp.float32),
+                    "batch", "mlp", None)
+    h_last, ys = jax.lax.scan(jax.checkpoint(chunk_step), h0,
+                              (xs, dts, Bs, Cs))
+    y = ys.swapaxes(0, 1).reshape(b, s, d_in)
+    return y, h_last
+
+
+def mamba_apply(p, x: jnp.ndarray, cfg: ArchConfig,
+                state: Optional[Dict] = None) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Mamba mixer.  state given -> single-token decode (s == 1)."""
+    s_cfg = cfg.ssm
+    b, s, d = x.shape
+    d_in, dt_rank = _mamba_dims(cfg)
+    pol = cfg.matmul_policy
+
+    xz = shard_hint(dense(x, p["w_in"], pol), "batch", None, "mlp")
+    x_br, z = jnp.split(xz, 2, axis=-1)
+
+    conv_state = state["conv"] if state is not None else None
+    x_c, new_conv = _causal_conv(x_br, p["conv_w"], p["conv_b"], conv_state)
+    x_c = shard_hint(jax.nn.silu(x_c.astype(jnp.float32)),
+                     "batch", None, "mlp")
+
+    proj = dense(x_c.astype(x.dtype), p["w_x"], pol).astype(jnp.float32)
+    dt_in = proj[..., :dt_rank]
+    B = proj[..., dt_rank:dt_rank + s_cfg.d_state]
+    C = proj[..., dt_rank + s_cfg.d_state:]
+    dt = jax.nn.softplus(
+        dense(dt_in.astype(x.dtype), p["w_dt"], pol).astype(jnp.float32)
+        + p["dt_bias"][None, None])
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))          # (d_in, n) < 0
+
+    if state is not None:  # decode: one recurrence step
+        h_prev = state["h"]
+        decay = jnp.exp(dt[:, 0, :, None] * a[None])
+        h = decay * h_prev + (dt[:, 0] * x_c[:, 0])[..., None] * B[:, 0, None, :]
+        y = jnp.sum(h * C[:, 0, None, :], axis=-1)[:, None]
+        new_state = {"h": h, "conv": new_conv}
+    else:
+        y, h_last = _ssm_chunk_scan(x_c, dt, B, C, a, s_cfg.chunk)
+        new_state = {"h": h_last, "conv": new_conv}
+
+    y = y + p["d_skip"][None, None] * x_c
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return dense(y.astype(x.dtype), p["w_out"], pol).astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM) — matrix memory with exponential gating, chunked.
+# ---------------------------------------------------------------------------
+
+def mlstm_params(cfg: ArchConfig) -> Dict[str, PSpec]:
+    xc = cfg.xlstm
+    d = cfg.d_model
+    d_in = int(xc.proj_factor_mlstm * d)
+    nh = cfg.n_heads
+    dh = d_in // nh
+    dt = cfg.param_dtype
+    return {
+        "w_up": PSpec((d, 2 * d_in), ("embed", "mlp"), dt),
+        "conv_w": PSpec((xc.conv_kernel, d_in), (None, "mlp"), dt),
+        "conv_b": PSpec((d_in,), ("mlp",), dt, init="zeros"),
+        "wq": PSpec((d_in, d_in), ("mlp", None), dt),
+        "wk": PSpec((d_in, d_in), ("mlp", None), dt),
+        "wv": PSpec((d_in, d_in), ("mlp", None), dt),
+        "w_if": PSpec((d_in, 2 * nh), ("mlp", None), dt),  # i, f gates per head
+        "skip": PSpec((d_in,), ("mlp",), "float32", init="ones"),
+        "norm": PSpec((d_in,), ("mlp",), dt, init="zeros"),
+        "w_down": PSpec((d_in, d), ("mlp", "embed"), dt),
+    }
+
+
+def _mlstm_chunk(q, k, v, log_f, log_i, chunk, C0, n0):
+    """Chunked mLSTM.  q,k,v (b, s, nh, dh); log_f/log_i (b, s, nh).
+    C_t = f_t C_{t-1} + i_t k_t v_t^T ; n_t = f_t n_{t-1} + i_t k_t ;
+    y_t = (q_t C_t) / max(|q_t n_t|, 1).
+    The intra-chunk decay matrix D_ij = exp(cumlogf_i - cumlogf_j + log_i_j)
+    (i >= j) is generated from its structural rule — a foreach_ij fragment.
+    """
+    b, s, nh, dh = q.shape
+    chunk = min(chunk, s)
+    nc = s // chunk
+    scale = 1.0 / (dh ** 0.5)
+
+    def resh(x):
+        return x.reshape(b, nc, chunk, *x.shape[2:]).swapaxes(0, 1)
+
+    qs, ks, vs, lfs, lis = map(resh, (q * scale, k, v, log_f, log_i))
+
+    from .base import mma_einsum
+
+    def chunk_step(carry, xs_):
+        C_prev, n_prev = carry
+        qc, kc, vc, lf, li = xs_                          # (b, t, nh[, dh])
+        clf = jnp.cumsum(lf, axis=1)                      # cumulative log f
+        # inter-chunk: contribution of C_prev decayed to each t
+        dec0 = jnp.exp(clf)[..., None]                    # (b, t, nh, 1)
+        y_inter = mma_einsum("bthd,bhde->bthe", qc, C_prev) * dec0
+        nrm_inter = mma_einsum("bthd,bhd->bth", qc, n_prev) * dec0[..., 0]
+        # intra-chunk: decay matrix from structural rule (foreach_ij)
+        # D_ij = exp(clf_i - clf_j + li_j) for i >= j  (f_{j+1..i} * i_j)
+        ti = clf[:, :, None, :]                           # (b, t_i, 1, nh)
+        tj = clf[:, None, :, :]                           # (b, 1, t_j, nh)
+        lij = ti - tj + li[:, None, :, :]
+        mask = (jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :])
+        D = jnp.where(mask[None, :, :, None], jnp.exp(jnp.minimum(lij, 20.0)), 0.0)
+        # score x decay tiles stay in the compute dtype (bf16 on the MXU):
+        # fp32 (t, t) tiles double the dominant traffic (§Perf H6)
+        s_qk = mma_einsum("bihd,bjhd->bijh", qc, kc)
+        sd = (s_qk * D).astype(qc.dtype)
+        y_intra = mma_einsum("bijh,bjhd->bihd", sd, vc)
+        # normalizer: q_t . n_t where n_t = sum_j decay_j i_j k_j (+ carried)
+        nrm_intra = jnp.sum(sd.astype(jnp.float32), axis=2)
+        y = y_inter + y_intra
+        nrm = jnp.abs(nrm_inter + nrm_intra)
+        y = y / jnp.maximum(nrm, 1.0)[..., None]
+        # state update to end of chunk
+        tot = clf[:, -1]                                  # (b, nh)
+        decay_j = jnp.exp(tot[:, None] - clf + li)        # (b, t, nh)
+        kd = (kc.astype(jnp.float32) * decay_j[..., None]).astype(kc.dtype)
+        C_new = C_prev * jnp.exp(tot)[..., None, None] + mma_einsum(
+            "bthd,bthe->bhde", kd, vc)
+        n_new = n_prev * jnp.exp(tot)[..., None] + jnp.sum(
+            kd.astype(jnp.float32), axis=1)
+        return (C_new, n_new), y
+
+    (C_last, n_last), ys = jax.lax.scan(jax.checkpoint(chunk_step), (C0, n0),
+                                        (qs, ks, vs, lfs, lis))
+    y = ys.swapaxes(0, 1).reshape(b, s, nh, dh)
+    return y, C_last, n_last
+
+
+def mlstm_apply(p, x: jnp.ndarray, cfg: ArchConfig,
+                state: Optional[Dict] = None) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    xc = cfg.xlstm
+    b, s, d = x.shape
+    d_in = int(xc.proj_factor_mlstm * d)
+    nh = cfg.n_heads
+    dh = d_in // nh
+    pol = cfg.matmul_policy
+
+    xz = shard_hint(dense(x, p["w_up"], pol), "batch", None, "mlp")
+    x_br, z = jnp.split(xz, 2, axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    x_c, new_conv = _causal_conv(x_br, p["conv_w"], p["conv_b"], conv_state)
+    x_c = shard_hint(jax.nn.silu(x_c.astype(jnp.float32)).astype(x.dtype),
+                     "batch", None, "mlp")
+
+    # q/k/v tiles stay bf16 (fp32 accumulation happens inside the einsums)
+    q = dense(x_c, p["wq"], pol).reshape(b, s, nh, dh)
+    k = (dense(x_c, p["wk"], pol).reshape(b, s, nh, dh)
+         .astype(jnp.float32) / (dh ** 0.5)).astype(q.dtype)
+    v = dense(x_br, p["wv"], pol).reshape(b, s, nh, dh)
+    gates = dense(x_c, p["w_if"], pol).astype(jnp.float32).reshape(b, s, nh, 2)
+    log_i = -jax.nn.softplus(-gates[..., 0])              # log sigmoid(i)
+    log_f = -jax.nn.softplus(-gates[..., 1])              # log sigmoid(f)
+
+    if state is not None:
+        C_prev, n_prev = state["C"], state["n"]
+        f_ = jnp.exp(log_f[:, 0])[..., None, None]        # (b, nh, 1, 1)
+        i_ = jnp.exp(log_i[:, 0])[..., None, None]
+        C = C_prev * f_ + i_ * k[:, 0][..., :, None] * v[:, 0][..., None, :]
+        n = n_prev * f_[..., 0] + i_[..., 0] * k[:, 0]
+        q0 = q[:, 0] / (dh ** 0.5)        # same q scaling as the chunked path
+        num = jnp.einsum("bhd,bhde->bhe", q0, C)
+        den = jnp.abs(jnp.einsum("bhd,bhd->bh", q0, n))
+        y = (num / jnp.maximum(den, 1.0)[..., None])[:, None]
+        new_state = {"C": C, "n": n, "conv": new_conv}
+        y = y.reshape(b, 1, d_in)
+    else:
+        # C sharded on the VALUE axis: y = q . C contracts axis 2 locally
+        # and emits the sharded axis 3; sharding axis 2 would all-gather the
+        # 268MB state every chunk (§Perf H7)
+        C0 = shard_hint(jnp.zeros((b, nh, dh, dh), jnp.float32),
+                        "batch", None, None, "mlp")
+        n0 = shard_hint(jnp.zeros((b, nh, dh), jnp.float32),
+                        "batch", None, "mlp")
+        y, C_last, n_last = _mlstm_chunk(q, k, v, log_f, log_i, xc.chunk, C0, n0)
+        new_state = {"C": C_last, "n": n_last, "conv": new_conv}
+        y = y.reshape(b, s, d_in)
+
+    y = y + p["skip"][None, None] * x_c.astype(jnp.float32)
+    y = rms_norm(y.astype(x.dtype), p["norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return dense(y, p["w_down"], pol).astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM — scalar memory, sequential recurrence (no parallel form exists).
+# ---------------------------------------------------------------------------
+
+def slstm_params(cfg: ArchConfig) -> Dict[str, PSpec]:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    dt = cfg.param_dtype
+    xc = cfg.xlstm
+    d_ff = int(xc.proj_factor_slstm * d)
+    return {
+        "w_gates": PSpec((d, 4 * d), ("embed", "mlp"), dt),
+        "r_gates": PSpec((nh, dh, 4 * dh), (None, None, None), dt, init_scale=0.5),
+        "b_gates": PSpec((4 * d,), ("mlp",), "float32", init="zeros"),
+        "norm": PSpec((d,), (None,), dt, init="zeros"),
+        "w_up1": PSpec((d, d_ff), ("embed", "mlp"), dt),
+        "w_up2": PSpec((d, d_ff), ("embed", "mlp"), dt),
+        "w_down": PSpec((d_ff, d), ("mlp", "embed"), dt),
+    }
+
+
+def slstm_apply(p, x: jnp.ndarray, cfg: ArchConfig,
+                state: Optional[Dict] = None) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    b, s, d = x.shape
+    nh = cfg.n_heads
+    dh = d // nh
+    pol = cfg.matmul_policy
+
+    pre_x = (dense(x, p["w_gates"], pol).astype(jnp.float32)
+             + p["b_gates"][None, None])                  # (b, s, 4d)
+    pre_x = pre_x.reshape(b, s, nh, 4 * dh)
+
+    if state is None:
+        st = {k: jnp.zeros((b, nh, dh), jnp.float32) for k in ("c", "n", "h")}
+        st["m"] = jnp.full((b, nh, dh), -1e30, jnp.float32)
+    else:
+        st = {k: state[k] for k in ("c", "n", "h", "m")}
+
+    r = p["r_gates"].astype(jnp.float32)                  # (nh, dh, 4dh)
+
+    def step(carry, pre_t):
+        c, n, h, m = carry
+        pre = pre_t + jnp.einsum("bhd,hdk->bhk", h, r)    # recurrent term
+        z_, i_, f_, o_ = jnp.split(pre, 4, axis=-1)
+        # stabilized exponential gating
+        log_f = -jax.nn.softplus(-f_)
+        m_new = jnp.maximum(log_f + m, i_)
+        i_g = jnp.exp(i_ - m_new)
+        f_g = jnp.exp(log_f + m - m_new)
+        z_g = jnp.tanh(z_)
+        o_g = jax.nn.sigmoid(o_)
+        c_new = f_g * c + i_g * z_g
+        n_new = f_g * n + i_g
+        h_new = o_g * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    (c, n, h, m), hs = jax.lax.scan(
+        step, (st["c"], st["n"], st["h"], st["m"]), pre_x.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).reshape(b, s, d).astype(x.dtype)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    # post-projection FFN (GeGLU, pf 4/3)
+    ff = jax.nn.gelu(dense(y, p["w_up1"], pol).astype(jnp.float32)) \
+        * dense(y, p["w_up2"], pol).astype(jnp.float32)
+    out = dense(ff.astype(x.dtype), p["w_down"], pol)
+    new_state = {"c": c, "n": n, "h": h, "m": m}
+    return out.astype(x.dtype), new_state

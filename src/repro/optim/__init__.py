@@ -1,0 +1,4 @@
+"""Optimizers: AdamW (+fp32 master, sharded states), LR schedules,
+error-feedback gradient compression."""
+from . import adamw, schedule
+from .adamw import AdamWConfig

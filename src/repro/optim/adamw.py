@@ -1,0 +1,96 @@
+"""AdamW with fp32 master weights, global-norm clipping and weight decay.
+
+States are plain pytrees sharded exactly like their parameters (the FSDP
+axes), so optimizer memory scales 1/N with the mesh — required to fit the
+398B configs.  ``master`` keeps fp32 weights when params are bf16 (the
+TCEC-friendly alternative — fp32 params + bf16x3 matmuls — needs no master
+copy; see DESIGN.md §4)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    use_master: bool = True
+    schedule: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None
+
+
+def init(params, cfg: AdamWConfig):
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "m": jax.tree.map(f32, params),
+        "v": jax.tree.map(f32, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+    if cfg.use_master:
+        state["master"] = jax.tree.map(
+            lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def update(grads, state, params, cfg: AdamWConfig) -> Tuple[Any, Any, dict]:
+    """One AdamW step.  Returns (new_params, new_state, stats)."""
+    count = state["count"] + 1
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.grad_clip else jnp.float32(1.0)
+    lr = cfg.schedule(count) if cfg.schedule is not None else cfg.lr
+
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+    source = state.get("master", params)
+
+    def leaf(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        upd = (m_new / b1c) / (jnp.sqrt(v_new / b2c) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        p_new = p32 - lr * (upd + cfg.weight_decay * p32)
+        return m_new, v_new, p_new
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_p = treedef.flatten_up_to(source)
+    outs = [leaf(g, m, v, p) for g, m, v, p in
+            zip(flat_g, flat_m, flat_v, flat_p)]
+    new_m = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_v = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    new_p32 = jax.tree.unflatten(treedef, [o[2] for o in outs])
+
+    param_dtypes = jax.tree.map(lambda p: p.dtype, params)
+    new_params = jax.tree.map(lambda p32_, dt: p32_.astype(dt),
+                              new_p32, param_dtypes)
+    new_state = {"m": new_m, "v": new_v, "count": count}
+    if "master" in state:
+        new_state["master"] = new_p32
+    stats = {"grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}
+    return new_params, new_state, stats
+
+
+def opt_logical_axes(cfg_arch, adamw_cfg: AdamWConfig):
+    """Logical axes for the optimizer state (mirrors the params)."""
+    from repro.models import logical_axes
+    ax = logical_axes(cfg_arch)
+    out = {"m": ax, "v": ax, "count": ()}
+    if adamw_cfg.use_master:
+        out["master"] = ax
+    return out

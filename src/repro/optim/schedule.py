@@ -1,0 +1,23 @@
+"""LR schedules (pure functions of the step count)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  min_ratio: float = 0.1):
+    def sched(count):
+        c = count.astype(jnp.float32)
+        warm = peak_lr * c / max(warmup_steps, 1)
+        frac = jnp.clip((c - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        cos = peak_lr * (min_ratio + (1 - min_ratio)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(c < warmup_steps, warm, cos)
+    return sched
+
+
+def constant(lr: float):
+    def sched(count):
+        return jnp.full((), lr, jnp.float32)
+    return sched

@@ -1,0 +1,2 @@
+"""Distribution: logical-axis sharding rules, pipeline stages, collectives."""
+from . import sharding

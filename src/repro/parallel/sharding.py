@@ -1,0 +1,121 @@
+"""Logical-axis sharding rules (MaxText-style) -> PartitionSpecs.
+
+Every parameter/cache tensor carries a tuple of *logical* axis names; this
+module maps them onto mesh axes with divisibility checking and per-tensor
+axis-conflict resolution (an axis is used at most once per tensor; each
+logical name has an ordered candidate list, so e.g. ``seq`` falls back to
+context-parallel sharding only when ``batch`` could not occupy the data axes
+— the bs=1 ``long_500k`` case).
+
+The resulting layout: FSDP over all non-``model`` axes on the ``embed``
+dimension of every weight, TP over ``model`` on heads/mlp/vocab, EP over
+``model`` on the expert dimension, DP over the data axes on activations.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import dp_axes, axis_size
+
+AxisGroup = Tuple[str, ...]
+
+
+def default_rules(mesh: Mesh) -> Dict[str, Sequence[AxisGroup]]:
+    fsdp = dp_axes(mesh)                      # ("pod","data") or ("data",)
+    return {
+        "vocab": (("model",),),
+        "heads": (("model",),),
+        "kv": (("model",),),
+        "mlp": (("model",),),
+        "experts": (("model",),),
+        "embed": (fsdp,),
+        "batch": (fsdp,),
+        "seq": (fsdp, ("data",)),             # context parallelism fallback
+        "layers": (),
+    }
+
+
+def spec_for(shape: Tuple[int, ...], logical: Tuple[Optional[str], ...],
+             mesh: Mesh, rules=None) -> P:
+    """Resolve one tensor's PartitionSpec from its logical axes."""
+    rules = rules or default_rules(mesh)
+    used: set = set()
+    out = []
+    for dim, name in zip(shape, logical):
+        assigned = None
+        if name is not None:
+            for group in rules.get(name, ()):
+                if not group or any(a in used for a in group):
+                    continue
+                if dim % axis_size(mesh, group) != 0:
+                    continue
+                assigned = tuple(group)
+                used.update(group)
+                break
+        if assigned is None:
+            out.append(None)
+        elif len(assigned) == 1:
+            out.append(assigned[0])
+        else:
+            out.append(assigned)
+    return P(*out)
+
+
+def _is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(a, (str, type(None)))
+                                        for a in x)
+
+
+def _walk(shape_node, axes_node, fn):
+    if isinstance(axes_node, dict):
+        return {k: _walk(shape_node[k], axes_node[k], fn) for k in axes_node}
+    return fn(shape_node, axes_node)
+
+
+def tree_pspecs(shape_tree, axes_tree, mesh: Mesh, rules=None):
+    """(ShapeDtypeStruct tree, logical-axes tree) -> PartitionSpec tree."""
+    return _walk(shape_tree, axes_tree,
+                 lambda s, ax: spec_for(tuple(s.shape), ax, mesh, rules))
+
+
+def param_pspecs(cfg, mesh: Mesh, rules=None):
+    from repro.models import abstract_params, logical_axes
+    return tree_pspecs(abstract_params(cfg), logical_axes(cfg), mesh, rules)
+
+
+def cache_pspecs(cfg, mesh: Mesh, b: int, max_len: int, rules=None):
+    from repro.models.model import decode_cache_specs, decode_cache_axes
+    return tree_pspecs(decode_cache_specs(cfg, b, max_len),
+                       decode_cache_axes(cfg), mesh, rules)
+
+
+def batch_pspecs(batch_tree, mesh: Mesh):
+    """Input batches: dim 0 is the global batch (data axes) when divisible;
+    2-D token arrays fall back to sequence sharding (bs=1 long-context)."""
+    fsdp = dp_axes(mesh)
+    n_dp = axis_size(mesh, fsdp)
+
+    def spec(leaf):
+        shape = tuple(leaf.shape)
+        if len(shape) == 0:
+            return P()
+        if shape[0] % n_dp == 0:
+            return P(fsdp if len(fsdp) > 1 else fsdp[0],
+                     *([None] * (len(shape) - 1)))
+        if len(shape) >= 2 and shape[1] % n_dp == 0:
+            return P(None, fsdp if len(fsdp) > 1 else fsdp[0],
+                     *([None] * (len(shape) - 2)))
+        return P(*([None] * len(shape)))
+    return jax.tree.map(spec, batch_tree)
+
+
+def shardings_of(pspec_tree, mesh: Mesh):
+    return jax.tree.map(lambda p: NamedSharding(mesh, p), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,4 @@
+"""Runtime: train loop, fault tolerance, elastic scaling."""
+from .train_loop import TrainLoop, TrainLoopConfig
+from .fault_tolerance import StepWatchdog, WatchdogConfig, NanGuard, RetryPolicy, run_with_retries
+from . import elastic

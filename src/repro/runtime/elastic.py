@@ -1,0 +1,46 @@
+"""Elastic scaling: rebuild the mesh from surviving devices and reshard.
+
+The checkpoint layer stores *logical* arrays, so restoring onto a different
+mesh is just device_put with new shardings.  This module owns the policy:
+given a device count, pick the best (data, model) factorization consistent
+with the arch's divisibility constraints, rebuild shardings, and restore.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.launch.mesh import make_mesh
+from repro.parallel import sharding as shd
+
+
+def best_mesh_shape(n_devices: int, prefer_model: int = 16,
+                    max_model: Optional[int] = None) -> Tuple[int, int]:
+    """Largest model-parallel degree <= prefer_model that divides n_devices."""
+    max_model = max_model or prefer_model
+    for m in range(min(prefer_model, max_model, n_devices), 0, -1):
+        if n_devices % m == 0:
+            return (n_devices // m, m)
+    return (n_devices, 1)
+
+
+def remesh(n_devices: Optional[int] = None, prefer_model: int = 16):
+    """Build a fresh ('data','model') mesh from the devices still alive."""
+    n = n_devices or len(jax.devices())
+    data, model = best_mesh_shape(n, prefer_model)
+    return make_mesh((data, model), ("data", "model"))
+
+
+def restore_elastic(checkpointer, abstract_state, cfg, opt_cfg,
+                    mesh=None, step=None):
+    """Restore a checkpoint onto a (possibly different) mesh."""
+    from repro.launch import steps as steps_mod
+    mesh = mesh or remesh()
+    pspecs = steps_mod.train_state_pspecs(cfg, opt_cfg, mesh)
+    shardings = jax.tree.map(
+        lambda p: jax.NamedSharding(mesh, p), pspecs,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    state, extras = checkpointer.restore(abstract_state, step=step,
+                                         shardings=shardings)
+    return state, extras, mesh

@@ -1,0 +1,107 @@
+"""Fault-tolerance runtime: watchdog, straggler detection, retry-and-resume.
+
+At thousand-node scale the failure model is: (a) hard node loss — surfaces
+as an exception from the collective layer; (b) stragglers — healthy but slow
+nodes stretching every synchronous step; (c) data-dependent blowups (NaN
+loss).  This module provides the three corresponding mechanisms:
+
+  * ``StepWatchdog``     — per-step wall-time EWMA + deviation; flags a step
+                           as straggling when it exceeds mean + k*dev, and
+                           keeps a per-epoch straggler count for eviction
+                           decisions (on real fleets: trigger a re-mesh).
+  * ``RetryPolicy``      — bounded retry-with-resume loop: on failure,
+                           restore the latest committed checkpoint and
+                           continue (optionally on a new, smaller mesh —
+                           elastic; see runtime/elastic.py).
+  * ``NanGuard``         — skip/halt policy on non-finite losses.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class WatchdogConfig:
+    ewma_alpha: float = 0.1
+    straggle_factor: float = 2.0      # flag if step > factor * ewma
+    min_samples: int = 5
+    hard_timeout_s: Optional[float] = None   # absolute per-step limit
+
+
+class StepWatchdog:
+    def __init__(self, cfg: WatchdogConfig = WatchdogConfig()):
+        self.cfg = cfg
+        self.ewma: Optional[float] = None
+        self.n = 0
+        self.straggles = 0
+        self._t0: Optional[float] = None
+
+    def start_step(self):
+        self._t0 = time.monotonic()
+
+    def end_step(self) -> dict:
+        dt = time.monotonic() - self._t0
+        self.n += 1
+        flagged = False
+        if self.ewma is not None and self.n > self.cfg.min_samples:
+            if dt > self.cfg.straggle_factor * self.ewma:
+                self.straggles += 1
+                flagged = True
+            if (self.cfg.hard_timeout_s is not None
+                    and dt > self.cfg.hard_timeout_s):
+                raise TimeoutError(
+                    f"step took {dt:.1f}s > hard timeout "
+                    f"{self.cfg.hard_timeout_s}s")
+        a = self.cfg.ewma_alpha
+        self.ewma = dt if self.ewma is None else (1 - a) * self.ewma + a * dt
+        return {"step_time_s": dt, "ewma_s": self.ewma,
+                "straggler": flagged, "straggler_count": self.straggles}
+
+
+@dataclasses.dataclass
+class RetryPolicy:
+    max_restarts: int = 3
+    backoff_s: float = 1.0
+
+
+class NanGuard:
+    """Skip-or-halt policy for non-finite losses."""
+
+    def __init__(self, max_consecutive_skips: int = 5):
+        self.max_skips = max_consecutive_skips
+        self.consecutive = 0
+
+    def check(self, loss: float) -> bool:
+        """Returns True if the step result should be APPLIED."""
+        if np.isfinite(loss):
+            self.consecutive = 0
+            return True
+        self.consecutive += 1
+        if self.consecutive > self.max_skips:
+            raise FloatingPointError(
+                f"{self.consecutive} consecutive non-finite losses")
+        return False
+
+
+def run_with_retries(body: Callable[[int], None],
+                     policy: RetryPolicy = RetryPolicy(),
+                     on_restart: Optional[Callable[[int, Exception], None]] = None):
+    """Execute ``body(restart_count)``; on failure invoke ``on_restart`` (e.g.
+    restore-from-checkpoint / re-mesh) and retry up to max_restarts."""
+    restarts = 0
+    while True:
+        try:
+            return body(restarts)
+        except (KeyboardInterrupt, SystemExit):
+            raise
+        except Exception as e:  # noqa: BLE001 — any step failure is retryable
+            restarts += 1
+            if restarts > policy.max_restarts:
+                raise
+            if on_restart is not None:
+                on_restart(restarts, e)
+            time.sleep(policy.backoff_s * restarts)

@@ -1,0 +1,112 @@
+"""The training loop: steps + checkpoints + watchdog + auto-resume.
+
+``TrainLoop.run`` wires every substrate piece together:
+  data iterator (resumable) -> jitted train step (sharded) -> metrics,
+  with checkpoint-every-k (async), straggler watchdog, NaN guard, and
+  retry-with-resume on failure.  This is the loop both the example trainer
+  and the tests drive.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.data.pipeline import TokenSource, DataIterator, DataConfig, \
+    make_frontend_inputs
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.fault_tolerance import (
+    StepWatchdog, WatchdogConfig, NanGuard, RetryPolicy, run_with_retries)
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 50
+    log_every: int = 10
+    keep_last_k: int = 3
+    async_checkpoint: bool = True
+    seed: int = 0
+
+
+class TrainLoop:
+    def __init__(self, cfg_arch, loop_cfg: TrainLoopConfig,
+                 opt_cfg: AdamWConfig, train_step: Callable,
+                 checkpoint_dir, data_cfg: DataConfig,
+                 mesh=None, log_fn: Callable[[str], None] = print):
+        self.cfg_arch = cfg_arch
+        self.loop_cfg = loop_cfg
+        self.opt_cfg = opt_cfg
+        self.train_step = train_step
+        self.mesh = mesh
+        self.log = log_fn
+        self.ckpt = Checkpointer(checkpoint_dir,
+                                 keep_last_k=loop_cfg.keep_last_k,
+                                 async_save=loop_cfg.async_checkpoint)
+        self.data = DataIterator(TokenSource(data_cfg))
+        self.watchdog = StepWatchdog(WatchdogConfig())
+        self.nan_guard = NanGuard()
+        self.history: list = []
+
+    # ------------------------------------------------------------------
+    def _resume(self, state):
+        step = self.ckpt.latest_step()
+        if step is None:
+            return state, 0
+        state, extras = self.ckpt.restore(state)
+        self.data.restore(extras.get("data", {"step": step}))
+        self.log(f"[resume] restored checkpoint step={step}")
+        return state, int(extras.get("train_step", step))
+
+    def _batch(self, raw: Dict) -> Dict:
+        batch = dict(raw)
+        batch.update(make_frontend_inputs(
+            self.cfg_arch, raw["tokens"].shape[0], self.data.step,
+            self.loop_cfg.seed))
+        return batch
+
+    # ------------------------------------------------------------------
+    def run(self, init_state, resume: bool = True) -> Any:
+        state_holder = {"state": init_state}
+
+        def body(restarts: int):
+            state = state_holder["state"]
+            start = 0
+            if resume or restarts:
+                state, start = self._resume(state)
+            for step in range(start, self.loop_cfg.total_steps):
+                self.watchdog.start_step()
+                batch = self._batch(next(self.data))
+                state, metrics = self.train_step(state, batch)
+                loss = float(metrics["loss"])
+                if not self.nan_guard.check(loss):
+                    self.log(f"[nan-guard] skipping step {step}")
+                    continue
+                wd = self.watchdog.end_step()
+                self.history.append({"step": step, "loss": loss, **wd})
+                if wd["straggler"]:
+                    self.log(f"[watchdog] straggling step {step}: "
+                             f"{wd['step_time_s']:.2f}s vs ewma "
+                             f"{wd['ewma_s']:.2f}s")
+                if step % self.loop_cfg.log_every == 0:
+                    self.log(f"step {step:5d} loss {loss:.4f} "
+                             f"({wd['step_time_s']*1e3:.0f} ms)")
+                if (step + 1) % self.loop_cfg.checkpoint_every == 0:
+                    self.ckpt.save(step + 1, state,
+                                   extras={"data": self.data.state(),
+                                           "train_step": step + 1})
+                state_holder["state"] = state
+            self.ckpt.save(self.loop_cfg.total_steps, state_holder["state"],
+                           extras={"data": self.data.state(),
+                                   "train_step": self.loop_cfg.total_steps})
+            self.ckpt.wait()
+            return state_holder["state"]
+
+        def on_restart(n, e):
+            self.log(f"[retry] restart {n} after {type(e).__name__}: {e}")
+
+        return run_with_retries(body, RetryPolicy(), on_restart)

@@ -1,0 +1,10 @@
+import os
+import sys
+from pathlib import Path
+
+# Tests run on the single-CPU backend (dry-run owns the 512-device env).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)

@@ -1,0 +1,68 @@
+"""foreach_ij / map fragment primitives vs numpy constructions (paper §4.1-4.3)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (foreach_ij, map_set, map_get, triangular_ones,
+                        identity, householder, givens, banded)
+
+
+def test_triangular_rule_eq3():
+    """Paper Eq. (3): u_ij = 1 iff i <= j; scan via x @ U == cumsum."""
+    u = np.asarray(triangular_ones(16))
+    np.testing.assert_array_equal(u, np.triu(np.ones((16, 16))))
+    x = np.arange(16, dtype=np.float32)[None]
+    np.testing.assert_allclose(x @ u, np.cumsum(x, -1))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 32), st.integers(1, 32))
+def test_foreach_ij_matches_numpy_fromfunction(m, n):
+    frag = np.asarray(foreach_ij(lambda i, j: (3 * i - 2 * j).astype(jnp.float32),
+                                 m, n))
+    want = np.fromfunction(lambda i, j: 3 * i - 2 * j, (m, n))
+    np.testing.assert_array_equal(frag, want)
+
+
+def test_foreach_ij_under_jit_and_vmap():
+    f = jax.jit(lambda s: foreach_ij(lambda i, j: (i + j).astype(jnp.float32) * s,
+                                     8, 8))
+    np.testing.assert_allclose(np.asarray(f(2.0))[3, 4], 14.0)
+    hs = jax.vmap(householder)(jnp.eye(4, dtype=jnp.float32))
+    assert hs.shape == (4, 4, 4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 24), st.data())
+def test_map_set_get_roundtrip(n, data):
+    i = data.draw(st.integers(0, n - 1))
+    j = data.draw(st.integers(0, n - 1))
+    frag = identity(n)
+    frag = map_set(frag, i, j, 7.5)
+    assert float(map_get(frag, i, j)) == 7.5
+
+
+def test_householder_reflection_property():
+    """H v = -v and H u = u for u ⟂ v."""
+    rng = np.random.default_rng(0)
+    v = rng.standard_normal(16).astype(np.float32)
+    v /= np.linalg.norm(v)
+    h = np.asarray(householder(jnp.asarray(v)))
+    np.testing.assert_allclose(h @ v, -v, atol=1e-5)
+    u = rng.standard_normal(16).astype(np.float32)
+    u -= (u @ v) * v
+    np.testing.assert_allclose(h @ u, u, atol=1e-5)
+
+
+def test_givens_rotation_property():
+    g = np.asarray(givens(8, 2, 5, jnp.float32(0.7)))
+    np.testing.assert_allclose(g @ g.T, np.eye(8), atol=1e-6)
+    assert np.isclose(np.linalg.det(g), 1.0, atol=1e-5)
+
+
+def test_banded():
+    b = np.asarray(banded(8, 1, 2))
+    for i in range(8):
+        for j in range(8):
+            assert b[i, j] == (1.0 if -1 <= j - i <= 2 else 0.0)

@@ -1,0 +1,83 @@
+"""Trip-count-aware HLO cost analyzer: exact counts on known programs."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.launch import hlo_cost
+from subproc import run_python
+
+
+def test_plain_matmul_flops_exact():
+    m, k, n = 64, 128, 32
+    comp = jax.jit(lambda a, b: a @ b).lower(
+        jax.ShapeDtypeStruct((m, k), jnp.float32),
+        jax.ShapeDtypeStruct((k, n), jnp.float32)).compile()
+    res = hlo_cost.analyze(comp.as_text())
+    assert res.flops == 2 * m * k * n
+
+
+def test_scan_trip_count_scaling():
+    trips = 11
+    m = 64
+
+    def f(a, b):
+        def body(c, _):
+            return c @ b, None
+        c, _ = jax.lax.scan(body, a, None, length=trips)
+        return c
+
+    comp = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((m, m), jnp.float32),
+        jax.ShapeDtypeStruct((m, m), jnp.float32)).compile()
+    res = hlo_cost.analyze(comp.as_text())
+    assert res.flops == 2 * m * m * m * trips
+
+
+def test_nested_scan_scaling():
+    def f(a, b):
+        def outer(c, _):
+            def inner(d, _):
+                return d @ b, None
+            d, _ = jax.lax.scan(inner, c, None, length=3)
+            return d, None
+        c, _ = jax.lax.scan(outer, a, None, length=5)
+        return c
+
+    m = 32
+    comp = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((m, m), jnp.float32),
+        jax.ShapeDtypeStruct((m, m), jnp.float32)).compile()
+    res = hlo_cost.analyze(comp.as_text())
+    assert res.flops == 2 * m ** 3 * 15
+
+
+def test_bytes_reasonable_for_elementwise():
+    n = 1 << 20
+    comp = jax.jit(lambda x: x * 2 + 1).lower(
+        jax.ShapeDtypeStruct((n,), jnp.float32)).compile()
+    res = hlo_cost.analyze(comp.as_text())
+    # one fused read + one write = 8MB; allow 3x slack for copies
+    assert 4e6 <= res.hbm_bytes <= 3 * 8e6, res.hbm_bytes
+
+
+def test_collectives_parsed_on_sharded_module():
+    run_python("""
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch import hlo_cost
+mesh = jax.make_mesh((8,), ("model",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+a = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+b = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+with mesh:
+    comp = jax.jit(lambda x, y: x @ y,
+                   in_shardings=(NamedSharding(mesh, P(None, "model")),
+                                 NamedSharding(mesh, P("model", None))),
+                   out_shardings=NamedSharding(mesh, P())).lower(a, b).compile()
+res = hlo_cost.analyze(comp.as_text())
+total = sum(v["count"] for v in res.collectives.values())
+assert total >= 1, res.collectives   # contraction over sharded dim -> all-reduce
+wire = res.total_collective()
+assert wire > 0
+print("OK", total, wire)
+""", devices=8)

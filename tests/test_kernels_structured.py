@@ -1,0 +1,58 @@
+"""Structured-fragment kernels (householder/givens/scan) vs oracles."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("b,m,k", [(1, 16, 16), (4, 32, 64), (8, 64, 128),
+                                   (2, 128, 128)])
+def test_householder_sweep(b, m, k):
+    rng = np.random.default_rng(b * m + k)
+    v = rng.standard_normal((b, m)).astype(np.float32)
+    v /= np.linalg.norm(v, axis=-1, keepdims=True)
+    a = rng.standard_normal((b, m, k)).astype(np.float32)
+    out = np.asarray(ops.householder(jnp.asarray(v), jnp.asarray(a),
+                                     interpret=True))
+    r = np.asarray(ref.householder_ref(jnp.asarray(v), jnp.asarray(a)))
+    np.testing.assert_allclose(out, r, rtol=1e-5, atol=1e-5)
+
+
+def test_householder_is_orthogonal_transform():
+    """H (I-2vv^T) preserves norms up to bf16 rounding."""
+    rng = np.random.default_rng(3)
+    v = rng.standard_normal((2, 32)).astype(np.float32)
+    v /= np.linalg.norm(v, axis=-1, keepdims=True)
+    a = rng.standard_normal((2, 32, 16)).astype(np.float32)
+    out = np.asarray(ops.householder(jnp.asarray(v), jnp.asarray(a),
+                                     interpret=True))
+    np.testing.assert_allclose(np.linalg.norm(out, axis=1),
+                               np.linalg.norm(a, axis=1), rtol=2e-2)
+
+
+@pytest.mark.parametrize("b,m,k,gi,gj", [(2, 16, 32, 1, 9), (8, 64, 64, 3, 60),
+                                         (4, 128, 128, 0, 127)])
+def test_givens_sweep(b, m, k, gi, gj):
+    rng = np.random.default_rng(b + m + gi)
+    th = rng.standard_normal(b).astype(np.float32)
+    a = rng.standard_normal((b, m, k)).astype(np.float32)
+    out = np.asarray(ops.givens(jnp.asarray(th), jnp.asarray(a), gi, gj,
+                                interpret=True))
+    r = np.asarray(ref.givens_ref(jnp.asarray(th), jnp.asarray(a), gi, gj))
+    np.testing.assert_allclose(out, r, rtol=1e-5, atol=1e-5)
+    # rows other than gi/gj unchanged (up to bf16 matmul rounding)
+    keep = [i for i in range(m) if i not in (gi, gj)]
+    np.testing.assert_allclose(out[:, keep], a[:, keep], rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("rows,n,block", [(8, 256, 128), (16, 512, 256),
+                                          (8, 1024, 128), (32, 128, 128)])
+def test_scan_cumsum_sweep(rows, n, block):
+    rng = np.random.default_rng(rows + n)
+    x = rng.standard_normal((rows, n)).astype(np.float32)
+    out = np.asarray(ops.cumsum(jnp.asarray(x), block, interpret=True))
+    r = np.asarray(ref.scan_cumsum_ref(jnp.asarray(x), block))
+    np.testing.assert_allclose(out, r, rtol=1e-4, atol=1e-4)
+    exact = np.cumsum(x.astype(np.float64), axis=-1)
+    assert np.max(np.abs(out - exact)) / (np.max(np.abs(exact)) + 1e-30) < 2e-2

@@ -1,0 +1,124 @@
+"""Per-arch reduced-config smoke tests (assignment requirement): one
+forward/train step on CPU asserting shapes + no NaNs, plus
+prefill->decode consistency."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, ARCH_IDS
+from repro.models import (init_params, loss_fn, prefill, decode_step,
+                          init_decode_caches, param_count)
+from repro.models.model import backbone
+
+B, S = 2, 32
+
+
+def make_batch(cfg, rng, with_labels=True):
+    batch = {"tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab)}
+    if with_labels:
+        batch["labels"] = jax.random.randint(rng, (B, S), 0, cfg.vocab)
+    if cfg.encoder_layers:
+        batch["frames"] = jax.random.normal(
+            rng, (B, cfg.encoder_len, cfg.d_model), jnp.bfloat16)
+    if cfg.vision_tokens:
+        batch["patches"] = jax.random.normal(
+            rng, (B, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_loss(arch):
+    cfg = get_config(arch, reduced=True)
+    rng = jax.random.PRNGKey(0)
+    params = init_params(rng, cfg)
+    batch = make_batch(cfg, rng)
+    h, _, _ = backbone(params, batch, cfg, use_remat=False)
+    assert h.shape == (B, S + (cfg.vision_tokens or 0), cfg.d_model)
+    assert bool(jnp.all(jnp.isfinite(h.astype(jnp.float32))))
+    loss, metrics = jax.jit(
+        lambda p, b: loss_fn(p, b, cfg, use_remat=False))(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), arch
+    assert float(metrics["tokens"]) == B * S
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_updates_params(arch):
+    from repro.launch import steps as steps_mod
+    from repro.optim.adamw import AdamWConfig
+    cfg = get_config(arch, reduced=True)
+    opt_cfg = AdamWConfig(lr=1e-2, use_master=True)
+    rng = jax.random.PRNGKey(1)
+    state = steps_mod.init_train_state(rng, cfg, opt_cfg)
+    batch = make_batch(cfg, rng)
+    step = jax.jit(steps_mod.make_train_step(cfg, opt_cfg))
+    new_state, metrics = step(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    # at least one parameter changed
+    changed = jax.tree.map(
+        lambda a, b: bool(jnp.any(a.astype(jnp.float32)
+                                  != b.astype(jnp.float32))),
+        state["params"], new_state["params"])
+    assert any(jax.tree.leaves(changed)), arch
+    assert int(new_state["opt"]["count"]) == 1
+
+
+# xlstm's chunked-parallel forward uses bf16 MXU tiles while its decode path
+# is a per-step fp32 recurrence — ~2% logit divergence is expected rounding.
+_DECODE_TOL = {"xlstm-1.3b": 0.12}
+
+
+@pytest.mark.parametrize("arch", ["gemma-7b", "deepseek-v2-236b",
+                                  "jamba-1.5-large-398b", "xlstm-1.3b",
+                                  "whisper-small", "internvl2-2b"])
+def test_prefill_decode_consistency(arch):
+    """Teacher-forced decode reproduces the direct forward logits."""
+    cfg = get_config(arch, reduced=True)
+    tol = _DECODE_TOL.get(arch, 6e-2)
+    rng = jax.random.PRNGKey(2)
+    params = init_params(rng, cfg)
+    tokens = jax.random.randint(rng, (B, S), 0, cfg.vocab)
+    batch = make_batch(cfg, rng, with_labels=False)
+    batch["tokens"] = tokens
+
+    # direct forward logits at every position
+    h, _, _ = backbone(params, batch, cfg, use_remat=False)
+    from repro.models.model import _logits
+    direct = _logits(params, h, cfg)          # (B, S_total, V)
+    off = cfg.vision_tokens or 0
+
+    # prefill on the first S//2 tokens, then teacher-forced decode
+    half = S // 2
+    pbatch = dict(batch)
+    pbatch["tokens"] = tokens[:, :half]
+    logits_p, pf_caches = prefill(params, pbatch, cfg)
+    np.testing.assert_allclose(
+        np.asarray(logits_p), np.asarray(direct[:, off + half - 1]),
+        rtol=tol, atol=tol)
+
+    from repro.launch.serve import write_prefill_caches
+    caches = init_decode_caches(cfg, B, S + off)
+    caches = write_prefill_caches(caches, pf_caches)
+    for i in range(half, min(half + 3, S)):
+        logits_d, caches = decode_step(
+            params, tokens[:, i:i + 1], caches, jnp.int32(off + i), cfg)
+        np.testing.assert_allclose(
+            np.asarray(logits_d), np.asarray(direct[:, off + i]),
+            rtol=tol, atol=tol,
+            err_msg=f"{arch} step {i}")
+
+
+def test_param_counts_match_assigned_scale():
+    """Full configs land in the right parameter-count ballpark."""
+    expect = {
+        "gemma-7b": (7e9, 10e9),
+        "deepseek-coder-33b": (30e9, 36e9),
+        "command-r-plus-104b": (95e9, 112e9),
+        "qwen2-0.5b": (0.4e9, 0.7e9),
+        "deepseek-v2-236b": (220e9, 250e9),
+        "jamba-1.5-large-398b": (370e9, 430e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = param_count(get_config(arch))
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.1f}B not in [{lo/1e9},{hi/1e9}]"

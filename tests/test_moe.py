@@ -1,0 +1,103 @@
+"""MoE routing invariants (hypothesis) + module behaviour."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.configs.base import ArchConfig, BlockSpec, MoeConfig
+from repro.models import moe as moe_mod
+from repro.models.base import initialize
+
+
+def tiny_cfg(n_experts=8, top_k=2, shared=0, group=64):
+    return ArchConfig(
+        name="tiny-moe", family="moe", n_layers=1, d_model=32, n_heads=4,
+        n_kv_heads=4, d_ff=64, vocab=128,
+        pattern=(BlockSpec("attn", "moe"),),
+        moe=MoeConfig(n_experts=n_experts, top_k=top_k, d_ff_expert=64,
+                      n_shared_experts=shared, group_size=group),
+        remat="none")
+
+
+def test_moe_forward_shape_and_finite():
+    cfg = tiny_cfg(shared=2)
+    p = initialize(jax.random.PRNGKey(0), moe_mod.moe_params(cfg))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 32), jnp.bfloat16)
+    y = moe_mod.moe_apply(p, x, cfg)
+    assert y.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(y.astype(jnp.float32))))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 16), st.integers(1, 4), st.integers(0, 2 ** 31 - 1))
+def test_router_invariants(n_experts, top_k, seed):
+    """top-k probs are normalized; dispatch positions stay under capacity;
+    every kept assignment goes to the expert the router chose."""
+    top_k = min(top_k, n_experts)
+    rng = np.random.default_rng(seed)
+    g, t = 2, 32
+    probs = jax.nn.softmax(jnp.asarray(
+        rng.standard_normal((g, t, n_experts)).astype(np.float32)), -1)
+    top_p, top_e = jax.lax.top_k(probs, top_k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    np.testing.assert_allclose(np.asarray(top_p.sum(-1)), 1.0, rtol=1e-5)
+
+    m = MoeConfig(n_experts=n_experts, top_k=top_k, d_ff_expert=8)
+    cap = moe_mod._capacity(t, m)
+    onehot = jax.nn.one_hot(top_e, n_experts, dtype=jnp.float32)
+    flat = onehot.reshape(g, t * top_k, n_experts)
+    pos = jnp.cumsum(flat, axis=1) - flat
+    pos = pos.reshape(g, t, top_k, n_experts)
+    within = pos < cap
+    dispatch_p = onehot * within
+    # each (token, slot) dispatches to <= 1 expert
+    assert np.all(np.asarray(dispatch_p.sum(-1)) <= 1.0 + 1e-6)
+    # per-expert load after dropping <= capacity
+    load = np.asarray(dispatch_p.sum((1, 2)))
+    assert np.all(load <= cap + 1e-6)
+
+
+def test_capacity_drops_overflow_tokens():
+    """With capacity_factor tiny, most assignments are dropped -> output is
+    attenuated but finite (dropped-token semantics)."""
+    cfg_small = tiny_cfg()
+    cfg_small = ArchConfig(**{**cfg_small.__dict__,
+                              "moe": MoeConfig(n_experts=8, top_k=2,
+                                               d_ff_expert=64,
+                                               capacity_factor=0.05,
+                                               group_size=64)})
+    p = initialize(jax.random.PRNGKey(0), moe_mod.moe_params(cfg_small))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 32), jnp.bfloat16)
+    y = moe_mod.moe_apply(p, x, cfg_small)
+    assert bool(jnp.all(jnp.isfinite(y.astype(jnp.float32))))
+    full = tiny_cfg()
+    p2 = initialize(jax.random.PRNGKey(0), moe_mod.moe_params(full))
+    y2 = moe_mod.moe_apply(p2, x, full)
+    assert float(jnp.abs(y).mean()) <= float(jnp.abs(y2).mean()) + 1e-3
+
+
+def test_aux_loss_balanced_vs_skewed():
+    """Load-balance loss is ~1 for uniform routing, larger when skewed."""
+    cfg = tiny_cfg()
+    p = initialize(jax.random.PRNGKey(0), moe_mod.moe_params(cfg))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 32), jnp.bfloat16)
+    l_uniform = float(moe_mod.router_aux_loss(p, x, cfg))
+    # skew the router to always pick expert 0
+    p_skew = dict(p)
+    p_skew["router"] = p["router"].at[:, 0].set(100.0)
+    l_skew = float(moe_mod.router_aux_loss(p_skew, x, cfg))
+    assert l_skew > l_uniform
+
+
+def test_shared_experts_add_signal():
+    cfg = tiny_cfg(shared=2)
+    p = initialize(jax.random.PRNGKey(0), moe_mod.moe_params(cfg))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 32), jnp.bfloat16)
+    y_with = moe_mod.moe_apply(p, x, cfg)
+    p_zero = dict(p)
+    for k in ("ws_gate", "ws_up", "ws_down"):
+        p_zero[k] = jnp.zeros_like(p[k])
+    y_without = moe_mod.moe_apply(p_zero, x, cfg)
+    assert float(jnp.abs(y_with - y_without).max()) > 0

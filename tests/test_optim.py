@@ -1,0 +1,108 @@
+"""AdamW vs a trusted reference; schedules; compression."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import adamw as ad
+from repro.optim.adamw import AdamWConfig
+from repro.optim.schedule import warmup_cosine, constant
+from repro.optim import compression as comp
+
+
+def ref_adamw(params, grads, m, v, t, lr, b1, b2, eps, wd):
+    """Textbook AdamW in fp64."""
+    out_p, out_m, out_v = {}, {}, {}
+    for k in params:
+        g = grads[k].astype(np.float64)
+        m_new = b1 * m[k] + (1 - b1) * g
+        v_new = b2 * v[k] + (1 - b2) * g * g
+        mhat = m_new / (1 - b1 ** t)
+        vhat = v_new / (1 - b2 ** t)
+        p = params[k].astype(np.float64)
+        out_p[k] = p - lr * (mhat / (np.sqrt(vhat) + eps) + wd * p)
+        out_m[k], out_v[k] = m_new, v_new
+    return out_p, out_m, out_v
+
+
+def test_adamw_matches_reference():
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.asarray(rng.standard_normal((4, 5)).astype(np.float32)),
+              "b": jnp.asarray(rng.standard_normal(5).astype(np.float32))}
+    grads = jax.tree.map(
+        lambda p: jnp.asarray(rng.standard_normal(p.shape).astype(np.float32)),
+        params)
+    cfg = AdamWConfig(lr=1e-2, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+                      grad_clip=0.0, use_master=False)
+    state = ad.init(params, cfg)
+    new_p, new_state, stats = ad.update(grads, state, params, cfg)
+    m0 = {k: np.zeros(v.shape) for k, v in params.items()}
+    ref_p, _, _ = ref_adamw(
+        {k: np.asarray(v) for k, v in params.items()},
+        {k: np.asarray(v) for k, v in grads.items()},
+        m0, dict(m0), 1, 1e-2, 0.9, 0.95, 1e-8, 0.1)
+    for k in params:
+        np.testing.assert_allclose(np.asarray(new_p[k]), ref_p[k],
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_grad_clip_bounds_update():
+    params = {"w": jnp.ones((10,), jnp.float32)}
+    grads = {"w": jnp.full((10,), 1e6, jnp.float32)}
+    cfg = AdamWConfig(lr=1e-2, grad_clip=1.0, weight_decay=0.0,
+                      use_master=False)
+    state = ad.init(params, cfg)
+    new_p, _, stats = ad.update(grads, state, params, cfg)
+    assert float(stats["grad_norm"]) > 1e5
+    assert np.all(np.isfinite(np.asarray(new_p["w"])))
+
+
+def test_master_weights_accumulate_small_updates():
+    """bf16 params lose sub-eps updates; the fp32 master must not."""
+    params = {"w": jnp.ones((8,), jnp.bfloat16)}
+    cfg = AdamWConfig(lr=1e-6, weight_decay=0.0, grad_clip=0.0,
+                      use_master=True)
+    state = ad.init(params, cfg)
+    g = {"w": jnp.full((8,), 0.1, jnp.float32)}
+    p = params
+    for _ in range(5):
+        p, state, _ = ad.update(g, state, p, cfg)
+    master = np.asarray(state["master"]["w"])
+    assert np.all(master < 1.0)          # master moved
+    assert master.dtype == np.float32
+
+
+def test_schedules():
+    s = warmup_cosine(1.0, 10, 100)
+    assert float(s(jnp.asarray(5))) < 1.0
+    assert abs(float(s(jnp.asarray(10))) - 1.0) < 0.01
+    assert float(s(jnp.asarray(100))) < 0.2
+    assert float(constant(0.3)(jnp.asarray(7))) == np.float32(0.3)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([64, 256]))
+def test_quantize_roundtrip_error_bound(seed, block):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(300).astype(np.float32) * 10.0 ** rng.integers(-3, 3)
+    q, scale, meta = comp.quantize(jnp.asarray(x), block)
+    x_hat = np.asarray(comp.dequantize(q, scale, meta))
+    assert x_hat.shape == x.shape
+    # per-block error <= scale/2 (one quantization step)
+    err = np.abs(x_hat - x)
+    bound = np.repeat(np.asarray(scale).ravel(),
+                      block)[: x.size] * 0.5 + 1e-12
+    assert np.all(err <= bound)
+
+
+def test_error_feedback_is_unbiased_over_time():
+    """Constant gradient: EF compensates so the mean applied grad converges."""
+    g = jnp.full((512,), 0.37, jnp.float32)
+    err = jnp.zeros((512,), jnp.float32)
+    cfg = comp.CompressionConfig(block=128)
+    total = np.zeros(512)
+    n = 50
+    for _ in range(n):
+        g_hat, err = comp.compress_leaf(g, err, cfg)
+        total += np.asarray(g_hat, np.float64)
+    np.testing.assert_allclose(total / n, 0.37, rtol=1e-3)

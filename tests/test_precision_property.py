@@ -1,0 +1,84 @@
+"""Hypothesis property tests for the bf16 splitting invariants (paper Eq. 6-8
+adapted; DESIGN.md §2)."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import (split2, split3, reconstruct,
+                        SPLIT2_REL_ERR, SPLIT3_REL_ERR, tc_matmul)
+
+BOUND = float(2.0 ** 100)
+finite_f32 = hnp.arrays(
+    np.float32, hnp.array_shapes(min_dims=1, max_dims=2, max_side=32),
+    elements=st.floats(-BOUND, BOUND, width=32, allow_nan=False,
+                       allow_infinity=False))
+
+
+@settings(max_examples=200, deadline=None)
+@given(finite_f32)
+def test_split2_reconstruction_bound(a):
+    hi, lo = split2(jnp.asarray(a))
+    rec = np.asarray(reconstruct(hi, lo))
+    err = np.abs(rec - a)
+    bound = SPLIT2_REL_ERR * np.maximum(np.abs(a), np.finfo(np.float32).tiny)
+    assert np.all(err <= bound + 1e-38), (err.max(), bound.max())
+
+
+@settings(max_examples=200, deadline=None)
+@given(finite_f32)
+def test_split3_reconstruction_bound(a):
+    words = split3(jnp.asarray(a))
+    rec = np.asarray(reconstruct(*words))
+    err = np.abs(rec - a)
+    bound = SPLIT3_REL_ERR * np.maximum(np.abs(a), np.finfo(np.float32).tiny)
+    assert np.all(err <= bound + 1e-38)
+
+
+@settings(max_examples=100, deadline=None)
+@given(finite_f32)
+def test_split_words_ordered(a):
+    """|hi| >= |mid| >= |lo| within the split (magnitude ordering)."""
+    hi, mid, lo = split3(jnp.asarray(a))
+    h, m, l = (np.abs(np.asarray(w, np.float32)) for w in (hi, mid, lo))
+    nz = h > 0
+    assert np.all(m[nz] <= h[nz] * 2.0 ** -7)   # bf16 has 8 mantissa bits
+    nz2 = m > 0
+    assert np.all(l[nz2] <= m[nz2] * 2.0 ** -7)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 24), st.integers(2, 24), st.integers(2, 24),
+       st.integers(0, 2 ** 31 - 1))
+def test_tcec_policy_error_ladder(m, k, n, seed):
+    """Error decreases monotonically with pass count: x1 >= x3 >= x6 (~fp32)."""
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    b = rng.standard_normal((k, n)).astype(np.float32)
+    ref = a.astype(np.float64) @ b.astype(np.float64)
+    scale = np.max(np.abs(ref)) + 1e-30
+
+    def err(policy):
+        out = np.asarray(tc_matmul(jnp.asarray(a), jnp.asarray(b), policy))
+        return np.max(np.abs(out - ref)) / scale
+
+    e1, e3, e6 = err("bf16x1"), err("bf16x3"), err("bf16x6")
+    assert e6 <= e3 * 1.5 + 1e-7
+    assert e3 <= e1 * 1.5 + 1e-7
+    assert e6 < 64 * np.finfo(np.float32).eps * max(k, 4) ** 0.5
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_tcec_matches_fp32_accuracy(seed):
+    """Paper headline: emulation accuracy ~= native fp32 (cuBLAS level)."""
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((48, 64)).astype(np.float32)
+    b = rng.standard_normal((64, 32)).astype(np.float32)
+    ref = a.astype(np.float64) @ b.astype(np.float64)
+    scale = np.max(np.abs(ref)) + 1e-30
+    e_tcec = np.max(np.abs(np.asarray(
+        tc_matmul(jnp.asarray(a), jnp.asarray(b), "bf16x6")) - ref)) / scale
+    e_fp32 = np.max(np.abs(
+        (a.astype(np.float32) @ b.astype(np.float32)) - ref)) / scale
+    assert e_tcec <= max(e_fp32 * 4.0, 1e-6)

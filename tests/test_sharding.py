@@ -1,0 +1,130 @@
+"""Logical-axis sharding rules: divisibility, conflicts, fallbacks; plus
+multi-device partitioning correctness in a subprocess."""
+import numpy as np
+import pytest
+import jax
+from jax.sharding import PartitionSpec as P
+
+from subproc import run_python
+
+
+def mesh_2x2():
+    # 1-device "mesh shapes" object is enough for rule resolution tests
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 4, "model": 16}
+    return FakeMesh()
+
+
+def mesh_pod():
+    class FakeMesh:
+        axis_names = ("pod", "data", "model")
+        shape = {"pod": 2, "data": 16, "model": 16}
+    return FakeMesh()
+
+
+def test_spec_divisibility():
+    from repro.parallel.sharding import spec_for
+    m = mesh_2x2()
+    # vocab divisible -> model; not divisible -> None
+    assert spec_for((160000, 64), ("vocab", "embed"), m) == P("model", "data")
+    assert spec_for((51865, 64), ("vocab", "embed"), m) == P(None, "data")
+    # heads=14 not divisible by 16 -> unsharded
+    assert spec_for((8, 32, 14, 64), ("batch", None, "heads", None), m) \
+        == P("data", None, None, None)
+
+
+def test_axis_conflict_resolution():
+    from repro.parallel.sharding import spec_for
+    m = mesh_2x2()
+    # two dims both wanting "model": only the first gets it
+    spec = spec_for((64, 64), ("mlp", "heads"), m)
+    assert spec == P("model", None)
+
+
+def test_seq_fallback_for_bs1():
+    from repro.parallel.sharding import spec_for
+    m = mesh_pod()
+    # batch=1 can't shard -> seq takes the full fsdp group
+    spec = spec_for((1, 524288, 8, 128), ("batch", "seq", "kv", None), m)
+    assert spec == P(None, ("pod", "data"), None, None)
+    # batch=128 shards -> seq falls back to ("data",) only
+    spec2 = spec_for((128, 32768, 8, 128), ("batch", "seq", "kv", None), m)
+    assert spec2[0] == ("pod", "data")
+
+
+def test_param_pspecs_cover_all_leaves():
+    from repro.configs import get_config
+    from repro.parallel.sharding import param_pspecs
+    from repro.models import abstract_params
+    m = mesh_pod()
+    for arch in ("gemma-7b", "deepseek-v2-236b", "jamba-1.5-large-398b"):
+        cfg = get_config(arch)
+        specs = param_pspecs(cfg, m)
+        shapes = abstract_params(cfg)
+        flat_specs = jax.tree.flatten(
+            specs, is_leaf=lambda x: isinstance(x, P))[0]
+        flat_shapes = jax.tree.leaves(shapes)
+        assert len(flat_specs) == len(flat_shapes)
+        for sp, sh in zip(flat_specs, flat_shapes):
+            assert isinstance(sp, P)
+            assert len(sp) == len(sh.shape)
+
+
+def test_fsdp_shards_big_params():
+    """Every >=2-D weight of a big config must be sharded on some axis
+    (otherwise the 398B config cannot fit)."""
+    from repro.configs import get_config
+    from repro.parallel.sharding import param_pspecs
+    from repro.models import abstract_params
+    m = mesh_pod()
+    cfg = get_config("jamba-1.5-large-398b")
+    specs = param_pspecs(cfg, m)
+    shapes = abstract_params(cfg)
+    flat = list(zip(jax.tree.flatten(specs, is_leaf=lambda x: isinstance(x, P))[0],
+                    jax.tree.leaves(shapes)))
+    unsharded_big = [
+        (sp, sh.shape) for sp, sh in flat
+        if np.prod(sh.shape) > 64e6 and all(a is None for a in sp)]
+    assert not unsharded_big, unsharded_big[:5]
+
+
+def test_multi_device_train_step_matches_single():
+    """The sharded train step computes the same loss as single-device."""
+    run_python("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import get_config
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_mesh
+from repro.optim.adamw import AdamWConfig
+from repro.models.base import activation_sharding
+from repro.parallel import sharding as shd
+
+cfg = get_config("qwen2-0.5b", reduced=True)
+opt_cfg = AdamWConfig(lr=1e-3)
+state = steps_mod.init_train_state(jax.random.PRNGKey(0), cfg, opt_cfg)
+batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 64), 0, cfg.vocab),
+         "labels": jax.random.randint(jax.random.PRNGKey(2), (8, 64), 0, cfg.vocab)}
+step = steps_mod.make_train_step(cfg, opt_cfg)
+
+# single device
+_, m1 = jax.jit(step)(jax.tree.map(lambda x: x, state), batch)
+loss1 = float(m1["loss"])
+
+# 2x4 mesh, sharded
+mesh = make_mesh((2, 4), ("data", "model"))
+ps = steps_mod.train_state_pspecs(cfg, opt_cfg, mesh)
+sh = jax.tree.map(lambda p: NamedSharding(mesh, p), ps,
+                  is_leaf=lambda x: isinstance(x, P))
+state_sharded = jax.device_put(state, sh)
+bs = shd.batch_pspecs(batch, mesh)
+bsh = jax.tree.map(lambda p: NamedSharding(mesh, p), bs,
+                   is_leaf=lambda x: isinstance(x, P))
+batch_sharded = jax.device_put(batch, bsh)
+with mesh, activation_sharding(mesh):
+    _, m2 = jax.jit(step, in_shardings=(sh, bsh))(state_sharded, batch_sharded)
+loss2 = float(m2["loss"])
+assert abs(loss1 - loss2) < 5e-2, (loss1, loss2)
+print("OK", loss1, loss2)
+""", devices=8)
