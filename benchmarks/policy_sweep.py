@@ -1,0 +1,50 @@
+"""Registry-driven policy sweep through the scoped-resolution API.
+
+Every policy in the registry (built-in presets plus anything added via
+``register_policy``) is swept over the *same* context-resolved matmul: the
+benchmark body never names a policy — ``policy_scope(name)`` is the only
+switch.  This is the per-instruction-mode comparison harness (Sun et al.,
+arXiv:2206.02874) on top of the paper's policy template: registering a new
+policy makes it show up here with zero benchmark changes.
+
+Reported per policy: host wall time per call (CPU, directional only), max
+relative error vs an fp64 oracle, and the policy's MXU-pass multiplier.
+"""
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import tc_matmul, policy_scope, registered_policies, get_policy
+
+M = K = N = 256
+REPS = 5
+
+
+def _bench_one(a, b, ref, scale):
+    # The workload under test never names a policy: context-resolved.
+    fn = jax.jit(lambda x, y: tc_matmul(x, y))
+    out = np.asarray(fn(a, b))          # compile + policy resolution at trace
+    t0 = time.perf_counter()
+    for _ in range(REPS):
+        fn(a, b).block_until_ready()
+    dt_us = (time.perf_counter() - t0) / REPS * 1e6
+    return dt_us, float(np.max(np.abs(out - ref)) / scale)
+
+
+def run():
+    rng = np.random.default_rng(7)
+    a = jnp.asarray(rng.standard_normal((M, K)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((K, N)).astype(np.float32))
+    ref = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+    scale = np.max(np.abs(ref)) + 1e-30
+
+    rows = []
+    for name in registered_policies():
+        with policy_scope(name):
+            dt_us, err = _bench_one(a, b, ref, scale)
+        rows.append((f"{name}_us", dt_us))
+        rows.append((f"{name}_max_rel_err", err))
+        rows.append((f"{name}_mxu_passes", float(get_policy(name).flops_multiplier())))
+    return rows

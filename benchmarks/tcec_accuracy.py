@@ -8,7 +8,7 @@ This is a REAL measured reproduction — it runs the actual arithmetic."""
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import tc_matmul
+from repro.core import tc_matmul, policy_scope
 
 
 def max_rel_err(out, ref):
@@ -25,9 +25,12 @@ def run():
         ref = a.astype(np.float64) @ b.astype(np.float64)
         fp32 = max_rel_err(a @ b, ref)
         rows.append((f"k{k}_fp32_simt_err", fp32))
+        # policy selection via the scoped API — the measured call never
+        # names a policy, the scope is the only switch.
         for pol in ("bf16x1", "bf16x3", "bf16x6", "bf16x9"):
-            e = max_rel_err(np.asarray(
-                tc_matmul(jnp.asarray(a), jnp.asarray(b), pol)), ref)
+            with policy_scope(pol):
+                e = max_rel_err(np.asarray(
+                    tc_matmul(jnp.asarray(a), jnp.asarray(b))), ref)
             rows.append((f"k{k}_{pol}_err", e))
         e6 = max_rel_err(np.asarray(
             tc_matmul(jnp.asarray(a), jnp.asarray(b), "bf16x6")), ref)

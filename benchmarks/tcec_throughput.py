@@ -7,6 +7,7 @@ the *compiled kernel's real VMEM working set* (BlockSpec shapes), plus the
 relative host-CPU wall time of the fused vs staged pallas kernels
 (interpret mode, directional only) and their HBM-traffic ratio from the
 HLO byte analysis."""
+import dataclasses
 import time
 
 import numpy as np
@@ -19,22 +20,20 @@ from repro.core.policy import get_policy
 
 
 def staged_vs_fused_hbm_bytes(m=2048, k=2048, n=2048, policy="bf16x6"):
-    """HBM traffic of the XLA-compiled staged vs fused TCEC matmul."""
+    """HBM traffic of the XLA-compiled staged vs fused TCEC matmul.
+
+    Policies are hashable values now, so ad-hoc variants are passed straight
+    through — no registry mutation."""
     from repro.launch import hlo_cost
     a = jax.ShapeDtypeStruct((m, k), jnp.float32)
     b = jax.ShapeDtypeStruct((k, n), jnp.float32)
     out = {}
     for frag in ("on_the_fly", "staged"):
-        pol = get_policy(policy)
-        pol = type(pol)(passes=pol.passes, backend=pol.backend,
-                        fragment_gen=frag)
-        import repro.core.policy as pm
-        pm.PRESETS["_bench_tmp"] = pol
-        comp = jax.jit(lambda x, y: tc_matmul(x, y, "_bench_tmp")).lower(
-            a, b).compile()
+        pol = dataclasses.replace(get_policy(policy), fragment_gen=frag)
+        comp = jax.jit(
+            lambda x, y, pol=pol: tc_matmul(x, y, pol)).lower(a, b).compile()
         res = hlo_cost.analyze(comp.as_text())
         out[frag] = res.hbm_bytes
-        del pm.PRESETS["_bench_tmp"]
     return out
 
 

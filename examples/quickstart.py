@@ -6,12 +6,16 @@
    staging split matrices (WMMAe-TCEC, TPU-adapted).
 2. foreach_ij — structured operands generated from rules in registers
    (no memory staging): triangular scan, Householder, Givens.
+3. The scoped policy API — which TCEC policy runs where, selected by
+   context (global default / policy_scope / per-site overrides), never by
+   threading strings through call signatures.
 """
 import numpy as np
 import jax.numpy as jnp
 
 from repro.core import (tc_matmul, split3, reconstruct, foreach_ij,
-                        triangular_ones, householder, givens)
+                        triangular_ones, householder, givens,
+                        policy_scope, resolve, register_policy, TcecPolicy)
 from repro.core import roofline as rl
 
 
@@ -50,6 +54,27 @@ def main():
           np.isclose(np.linalg.det(np.asarray(g)), 1.0, atol=1e-5))
     checker = foreach_ij(lambda i, j: ((i + j) % 2).astype(jnp.float32), 4, 4)
     print("  arbitrary rule (checkerboard):\n", np.asarray(checker))
+
+    print("\n== scoped policy API: three tiers, zero threaded strings ==")
+    def rel_err(out):
+        return np.max(np.abs(np.asarray(out) - ref)) / scale
+    aj, bj = jnp.asarray(a), jnp.asarray(b)
+    # Tier 1 — global default (ships as bf16x1, plain mixed precision).
+    print(f"  tier 1 global default {resolve()!r}: "
+          f"err={rel_err(tc_matmul(aj, bj)):.2e}")
+    # Tier 2 — policy_scope: sweep policies over unmodified code.
+    for name in ("bf16x3", "bf16x6"):
+        with policy_scope(name):
+            print(f"  tier 2 policy_scope({name!r}):   "
+                  f"err={rel_err(tc_matmul(aj, bj)):.2e}")
+    # Tier 3 — named-site overrides: one scope, different policy per site.
+    with policy_scope("bf16x1", lm_head="bf16x6"):
+        print(f"  tier 3 site overrides: bulk={resolve().passes} passes, "
+              f"lm_head={resolve('lm_head').passes} passes")
+    # Custom policies join every tier through the registry.
+    register_policy("demo_staged_x3", TcecPolicy(passes=3, fragment_gen="staged"))
+    with policy_scope("demo_staged_x3"):
+        print(f"  registered policy resolves:  {resolve()!r}")
 
     print("\n== why it matters (paper §3, v5e numbers) ==")
     for frag in ("staged", "on_the_fly"):

@@ -33,7 +33,7 @@ def tiny_100m() -> ArchConfig:
         d_ff=3072, vocab=32768,
         pattern=(BlockSpec("attn", "dense"),),
         act="silu", qkv_bias=True, tie_embeddings=True,
-        remat="none", logits_policy="bf16x3",
+        remat="none", policy_overrides={"lm_head": "bf16x3"},
     )
 
 

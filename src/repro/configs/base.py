@@ -10,7 +10,8 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Dict, Optional, Sequence, Tuple
+import warnings
+from typing import Dict, Mapping, Optional, Sequence, Tuple
 
 # Mixer kinds: attn | mla | mamba | mlstm | slstm | none
 # FFN kinds:   dense | moe | none
@@ -31,6 +32,7 @@ class MoeConfig:
     d_ff_shared: int = 0          # per shared expert; 0 -> use d_ff_expert
     capacity_factor: float = 1.25
     group_size: int = 1024        # routing group (tokens) for dispatch einsum
+    # DEPRECATED: use ArchConfig.policy_overrides={"router": ...} instead.
     router_policy: str = "bf16x3"  # TCEC policy for routing logits (fp32-acc)
 
 
@@ -89,10 +91,27 @@ class ArchConfig:
     vision_tokens: int = 0
     # Precision / paper-technique policy.
     param_dtype: str = "bfloat16"
+    # DEPRECATED string-threaded policy fields — still honored (mapped into
+    # the site-defaults tier by site_policies()) but superseded by
+    # ``policy_overrides``.  Scheduled for removal; new code should use
+    # ``policy_overrides`` or wrap runs in ``repro.core.policy_scope``.
     matmul_policy: str = "bf16x1"     # bulk dense layers
     logits_policy: str = "bf16x3"     # LM head (TCEC fp32-accurate)
+    # Site -> policy-name defaults consumed by repro.core.context.  Keys are
+    # site tags ("lm_head", "router", "attn", ...) plus "default" for the
+    # bulk policy.  Any active policy_scope overrides these.  A Mapping is
+    # accepted at construction and normalized to a sorted tuple of pairs in
+    # __post_init__ so the frozen config stays hashable.
+    policy_overrides: Tuple[Tuple[str, str], ...] = ()
     remat: str = "full"               # full | dots | none
     sub_quadratic: bool = False       # supports long_500k decode
+
+    def __post_init__(self):
+        ov = self.policy_overrides
+        if isinstance(ov, Mapping):
+            ov = ov.items()
+        object.__setattr__(self, "policy_overrides",
+                           tuple(sorted((str(k), v) for k, v in ov)))
 
     # ---- derived ----
     @property
@@ -109,8 +128,39 @@ class ArchConfig:
             f"{self.name}: {self.n_layers} layers not divisible by pattern {self.group_len}"
         return self.n_layers // self.group_len
 
+    def site_policies(self) -> Dict[str, str]:
+        """Site->policy defaults for ``repro.core.context.policy_defaults``.
+
+        Merges the deprecated string-threaded fields (``matmul_policy`` ->
+        the bulk "default", ``logits_policy`` -> "lm_head",
+        ``moe.router_policy`` -> "router") under ``policy_overrides``, which
+        always wins.  Deviating from a legacy field's default without a
+        matching ``policy_overrides`` entry emits a DeprecationWarning."""
+        legacy = {"default": ("matmul_policy", self.matmul_policy, "bf16x1"),
+                  "lm_head": ("logits_policy", self.logits_policy, "bf16x3")}
+        if self.moe is not None:
+            legacy["router"] = ("moe.router_policy",
+                                self.moe.router_policy, "bf16x3")
+        overrides = dict(self.policy_overrides)
+        out: Dict[str, str] = {}
+        for site, (field_name, value, default) in legacy.items():
+            if value != default and site not in overrides:
+                warnings.warn(
+                    f"{self.name}: config field {field_name!r} is deprecated; "
+                    f"use policy_overrides={{{site!r}: {value!r}}} or wrap the "
+                    f"run in repro.core.policy_scope",
+                    DeprecationWarning, stacklevel=2)
+            out[site] = value
+        out.update(overrides)
+        return out
+
     def validate(self) -> None:
         _ = self.n_groups
+        from repro.core.policy import get_policy
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            for site, pol in self.site_policies().items():
+                get_policy(pol)   # fail fast on unknown policy names
         if any(b.ffn == "moe" for b in self.pattern):
             assert self.moe is not None, f"{self.name}: moe pattern without MoeConfig"
         if any(b.mixer == "mla" for b in self.pattern):

@@ -1,14 +1,20 @@
 """Core library: the paper's contribution as composable JAX modules.
 
 * ``precision`` — bf16 multi-word splits (TPU analogue of fp16+Delta).
-* ``policy``    — TCEC policy objects (pass count / backend / fragment gen).
+* ``policy``    — TCEC policy objects + the name registry.
+* ``context``   — scoped policy resolution (policy_scope / resolve / sites).
 * ``tcec``      — error-corrected matmul emulation (custom_vjp).
 * ``fragment``  — foreach_ij / map: structured operand generation in registers.
 * ``roofline``  — paper §3 roofline algebra + cluster three-term roofline.
 """
 from .policy import (
     TcecPolicy, get_policy, PRESETS,
+    register_policy, unregister_policy, registered_policies,
     BF16X1, BF16X3, BF16X6, BF16X9, FP32_VPU, BF16X3_STAGED, BF16X6_STAGED,
+)
+from .context import (
+    PolicyResolver, policy_scope, policy_defaults, resolve, resolve_policy,
+    set_global_default, default_resolver,
 )
 from .precision import split2, split3, reconstruct, SPLIT2_REL_ERR, SPLIT3_REL_ERR
 from .tcec import tc_matmul, tc_dot_general, split_words

@@ -15,11 +15,19 @@ Core vs software systolic backend.  The TPU translation:
                        baseline: split words materialized in the staging
                        memory tier; forced with an optimization barrier so
                        XLA cannot silently fuse them away).
+
+Policies live in a single process-wide *registry*: the seven built-in presets
+plus anything added via ``register_policy(name, TcecPolicy(...))``.  ``PRESETS``
+is a read-only live view of that registry, so user registrations are visible
+everywhere a name is resolved (``get_policy``, ``repro.core.context``).
+Scoped resolution (``policy_scope`` / ``resolve``) lives in
+``repro.core.context``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Literal
+import types
+from typing import Dict, Literal, Tuple
 
 Backend = Literal["mxu", "vpu"]
 FragmentGen = Literal["on_the_fly", "staged"]
@@ -65,7 +73,10 @@ FP32_VPU = TcecPolicy(passes=1, backend="vpu")           # "FP32 SIMT" analogue
 BF16X3_STAGED = TcecPolicy(passes=3, fragment_gen="staged")
 BF16X6_STAGED = TcecPolicy(passes=6, fragment_gen="staged")
 
-PRESETS = {
+# ---------------------------------------------------------------------------
+# Registry: built-in presets + user registrations, one namespace.
+# ---------------------------------------------------------------------------
+_REGISTRY: Dict[str, TcecPolicy] = {
     "bf16x1": BF16X1,
     "bf16x3": BF16X3,
     "bf16x6": BF16X6,
@@ -74,12 +85,58 @@ PRESETS = {
     "bf16x3_staged": BF16X3_STAGED,
     "bf16x6_staged": BF16X6_STAGED,
 }
+_BUILTIN_NAMES = frozenset(_REGISTRY)
+
+# Read-only live view of the registry.  Mutating it raises TypeError; user
+# registrations made through register_policy() appear here immediately, so
+# the preset table and the registry cannot drift apart.
+PRESETS: types.MappingProxyType = types.MappingProxyType(_REGISTRY)
+
+
+def register_policy(name: str, policy: TcecPolicy, *,
+                    overwrite: bool = False) -> TcecPolicy:
+    """Register a custom policy under ``name`` (e.g. a bespoke pass schedule
+    point or a staged baseline variant) so it can be resolved anywhere a
+    policy name is accepted — ``get_policy``, ``policy_scope``, config
+    ``policy_overrides``, benchmark sweeps.
+
+    Raises on duplicate names unless ``overwrite=True``; built-in presets can
+    never be replaced.
+    """
+    if not isinstance(name, str) or not name:
+        raise TypeError(f"policy name must be a non-empty str, got {name!r}")
+    if not isinstance(policy, TcecPolicy):
+        raise TypeError(f"policy must be a TcecPolicy, got {type(policy).__name__}")
+    if name in _BUILTIN_NAMES:
+        raise ValueError(f"cannot overwrite built-in policy {name!r}")
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(
+            f"policy {name!r} is already registered; pass overwrite=True to "
+            f"replace it")
+    _REGISTRY[name] = policy
+    return policy
+
+
+def unregister_policy(name: str) -> None:
+    """Remove a user-registered policy.  Built-ins are protected."""
+    if name in _BUILTIN_NAMES:
+        raise ValueError(f"cannot unregister built-in policy {name!r}")
+    if name not in _REGISTRY:
+        raise KeyError(f"policy {name!r} is not registered")
+    del _REGISTRY[name]
+
+
+def registered_policies() -> Tuple[str, ...]:
+    """All resolvable policy names (built-in presets + user-registered)."""
+    return tuple(sorted(_REGISTRY))
 
 
 def get_policy(name_or_policy) -> TcecPolicy:
     if isinstance(name_or_policy, TcecPolicy):
         return name_or_policy
     try:
-        return PRESETS[name_or_policy]
-    except KeyError:
-        raise KeyError(f"unknown TCEC policy {name_or_policy!r}; known: {sorted(PRESETS)}")
+        return _REGISTRY[name_or_policy]
+    except (KeyError, TypeError):
+        raise KeyError(
+            f"unknown TCEC policy {name_or_policy!r}; registered policies: "
+            f"{sorted(_REGISTRY)}") from None

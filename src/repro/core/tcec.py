@@ -23,6 +23,13 @@ flow: splits stay fusible into the matmul operands (and the Pallas kernel in
 The function is differentiable: a ``custom_vjp`` runs the backward matmuls
 through the same machinery, so a model trained with a TCEC policy uses the
 emulation end-to-end.
+
+``policy`` may be a preset/registered name, a ``TcecPolicy`` instance, or
+``None`` — in which case the policy is resolved from the active
+``repro.core.context`` scope for the (optional) ``site`` tag.  Resolution
+happens before tracing-sensitive machinery (the custom_vjp static argument is
+always the concrete ``TcecPolicy``), so jit caches key on the resolved policy,
+never on the mutable context.
 """
 from __future__ import annotations
 
@@ -33,6 +40,7 @@ import jax
 import jax.numpy as jnp
 
 from .policy import TcecPolicy, get_policy
+from .context import resolve_policy
 from .precision import split2, split3
 
 __all__ = ["tc_matmul", "tc_dot_general", "split_words"]
@@ -82,10 +90,13 @@ def tc_dot_general(
     a: jnp.ndarray,
     b: jnp.ndarray,
     dimension_numbers,
-    policy: TcecPolicy | str = "bf16x6",
+    policy: TcecPolicy | str | None = None,
+    site: Optional[str] = None,
 ) -> jnp.ndarray:
-    """Policy-dispatched dot_general (no custom_vjp — used as the primitive)."""
-    policy = get_policy(policy)
+    """Policy-dispatched dot_general (no custom_vjp — used as the primitive).
+
+    ``policy=None`` resolves from the active policy context for ``site``."""
+    policy = resolve_policy(policy, site)
     if policy.backend == "vpu":
         # "FP32 SIMT" analogue: plain FP32 dot on the vector unit.
         return _dot(a.astype(jnp.float32), b.astype(jnp.float32),
@@ -115,19 +126,27 @@ def _matmul_dims(a_ndim: int, b_ndim: int):
     )
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
-def tc_matmul(a: jnp.ndarray, b: jnp.ndarray, policy: str = "bf16x6") -> jnp.ndarray:
+def tc_matmul(a: jnp.ndarray, b: jnp.ndarray,
+              policy: TcecPolicy | str | None = None,
+              site: Optional[str] = None) -> jnp.ndarray:
     """Emulated FP32 matmul ``a @ b`` on the MXU.
 
     a: (..., m, k)  b: (k, n) or (..., k, n)  ->  (..., m, n) float32.
-    ``policy`` is a preset name (hashable — required for custom_vjp static arg).
-    """
+    ``policy`` is a registered name, a ``TcecPolicy``, or ``None`` (resolve
+    from the active policy context for ``site``)."""
+    return _tc_matmul(a, b, resolve_policy(policy, site))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _tc_matmul(a: jnp.ndarray, b: jnp.ndarray, policy: TcecPolicy) -> jnp.ndarray:
+    # policy is the concrete (frozen, hashable) TcecPolicy: the custom_vjp
+    # static argument never depends on the mutable context.
     dn = _matmul_dims(a.ndim, b.ndim)
     return tc_dot_general(a, b, dn, policy)
 
 
 def _tc_matmul_fwd(a, b, policy):
-    return tc_matmul(a, b, policy), (a, b)
+    return _tc_matmul(a, b, policy), (a, b)
 
 
 def _tc_matmul_bwd(policy, res, g):
@@ -150,4 +169,4 @@ def _tc_matmul_bwd(policy, res, g):
     return da.astype(a.dtype), db.astype(b.dtype)
 
 
-tc_matmul.defvjp(_tc_matmul_fwd, _tc_matmul_bwd)
+_tc_matmul.defvjp(_tc_matmul_fwd, _tc_matmul_bwd)

@@ -10,6 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.context import resolve_policy
 from repro.core.tcec import tc_matmul
 from . import ref as _ref
 from .tcec_matmul import tcec_matmul_pallas, tcec_matmul_staged
@@ -26,12 +27,15 @@ def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def tcec_matmul(a, b, policy: str = "bf16x6", *, force_pallas: bool = False,
-                interpret: bool = False):
-    """Error-corrected emulated-FP32 matmul; Pallas on TPU, jnp elsewhere."""
+def tcec_matmul(a, b, policy=None, *, site: str | None = None,
+                force_pallas: bool = False, interpret: bool = False):
+    """Error-corrected emulated-FP32 matmul; Pallas on TPU, jnp elsewhere.
+
+    ``policy=None`` resolves from the active policy context for ``site``."""
+    pol = resolve_policy(policy, site)
     if on_tpu() or force_pallas or interpret:
-        return tcec_matmul_pallas(a, b, policy, interpret=interpret or not on_tpu())
-    return tc_matmul(a, b, policy)
+        return tcec_matmul_pallas(a, b, pol, interpret=interpret or not on_tpu())
+    return tc_matmul(a, b, pol)
 
 
 def householder(v, a, *, force_pallas: bool = False, interpret: bool = False):

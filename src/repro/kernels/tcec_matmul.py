@@ -34,7 +34,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.policy import TcecPolicy, get_policy
+from repro.core.policy import TcecPolicy
+from repro.core.context import resolve_policy
 from repro.core.tcec import _SCHEDULES, split_words
 
 __all__ = ["tcec_matmul_pallas", "tcec_matmul_staged", "default_blocks"]
@@ -118,16 +119,25 @@ def _compiler_params():
             dimension_semantics=("parallel", "parallel", "arbitrary"))
 
 
-@functools.partial(jax.jit, static_argnames=("policy", "block", "interpret"))
 def tcec_matmul_pallas(a: jnp.ndarray, b: jnp.ndarray,
-                       policy: str = "bf16x6",
+                       policy: TcecPolicy | str | None = None,
                        block: Tuple[int, int, int] | None = None,
                        interpret: bool = False) -> jnp.ndarray:
     """C = A @ B with FP32-level accuracy via in-kernel bf16 splitting.
 
-    a: (m, k) fp32, b: (k, n) fp32 -> (m, n) fp32.
+    a: (m, k) fp32, b: (k, n) fp32 -> (m, n) fp32.  ``policy=None`` resolves
+    from the active policy context *before* the jit boundary, so the compile
+    cache keys on the concrete policy, never on the mutable context.
     """
-    pol = get_policy(policy)
+    return _tcec_matmul_pallas(a, b, resolve_policy(policy), block, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("policy", "block", "interpret"))
+def _tcec_matmul_pallas(a: jnp.ndarray, b: jnp.ndarray,
+                        policy: TcecPolicy,
+                        block: Tuple[int, int, int] | None = None,
+                        interpret: bool = False) -> jnp.ndarray:
+    pol = policy
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)
@@ -154,14 +164,21 @@ def tcec_matmul_pallas(a: jnp.ndarray, b: jnp.ndarray,
     )(a.astype(jnp.float32), b.astype(jnp.float32))
 
 
-@functools.partial(jax.jit, static_argnames=("policy", "block", "interpret"))
 def tcec_matmul_staged(a: jnp.ndarray, b: jnp.ndarray,
-                       policy: str = "bf16x6",
+                       policy: TcecPolicy | str | None = None,
                        block: Tuple[int, int, int] | None = None,
                        interpret: bool = False) -> jnp.ndarray:
     """WMMA-API-baseline data flow: split words are materialized in HBM and
     each streamed through VMEM as its own staged buffer (Fig. 6, top)."""
-    pol = get_policy(policy)
+    return _tcec_matmul_staged(a, b, resolve_policy(policy), block, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("policy", "block", "interpret"))
+def _tcec_matmul_staged(a: jnp.ndarray, b: jnp.ndarray,
+                        policy: TcecPolicy,
+                        block: Tuple[int, int, int] | None = None,
+                        interpret: bool = False) -> jnp.ndarray:
+    pol = policy
     m, k = a.shape
     _, n = b.shape
     bm, bn, bk = block or default_blocks(m, n, k)

@@ -34,6 +34,7 @@ os.environ.setdefault("REPRO_MMA_DTYPE", "bfloat16")
 
 from repro.configs import get_config, ARCH_IDS, SHAPES, input_specs, cell_runnable
 from repro.configs.shapes import ShapeSpec
+from repro.launch import add_policy_args, policy_scope_from_args
 from repro.launch.mesh import make_production_mesh
 from repro.launch import steps as steps_mod
 from repro.optim.adamw import AdamWConfig
@@ -337,6 +338,7 @@ def main():
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--skip-existing", action="store_true")
     ap.add_argument("--out", default=str(ARTIFACTS))
+    add_policy_args(ap)
     args = ap.parse_args()
     out_dir = Path(args.out)
 
@@ -360,7 +362,10 @@ def main():
             if prev.get("status") in ("ok", "skipped"):
                 print(f"[cached] {arch} {shape} {mesh_name}", flush=True)
                 continue
-        rec = run_cell(arch, shape, mp, out_dir)
+        # --policy/--site-policy scope each cell's lower+compile, so policy
+        # sweeps of the compiled-artifact grid need no config edits.
+        with policy_scope_from_args(args):
+            rec = run_cell(arch, shape, mp, out_dir)
         if rec["status"] == "error":
             n_err += 1
         else:

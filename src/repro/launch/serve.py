@@ -19,6 +19,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config, ARCH_IDS
 from repro.data.pipeline import make_frontend_inputs
+from repro.launch import add_policy_args, policy_scope_from_args
 from repro.launch.mesh import make_host_mesh
 from repro.models import init_params, prefill, decode_step, init_decode_caches
 from repro.models.base import activation_sharding
@@ -78,6 +79,7 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    add_policy_args(ap)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced)
@@ -94,7 +96,7 @@ def main(argv=None):
     extras = {k: jnp.asarray(v) for k, v in make_frontend_inputs(
         cfg, args.batch, 0, args.seed).items()}
     max_len = args.prompt_len + (cfg.vision_tokens or 0) + args.gen + 1
-    with mesh, activation_sharding(mesh):
+    with policy_scope_from_args(args), mesh, activation_sharding(mesh):
         gen, tps = generate(cfg, params, tokens, max_len, args.gen,
                             batch_extras=extras, greedy=True)
     print(f"generated {gen.shape} tokens at {tps:.1f} tok/s")

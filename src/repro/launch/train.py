@@ -18,6 +18,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config, ARCH_IDS
 from repro.data.pipeline import DataConfig
+from repro.launch import add_policy_args, policy_scope_from_args
 from repro.launch import steps as steps_mod
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models.base import activation_sharding
@@ -40,6 +41,7 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    add_policy_args(ap)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced)
@@ -56,7 +58,9 @@ def main(argv=None):
     state = jax.device_put(state, shardings)
 
     step_fn = steps_mod.make_train_step(cfg, opt_cfg)
-    with mesh, activation_sharding(mesh):
+    # --policy/--site-policy scope the whole run: the step traces (and so
+    # resolves its per-site policies) inside this scope.
+    with policy_scope_from_args(args), mesh, activation_sharding(mesh):
         jit_step = jax.jit(step_fn, in_shardings=(shardings, None),
                            donate_argnums=(0,))
 

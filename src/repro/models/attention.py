@@ -248,7 +248,7 @@ def gqa_apply(p, x: jnp.ndarray, cfg: ArchConfig, positions: jnp.ndarray,
     precomputed cache at decode; no rope)."""
     b, s, d = x.shape
     h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
-    pol = cfg.matmul_policy
+    pol = "attn"
     q = shard_hint(dense(x, p["wq"], pol, p.get("bq")).reshape(b, s, h, hd),
                    "batch", None, "heads", None)
 
@@ -321,7 +321,7 @@ def _mla_q(p, x, cfg):
     b, s, _ = x.shape
     h = cfg.n_heads
     qk = m.qk_nope_head_dim + m.qk_rope_head_dim
-    pol = cfg.matmul_policy
+    pol = "attn"
     if m.q_lora_rank:
         cq = rms_norm(dense(x, p["wq_a"], pol), p["q_norm"], cfg.norm_eps)
         q = dense(cq, p["wq_b"], pol)
@@ -338,7 +338,7 @@ def mla_apply(p, x: jnp.ndarray, cfg: ArchConfig, positions: jnp.ndarray,
     m = cfg.mla
     b, s, d = x.shape
     h = cfg.n_heads
-    pol = cfg.matmul_policy
+    pol = "attn"
     nope, rope_d, vd = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
 
     q_nope, q_rope = _mla_q(p, x, cfg)

@@ -9,9 +9,12 @@ same declaration we derive:
 
 Dense layers route every matmul through the TCEC policy layer
 (``repro.core.tcec``) — the paper's technique as a first-class framework
-feature: ``policy="bf16x1"`` is standard mixed precision; ``"bf16x3/6"``
-runs FP32-accurate error-corrected emulation with on-the-fly splits (no
-staged fp32->bf16 weight copies).
+feature.  Which policy runs is no longer threaded as strings: each ``dense``
+call carries a *site* tag ("attn", "ffn", "router", "lm_head", ...) and the
+policy is resolved from the active ``repro.core.context`` scope — an
+uncorrected ``passes=1`` policy is standard mixed precision; corrected
+policies run FP32-accurate emulation with on-the-fly splits (no staged
+fp32->bf16 weight copies).
 """
 from __future__ import annotations
 
@@ -22,6 +25,8 @@ from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.context import resolve_policy
+from repro.core.policy import PRESETS as _PRESETS, TcecPolicy
 from repro.core.tcec import tc_dot_general
 from repro.core import fragment
 
@@ -113,24 +118,41 @@ def _mm_bf16_bwd(res, g):
 _mm_bf16.defvjp(_mm_bf16_fwd, _mm_bf16_bwd)
 
 
-def dense(x: jnp.ndarray, w: jnp.ndarray, policy: str = "bf16x1",
-          bias: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+def dense(x: jnp.ndarray, w: jnp.ndarray, site: Optional[str] = None,
+          bias: Optional[jnp.ndarray] = None, *,
+          policy=None) -> jnp.ndarray:
     """x (..., d) @ w (d, f) through the TCEC policy layer.
 
-    bf16x1 + bf16 operands -> single MXU pass (standard mixed precision,
-    bf16 backward collectives).  bf16x3/6/9 -> error-corrected emulation,
-    splits fused (never staged).  Output dtype follows x for bf16x1, fp32
-    for corrected policies.
+    The matmul's policy is resolved from the active policy context for the
+    ``site`` tag (an explicit ``policy=`` keyword bypasses the context).
+    Dispatch is on the resolved ``TcecPolicy``: an uncorrected MXU policy
+    (``passes=1``) takes the single-pass fast path (standard mixed precision,
+    bf16 backward collectives); corrected policies run error-corrected
+    emulation with fused splits (never staged).  Output dtype follows x for
+    uncorrected policies, fp32 for corrected ones.
     """
+    if policy is None and site is not None and (
+            isinstance(site, TcecPolicy) or site in _PRESETS):
+        # Legacy positional call dense(x, w, "bf16x6"): the third argument
+        # used to be the policy.  Honor it (rather than silently resolving a
+        # nonexistent site to the global default) but push callers to the
+        # keyword/site API.
+        import warnings
+        warnings.warn(
+            "passing a policy as dense()'s third positional argument is "
+            "deprecated; use dense(x, w, policy=...) or tag a site",
+            DeprecationWarning, stacklevel=2)
+        policy, site = site, None
+    pol: TcecPolicy = resolve_policy(policy, site)
     dn = (((x.ndim - 1,), (0,)), ((), ()))
-    if policy == "bf16x1":
+    if pol.backend == "mxu" and not pol.error_correction:
         if w.dtype == jnp.bfloat16:
             y = _mm_bf16(x.astype(w.dtype), w).astype(x.dtype)
         else:
             y = jax.lax.dot_general(
                 x, w, dn, preferred_element_type=jnp.float32).astype(x.dtype)
     else:
-        y = tc_dot_general(x.astype(jnp.float32), w.astype(jnp.float32), dn, policy)
+        y = tc_dot_general(x.astype(jnp.float32), w.astype(jnp.float32), dn, pol)
     if bias is not None:
         y = y + bias.astype(y.dtype)
     return y

@@ -1,7 +1,8 @@
 """Transformer/hybrid block assembly: (norm -> mixer -> +res) [-> norm -> ffn -> +res].
 
 Block kinds come from ``configs.base.BlockSpec`` (mixer x ffn).  Every dense
-projection routes through the TCEC policy layer.  Each block exposes:
+projection routes through the TCEC policy layer via tagged sites ("attn",
+"ffn", "ssm", ...) resolved from the policy context.  Each block exposes:
   * ``block_param_specs(cfg, spec)``   -> PSpec tree
   * ``block_apply(p, x, cfg, spec, ...)`` -> (y, new_cache)
   * ``block_cache_spec(cfg, spec, b, S)`` -> ShapeDtypeStruct tree (decode)
@@ -30,12 +31,11 @@ def ffn_params(cfg: ArchConfig) -> Dict[str, PSpec]:
 
 def ffn_apply(p, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
     act = act_fn(cfg.act)
-    pol = cfg.matmul_policy
     # gating arithmetic in the compute dtype (bf16): matmuls already
     # accumulate fp32 internally; fp32 gate/up tensors (and their fp32
     # cotangents) would double FFN activation traffic (§Perf H3)
-    h = act(dense(x, p["w_gate"], pol)) * dense(x, p["w_up"], pol)
-    return dense(h.astype(x.dtype), p["w_down"], pol).astype(x.dtype)
+    h = act(dense(x, p["w_gate"], "ffn")) * dense(x, p["w_up"], "ffn")
+    return dense(h.astype(x.dtype), p["w_down"], "ffn").astype(x.dtype)
 
 
 _MIXERS = {

@@ -5,10 +5,16 @@ O(pattern), compile time independent of depth — required for CPU dry-runs of
 60–72-layer configs).  Three execution modes:
 
   * ``loss_fn``     — training forward + chunked cross-entropy (the LM-head
-                      matmul runs the TCEC ``logits_policy``, fp32-accurate
-                      without an fp32 weight copy).
+                      matmul runs the policy resolved for the "lm_head" site,
+                      fp32-accurate without an fp32 weight copy).
   * ``prefill``     — forward emitting per-block KV/state caches.
   * ``decode_step`` — one-token step consuming/updating the caches.
+
+TCEC precision policies are no longer threaded through as strings: every
+entry point installs the config's ``site_policies()`` as *defaults* in the
+policy context (``repro.core.context``), and each matmul carries a site tag.
+An active ``policy_scope`` always beats the config defaults, so sweeps and
+per-site overrides need zero model/config surgery.
 
 Encoder-decoder (whisper) and VLM (internvl2) wrap the same machinery: the
 modality frontends are stubs per the assignment — ``frames``/``patches``
@@ -23,6 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, BlockSpec
+from repro.core.context import policy_defaults, resolve
 from .base import PSpec, abstract, initialize, logical_axes_tree, dense, rms_norm, shard_hint
 from .blocks import block_param_specs, block_apply, block_cache_spec
 
@@ -165,36 +172,38 @@ def backbone(params, batch: Dict, cfg: ArchConfig, *, emit_cache=False,
     """Token/frontend embeddings -> final hidden states.
 
     Returns (hidden (b, s_total, d), caches, enc_out)."""
-    tokens = batch["tokens"]
-    b, s = tokens.shape
-    x = _embed_tokens(params, tokens, cfg)
-    if cfg.vision_tokens:
-        x = _prepend_vision(params, x, batch, cfg)
-    s_total = x.shape[1]
-    positions = jnp.broadcast_to(
-        jnp.arange(s_total, dtype=jnp.int32)[None], (b, s_total))
-    enc_out = None
-    if cfg.encoder_layers:
-        enc_out = _encode(params, batch["frames"], cfg)
-    x, caches = _run_blocks(params["blocks"], x, cfg, positions, causal=True,
-                            enc_out=enc_out, emit_cache=emit_cache,
-                            use_remat=use_remat)
-    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    with policy_defaults(cfg.site_policies()):
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = _embed_tokens(params, tokens, cfg)
+        if cfg.vision_tokens:
+            x = _prepend_vision(params, x, batch, cfg)
+        s_total = x.shape[1]
+        positions = jnp.broadcast_to(
+            jnp.arange(s_total, dtype=jnp.int32)[None], (b, s_total))
+        enc_out = None
+        if cfg.encoder_layers:
+            enc_out = _encode(params, batch["frames"], cfg)
+        x, caches = _run_blocks(params["blocks"], x, cfg, positions,
+                                causal=True, enc_out=enc_out,
+                                emit_cache=emit_cache, use_remat=use_remat)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     return x, caches, enc_out
 
 
 def _logits(params, h: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    pol = resolve("lm_head")
     if cfg.tie_embeddings:
         w = params["embed"]          # (v, d)
         dn = (((h.ndim - 1,), (1,)), ((), ()))
-        if cfg.logits_policy == "bf16x1":
+        if pol.backend == "mxu" and not pol.error_correction:
             out = jax.lax.dot_general(h, w, dn, preferred_element_type=jnp.float32)
         else:
             from repro.core.tcec import tc_dot_general
             out = tc_dot_general(h.astype(jnp.float32), w.astype(jnp.float32),
-                                 dn, cfg.logits_policy)
+                                 dn, pol)
         return out
-    return dense(h, params["lm_head"], cfg.logits_policy).astype(jnp.float32)
+    return dense(h, params["lm_head"], "lm_head").astype(jnp.float32)
 
 
 # ---------------------------------------------------------------------------
@@ -228,9 +237,10 @@ def loss_fn(params, batch: Dict, cfg: ArchConfig,
 
     # Rematerialize per-chunk: (b, chunk, vocab) logits are recomputed in the
     # backward pass instead of being saved across the scan (vocab is huge).
-    (tot, cnt), _ = jax.lax.scan(
-        jax.checkpoint(chunk_loss),
-        (jnp.float32(0.0), jnp.float32(0.0)), (hc, lc))
+    with policy_defaults(cfg.site_policies()):
+        (tot, cnt), _ = jax.lax.scan(
+            jax.checkpoint(chunk_loss),
+            (jnp.float32(0.0), jnp.float32(0.0)), (hc, lc))
     loss = tot / jnp.maximum(cnt, 1.0)
     return loss, {"loss": loss, "tokens": cnt}
 
@@ -243,7 +253,8 @@ def prefill(params, batch: Dict, cfg: ArchConfig) -> Tuple[jnp.ndarray, Any]:
     """Forward over the prompt, emitting caches.  Returns (last-position
     logits (b, v), caches)."""
     h, caches, _ = backbone(params, batch, cfg, emit_cache=True)
-    logits = _logits(params, h[:, -1:], cfg)[:, 0]
+    with policy_defaults(cfg.site_policies()):
+        logits = _logits(params, h[:, -1:], cfg)[:, 0]
     return logits, caches
 
 
@@ -252,13 +263,14 @@ def decode_step(params, token: jnp.ndarray, caches: Any,
     """One decode step.  token (b, 1) int32; cache_index scalar int32.
     Returns (logits (b, v), updated caches)."""
     b = token.shape[0]
-    x = _embed_tokens(params, token, cfg)
-    positions = jnp.full((b, 1), cache_index, jnp.int32)
-    x, new_caches = _run_blocks(params["blocks"], x, cfg, positions,
-                                causal=True, caches=caches,
-                                cache_index=cache_index)
-    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = _logits(params, x, cfg)[:, 0]
+    with policy_defaults(cfg.site_policies()):
+        x = _embed_tokens(params, token, cfg)
+        positions = jnp.full((b, 1), cache_index, jnp.int32)
+        x, new_caches = _run_blocks(params["blocks"], x, cfg, positions,
+                                    causal=True, caches=caches,
+                                    cache_index=cache_index)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = _logits(params, x, cfg)[:, 0]
     return logits, new_caches
 
 

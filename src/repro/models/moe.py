@@ -5,10 +5,11 @@ einsum, grouped so the dispatch tensor stays O(group²·k·cf) per group and
 shards cleanly: tokens are sharded on the data axes, the expert dimension on
 the model axis (EP) — XLA inserts the all-to-all pattern between them.
 
-The router's logits run through the TCEC policy layer (``router_policy``,
-default ``bf16x3``): FP32-accurate routing decisions without an FP32 copy of
-the router weights — the paper's technique applied where numerics matter
-most at negligible FLOP cost.
+The router's logits run through the TCEC policy layer at the tagged
+``"router"`` site (config default ``bf16x3``): FP32-accurate routing
+decisions without an FP32 copy of the router weights — the paper's technique
+applied where numerics matter most at negligible FLOP cost.  Override per
+run with ``policy_scope(router=...)``; no config surgery needed.
 """
 from __future__ import annotations
 
@@ -18,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core.context import policy_defaults
 from .base import PSpec, dense, act_fn, mma_einsum, shard_hint
 
 
@@ -48,7 +50,16 @@ def _capacity(group: int, m) -> int:
 
 
 def moe_apply(p, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
-    """x (b, s, d) -> (b, s, d).  Routing in groups of ``moe.group_size``."""
+    """x (b, s, d) -> (b, s, d).  Routing in groups of ``moe.group_size``.
+
+    Installs the config's site-policy defaults so direct calls (tests,
+    microbenchmarks) honor ``router_policy`` without the model entry points;
+    any active policy_scope still wins."""
+    with policy_defaults(cfg.site_policies()):
+        return _moe_apply(p, x, cfg)
+
+
+def _moe_apply(p, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
     m = cfg.moe
     b, s, d = x.shape
     act = act_fn(cfg.act)
@@ -61,7 +72,7 @@ def moe_apply(p, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
     xt = shard_hint(x.reshape(n_groups, g_size, d), "batch", None, None)
 
     # Router: TCEC fp32-accurate logits (paper technique on the router).
-    logits = dense(xt, p["router"].astype(jnp.float32), m.router_policy)
+    logits = dense(xt, p["router"].astype(jnp.float32), "router")
     probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)   # (g, t, E)
     top_p, top_e = jax.lax.top_k(probs, m.top_k)                  # (g, t, k)
     top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
@@ -97,16 +108,17 @@ def moe_apply(p, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
     y = y.reshape(b, s, d)
 
     if m.n_shared_experts:
-        sh = act(dense(x, p["ws_gate"], cfg.matmul_policy)) \
-            * dense(x, p["ws_up"], cfg.matmul_policy)
-        y = y + dense(sh.astype(x.dtype), p["ws_down"], cfg.matmul_policy)
+        sh = act(dense(x, p["ws_gate"], "moe_shared")) \
+            * dense(x, p["ws_up"], "moe_shared")
+        y = y + dense(sh.astype(x.dtype), p["ws_down"], "moe_shared")
     return y
 
 
 def router_aux_loss(p, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
     """Load-balancing auxiliary loss (Switch-style f·P)."""
     m = cfg.moe
-    logits = dense(x, p["router"].astype(jnp.float32), m.router_policy)
+    with policy_defaults(cfg.site_policies()):
+        logits = dense(x, p["router"].astype(jnp.float32), "router")
     probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
     _, top_e = jax.lax.top_k(probs, m.top_k)
     frac = jnp.mean(jax.nn.one_hot(top_e, m.n_experts), axis=(0, 1, 2))

@@ -113,7 +113,7 @@ def mamba_apply(p, x: jnp.ndarray, cfg: ArchConfig,
     s_cfg = cfg.ssm
     b, s, d = x.shape
     d_in, dt_rank = _mamba_dims(cfg)
-    pol = cfg.matmul_policy
+    pol = "ssm"
 
     xz = shard_hint(dense(x, p["w_in"], pol), "batch", None, "mlp")
     x_br, z = jnp.split(xz, 2, axis=-1)
@@ -239,7 +239,7 @@ def mlstm_apply(p, x: jnp.ndarray, cfg: ArchConfig,
     d_in = int(xc.proj_factor_mlstm * d)
     nh = cfg.n_heads
     dh = d_in // nh
-    pol = cfg.matmul_policy
+    pol = "ssm"
 
     xz = shard_hint(dense(x, p["w_up"], pol), "batch", None, "mlp")
     x_br, z = jnp.split(xz, 2, axis=-1)
@@ -314,7 +314,7 @@ def slstm_apply(p, x: jnp.ndarray, cfg: ArchConfig,
     b, s, d = x.shape
     nh = cfg.n_heads
     dh = d // nh
-    pol = cfg.matmul_policy
+    pol = "ssm"
 
     pre_x = (dense(x, p["w_gates"], pol).astype(jnp.float32)
              + p["b_gates"][None, None])                  # (b, s, 4d)

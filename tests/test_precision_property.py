@@ -2,6 +2,8 @@
 adapted; DESIGN.md §2)."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 from hypothesis.extra import numpy as hnp
 
