@@ -3,8 +3,14 @@ caches, report tokens/sec.
 
     PYTHONPATH=src python examples/serve_batched.py --arch qwen2-0.5b \
         --batch 8 --gen 48
+
+``--policy``/``--kernel`` wrap the whole serve path in a ``policy_scope``:
+``--kernel pallas`` flips every eligible dense matmul onto the batched
+Pallas TCEC kernel (native on TPU; interpret-mode — slow — on CPU, so pair
+it with a small --gen when trying it on a laptop).
 """
 import argparse
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -12,6 +18,8 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config, ARCH_IDS
+from repro.core.context import policy_scope
+from repro.core.policy import get_policy, registered_policies
 from repro.data.pipeline import make_frontend_inputs
 from repro.launch.mesh import make_host_mesh
 from repro.launch.serve import generate
@@ -28,7 +36,16 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=48)
+    ap.add_argument("--policy", default=None, choices=registered_policies(),
+                    help="pin every matmul site to this TCEC policy")
+    ap.add_argument("--kernel", default=None, choices=("xla", "pallas"),
+                    help="kernel backend override for the chosen --policy "
+                         "(pallas = footprint-reduced Mosaic kernel); "
+                         "requires --policy so the pass schedule is explicit")
     args = ap.parse_args()
+    if args.kernel and not args.policy:
+        ap.error("--kernel requires --policy (the kernel override applies "
+                 "to an explicitly chosen pass schedule)")
 
     cfg = get_config(args.arch, reduced=not args.full)
     print(f"serving {cfg.name}: {param_count(cfg)/1e6:.1f}M params, "
@@ -46,7 +63,15 @@ def main():
     extras = {k: jnp.asarray(v) for k, v in
               make_frontend_inputs(cfg, args.batch, 0).items()}
     max_len = args.prompt_len + (cfg.vision_tokens or 0) + args.gen + 1
-    with mesh, activation_sharding(mesh):
+    pol = None
+    if args.policy:
+        pol = get_policy(args.policy)
+        if args.kernel:
+            pol = dataclasses.replace(pol, kernel=args.kernel)
+        print(f"policy_scope: {pol}")
+    import contextlib
+    scope = policy_scope(pol) if pol is not None else contextlib.nullcontext()
+    with mesh, activation_sharding(mesh), scope:
         gen, tps = generate(cfg, params, tokens, max_len, args.gen,
                             batch_extras=extras)
     print(f"generated {gen.shape[0]}x{gen.shape[1]} tokens "

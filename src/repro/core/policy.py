@@ -16,7 +16,7 @@ Core vs software systolic backend.  The TPU translation:
                        memory tier; forced with an optimization barrier so
                        XLA cannot silently fuse them away).
 
-Policies live in a single process-wide *registry*: the seven built-in presets
+Policies live in a single process-wide *registry*: the built-in presets
 plus anything added via ``register_policy(name, TcecPolicy(...))``.  ``PRESETS``
 is a read-only live view of that registry, so user registrations are visible
 everywhere a name is resolved (``get_policy``, ``repro.core.context``).
@@ -31,6 +31,7 @@ from typing import Dict, Literal, Tuple
 
 Backend = Literal["mxu", "vpu"]
 FragmentGen = Literal["on_the_fly", "staged"]
+Kernel = Literal["xla", "pallas"]
 
 VALID_PASSES = (1, 3, 6, 9)
 
@@ -40,6 +41,13 @@ class TcecPolicy:
     passes: int = 6
     backend: Backend = "mxu"
     fragment_gen: FragmentGen = "on_the_fly"
+    #: Which kernel implementation eligible matmuls dispatch to.  ``"xla"``
+    #: is the pure-jnp TCEC path (XLA fuses the splits); ``"pallas"`` routes
+    #: 2-D/batched fp32 matmuls through the explicit Mosaic kernel in
+    #: ``repro.kernels.tcec_matmul`` (in-VREG splitting, the paper's
+    #: footprint-reduced data flow).  Sites the kernel cannot express
+    #: (general dot_generals, vpu backend) stay on the XLA path.
+    kernel: Kernel = "xla"
 
     def __post_init__(self):
         if self.passes not in VALID_PASSES:
@@ -48,6 +56,8 @@ class TcecPolicy:
             raise ValueError(f"bad backend {self.backend}")
         if self.fragment_gen not in ("on_the_fly", "staged"):
             raise ValueError(f"bad fragment_gen {self.fragment_gen}")
+        if self.kernel not in ("xla", "pallas"):
+            raise ValueError(f"bad kernel {self.kernel}")
 
     @property
     def n_words(self) -> int:
@@ -72,6 +82,9 @@ FP32_VPU = TcecPolicy(passes=1, backend="vpu")           # "FP32 SIMT" analogue
 # WMMA-API-only baseline: error correction with *staged* split matrices.
 BF16X3_STAGED = TcecPolicy(passes=3, fragment_gen="staged")
 BF16X6_STAGED = TcecPolicy(passes=6, fragment_gen="staged")
+# Pallas-kernel dispatch: eligible matmuls run the explicit Mosaic kernel.
+BF16X3_PALLAS = TcecPolicy(passes=3, kernel="pallas")
+BF16X6_PALLAS = TcecPolicy(passes=6, kernel="pallas")
 
 # ---------------------------------------------------------------------------
 # Registry: built-in presets + user registrations, one namespace.
@@ -84,6 +97,8 @@ _REGISTRY: Dict[str, TcecPolicy] = {
     "fp32_vpu": FP32_VPU,
     "bf16x3_staged": BF16X3_STAGED,
     "bf16x6_staged": BF16X6_STAGED,
+    "bf16x3_pallas": BF16X3_PALLAS,
+    "bf16x6_pallas": BF16X6_PALLAS,
 }
 _BUILTIN_NAMES = frozenset(_REGISTRY)
 

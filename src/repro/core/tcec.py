@@ -67,6 +67,9 @@ def split_words(a: jnp.ndarray, n_words: int, staged: bool) -> Sequence[jnp.ndar
 
 # Cross-term schedule per pass count: (a_word_idx, b_word_idx) in
 # smallest-magnitude-first order so FP32 accumulation preserves low bits.
+# Shared with the Pallas kernel family (repro.kernels.tcec_matmul), whose
+# custom_vjp backward mirrors _tc_matmul_bwd's dA = g@B^T / dB = A^T@g
+# schedule through the same pass table.
 _SCHEDULES = {
     1: ((0, 0),),
     3: ((1, 0), (0, 1), (0, 0)),

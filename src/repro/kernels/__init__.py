@@ -4,6 +4,7 @@ Each kernel: ``<name>.py`` (pl.pallas_call + BlockSpec VMEM tiling),
 ``ops.py`` (jit'd dispatching wrappers), ``ref.py`` (pure-jnp oracles).
 """
 from . import ops, ref
-from .tcec_matmul import tcec_matmul_pallas, tcec_matmul_staged
+from .tcec_matmul import (tcec_matmul_pallas, tcec_matmul_staged,
+                          tcec_matmul_pallas_grad)
 from .structured import householder_apply, givens_apply, scan_cumsum
 from .flash_attention import flash_attention

@@ -13,13 +13,15 @@ import jax.numpy as jnp
 from repro.core.context import resolve_policy
 from repro.core.tcec import tc_matmul
 from . import ref as _ref
-from .tcec_matmul import tcec_matmul_pallas, tcec_matmul_staged
+from .tcec_matmul import (tcec_matmul_pallas, tcec_matmul_staged,
+                          tcec_matmul_pallas_grad)
 from .structured import householder_apply, givens_apply, scan_cumsum
 from .flash_attention import flash_attention
 
 __all__ = [
-    "on_tpu", "tcec_matmul", "householder", "givens", "cumsum", "attention",
-    "tcec_matmul_pallas", "tcec_matmul_staged",
+    "on_tpu", "tcec_matmul", "dense", "householder", "givens", "cumsum",
+    "attention", "tcec_matmul_pallas", "tcec_matmul_staged",
+    "tcec_matmul_pallas_grad",
 ]
 
 
@@ -31,11 +33,47 @@ def tcec_matmul(a, b, policy=None, *, site: str | None = None,
                 force_pallas: bool = False, interpret: bool = False):
     """Error-corrected emulated-FP32 matmul; Pallas on TPU, jnp elsewhere.
 
-    ``policy=None`` resolves from the active policy context for ``site``."""
+    ``policy=None`` resolves from the active policy context for ``site``.
+    A resolved ``policy.kernel == "pallas"`` forces the (differentiable)
+    Pallas path regardless of backend — interpret mode off-TPU."""
     pol = resolve_policy(policy, site)
-    if on_tpu() or force_pallas or interpret:
-        return tcec_matmul_pallas(a, b, pol, interpret=interpret or not on_tpu())
+    if pol.kernel == "pallas" or on_tpu() or force_pallas or interpret:
+        return tcec_matmul_pallas_grad(
+            a, b, pol, interpret=interpret or not on_tpu())
     return tc_matmul(a, b, pol)
+
+
+def _pallas_eligible(x, w, pol) -> bool:
+    """Can this dense matmul run the Pallas TCEC kernel?
+
+    The kernel expresses 2-D / batch-leading fp32-accumulating matmuls on
+    the MXU; anything else (vpu backend, >3-D dot_generals the host wrapper
+    would have to reshape ambiguously) stays on the XLA path.
+    """
+    return (pol.kernel == "pallas" and pol.backend == "mxu"
+            and x.ndim >= 2 and w.ndim == 2)
+
+
+def dense(x, w, policy=None, *, site: str | None = None,
+          interpret: bool | None = None):
+    """x (..., d) @ w (d, f) with kernel-backend dispatch.
+
+    Resolves the TCEC policy from the explicit argument or the active
+    ``policy_scope`` for ``site``; a policy with ``kernel="pallas"`` routes
+    the matmul through the batched, differentiable Pallas kernel (leading
+    dims folded into rows), so a scope can flip a whole model onto the
+    footprint-reduced kernel.  Other policies take the jnp TCEC path.
+    """
+    pol = resolve_policy(policy, site)
+    if _pallas_eligible(x, w, pol):
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        run_interpret = (not on_tpu()) if interpret is None else interpret
+        out = tcec_matmul_pallas_grad(x2, w, pol, interpret=run_interpret)
+        return out.reshape(*lead, w.shape[-1])
+    # Ineligible shapes/backends fall back to the jnp TCEC path (fp32
+    # operands: the split words must be generated from fp32 sources).
+    return tc_matmul(x.astype(jnp.float32), w.astype(jnp.float32), pol)
 
 
 def householder(v, a, *, force_pallas: bool = False, interpret: bool = False):

@@ -7,13 +7,20 @@ import jax.numpy as jnp
 from repro.core.tcec import tc_matmul
 
 
-def tcec_matmul_ref(a: jnp.ndarray, b: jnp.ndarray, policy: str = "bf16x6") -> jnp.ndarray:
-    """Oracle for tcec_matmul_pallas: the pure-JAX TCEC path."""
+def tcec_matmul_ref(a: jnp.ndarray, b: jnp.ndarray, policy="bf16x6") -> jnp.ndarray:
+    """Oracle for tcec_matmul_pallas: the pure-JAX TCEC path.
+
+    Accepts the kernel's full shape family — (m,k)@(k,n), batched
+    (b,m,k)@(b,k,n) and broadcast (b,m,k)@(k,n) — and policy names or
+    ``TcecPolicy`` instances."""
     return tc_matmul(a.astype(jnp.float32), b.astype(jnp.float32), policy)
 
 
 def matmul_fp64_ref(a, b) -> jnp.ndarray:
-    """High-precision oracle (numpy fp64, outside jit) for accuracy studies."""
+    """High-precision oracle (numpy fp64, outside jit) for accuracy studies.
+
+    Batched: numpy ``@`` broadcasting gives the same (b,m,k)@(b,k,n) and
+    (b,m,k)@(k,n) semantics as the Pallas kernel."""
     import numpy as np
     return jnp.asarray(
         np.asarray(a, dtype=np.float64) @ np.asarray(b, dtype=np.float64))

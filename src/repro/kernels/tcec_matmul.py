@@ -20,6 +20,18 @@ saved bytes translate directly to a higher staging-roofline exactly as in
 paper §4.4.1 (52.0 -> 104.0 TFlop/s on A100; see benchmarks/ai_curves.py for
 the v5e numbers).
 
+The kernel family is **batched, differentiable and shape-robust**:
+
+  * ``(b, m, k) @ (b, k, n)`` and broadcast ``(b, m, k) @ (k, n)`` run as a
+    single ``pallas_call`` over grid ``(b, m/bm, n/bn, k/bk)`` — the
+    batched-SGEMM regime where the paper's 54.2 TFlop/s headline lives
+    (staging-tier bandwidth, not the MMA unit, caps throughput there).
+  * dims that don't divide the block are zero-padded up to the next block
+    multiple and the result sliced back — no divisibility asserts.
+  * ``tcec_matmul_pallas_grad`` is a ``custom_vjp`` wrapper whose backward
+    runs dA = g @ B^T and dB = A^T @ g through the same batched kernel with
+    the same policy, mirroring ``core/tcec.py``'s backward schedule.
+
 The staged variant is also provided (as ``tcec_matmul_staged``) as the
 faithful WMMA-API-baseline: split words are materialized in HBM by the host
 function and streamed through VMEM as separate inputs.
@@ -27,7 +39,7 @@ function and streamed through VMEM as separate inputs.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,7 +50,10 @@ from repro.core.policy import TcecPolicy
 from repro.core.context import resolve_policy
 from repro.core.tcec import _SCHEDULES, split_words
 
-__all__ = ["tcec_matmul_pallas", "tcec_matmul_staged", "default_blocks"]
+__all__ = [
+    "tcec_matmul_pallas", "tcec_matmul_staged", "tcec_matmul_pallas_grad",
+    "default_blocks", "pad_amounts",
+]
 
 
 def _split_vregs(x, n_words: int):
@@ -64,22 +79,35 @@ def _mma_passes(aw, bw, schedule):
     return acc
 
 
-def _tcec_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_words, schedule, nk):
-    """Grid: (m/bm, n/bn, k/bk); k innermost ('arbitrary')."""
-    k_idx = pl.program_id(2)
+def _block2d(ref):
+    """The (bm, bk)/(bk, bn) tile of a possibly batch-led ref."""
+    return ref[0] if len(ref.shape) == 3 else ref[...]
+
+
+def _tcec_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_words, schedule, nk, vpu):
+    """Grid: (b, m/bm, n/bn, k/bk); k innermost ('arbitrary')."""
+    k_idx = pl.program_id(3)
 
     @pl.when(k_idx == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # The footprint reduction: split in VREGs, no staged word buffers.
-    aw = _split_vregs(a_ref[...].astype(jnp.float32), n_words)
-    bw = _split_vregs(b_ref[...].astype(jnp.float32), n_words)
-    acc_ref[...] += _mma_passes(aw, bw, schedule)
+    a = _block2d(a_ref).astype(jnp.float32)
+    b = _block2d(b_ref).astype(jnp.float32)
+    if vpu:
+        # "FP32 SIMT" analogue: plain fp32 dot, no splitting, no MXU passes.
+        acc_ref[...] += jax.lax.dot_general(
+            a, b, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    else:
+        # The footprint reduction: split in VREGs, no staged word buffers.
+        aw = _split_vregs(a, n_words)
+        bw = _split_vregs(b, n_words)
+        acc_ref[...] += _mma_passes(aw, bw, schedule)
 
     @pl.when(k_idx == nk - 1)
     def _done():
-        o_ref[...] = acc_ref[...]
+        o_ref[0] = acc_ref[...]
 
 
 def _staged_kernel(*refs, n_words, schedule, nk):
@@ -87,36 +115,95 @@ def _staged_kernel(*refs, n_words, schedule, nk):
     a_refs = refs[:n_words]
     b_refs = refs[n_words:2 * n_words]
     o_ref, acc_ref = refs[2 * n_words], refs[2 * n_words + 1]
-    k_idx = pl.program_id(2)
+    k_idx = pl.program_id(3)
 
     @pl.when(k_idx == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    aw = [r[...] for r in a_refs]
-    bw = [r[...] for r in b_refs]
+    aw = [_block2d(r) for r in a_refs]
+    bw = [_block2d(r) for r in b_refs]
     acc_ref[...] += _mma_passes(aw, bw, schedule)
 
     @pl.when(k_idx == nk - 1)
     def _done():
-        o_ref[...] = acc_ref[...]
+        o_ref[0] = acc_ref[...]
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
 
 
 def default_blocks(m: int, n: int, k: int) -> Tuple[int, int, int]:
-    """MXU-aligned (multiple-of-128 where possible) VMEM-fitting blocks."""
-    bm = min(m, 128)
-    bn = min(n, 128)
-    bk = min(k, 512)
+    """MXU-aligned (multiple-of-128 where possible) VMEM-fitting blocks.
+
+    Dims smaller than a full tile get a sublane-aligned block; dims that
+    don't divide the chosen block are zero-padded by the host wrapper.
+    """
+    bm = min(_round_up(m, 8), 128)
+    bn = min(_round_up(n, 128), 128)
+    bk = min(_round_up(k, 128), 512)
     return bm, bn, bk
 
 
+def pad_amounts(m: int, n: int, k: int,
+                block: Tuple[int, int, int]) -> Tuple[int, int, int]:
+    """Padded (m, n, k) — each rounded up to its block multiple."""
+    bm, bn, bk = block
+    return _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
+
+
+def _pad_last2(x: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
+    """Zero-pad the trailing two dims of ``x`` up to (rows, cols)."""
+    pr, pc = rows - x.shape[-2], cols - x.shape[-1]
+    if pr == 0 and pc == 0:
+        return x
+    widths = [(0, 0)] * (x.ndim - 2) + [(0, pr), (0, pc)]
+    return jnp.pad(x, widths)
+
+
+def _check_shapes(a: jnp.ndarray, b: jnp.ndarray) -> Tuple[int, int, int, int]:
+    """Validate (m,k)@(k,n) | (b,m,k)@(b,k,n) | (b,m,k)@(k,n); return
+    (batch, m, n, k)."""
+    if a.ndim not in (2, 3) or b.ndim not in (2, 3):
+        raise ValueError(
+            f"tcec matmul expects 2-D or 3-D operands, got {a.shape} @ {b.shape}")
+    if a.ndim == 2 and b.ndim == 3:
+        raise ValueError(
+            f"broadcasting a 2-D lhs against a batched rhs is not supported: "
+            f"{a.shape} @ {b.shape}")
+    m, k = a.shape[-2:]
+    k2, n = b.shape[-2:]
+    if k != k2:
+        raise ValueError(f"contracting dims disagree: {a.shape} @ {b.shape}")
+    if a.ndim == 3 and b.ndim == 3 and a.shape[0] != b.shape[0]:
+        raise ValueError(f"batch dims disagree: {a.shape} @ {b.shape}")
+    nb = a.shape[0] if a.ndim == 3 else 1
+    return nb, m, n, k
+
+
+def _in_spec(ndim: int, rows: int, cols: int, kind: str):
+    """BlockSpec for a possibly batch-led operand.
+
+    kind: "a" blocks index (i, kk); "b" blocks index (kk, j).  Batched
+    operands carry the grid's batch coordinate; broadcast (2-D) operands
+    reuse the same block for every batch index.
+    """
+    if kind == "a":
+        if ndim == 3:
+            return pl.BlockSpec((1, rows, cols), lambda bi, i, j, kk: (bi, i, kk))
+        return pl.BlockSpec((rows, cols), lambda bi, i, j, kk: (i, kk))
+    if ndim == 3:
+        return pl.BlockSpec((1, rows, cols), lambda bi, i, j, kk: (bi, kk, j))
+    return pl.BlockSpec((rows, cols), lambda bi, i, j, kk: (kk, j))
+
+
 def _compiler_params():
+    semantics = ("parallel", "parallel", "parallel", "arbitrary")
     try:
-        return pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"))
+        return pltpu.CompilerParams(dimension_semantics=semantics)
     except (AttributeError, TypeError):  # older naming
-        return pltpu.TPUCompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"))
+        return pltpu.TPUCompilerParams(dimension_semantics=semantics)
 
 
 def tcec_matmul_pallas(a: jnp.ndarray, b: jnp.ndarray,
@@ -125,9 +212,12 @@ def tcec_matmul_pallas(a: jnp.ndarray, b: jnp.ndarray,
                        interpret: bool = False) -> jnp.ndarray:
     """C = A @ B with FP32-level accuracy via in-kernel bf16 splitting.
 
-    a: (m, k) fp32, b: (k, n) fp32 -> (m, n) fp32.  ``policy=None`` resolves
-    from the active policy context *before* the jit boundary, so the compile
-    cache keys on the concrete policy, never on the mutable context.
+    a: (m, k) or (batch, m, k); b: (k, n) or (batch, k, n) — a batched rhs
+    requires a batched lhs.  Returns fp32 (m, n) / (batch, m, n).  Dims that
+    don't divide the block are zero-padded and the result sliced back.
+    ``policy=None`` resolves from the active policy context *before* the jit
+    boundary, so the compile cache keys on the concrete policy, never on the
+    mutable context.
     """
     return _tcec_matmul_pallas(a, b, resolve_policy(policy), block, interpret)
 
@@ -138,30 +228,33 @@ def _tcec_matmul_pallas(a: jnp.ndarray, b: jnp.ndarray,
                         block: Tuple[int, int, int] | None = None,
                         interpret: bool = False) -> jnp.ndarray:
     pol = policy
-    m, k = a.shape
-    k2, n = b.shape
-    assert k == k2, (a.shape, b.shape)
+    nb, m, n, k = _check_shapes(a, b)
     bm, bn, bk = block or default_blocks(m, n, k)
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0, \
-        f"dims {(m, n, k)} must divide blocks {(bm, bn, bk)}"
-    nk = k // bk
-    grid = (m // bm, n // bn, nk)
+    mp, np_, kp = pad_amounts(m, n, k, (bm, bn, bk))
+    a = _pad_last2(a.astype(jnp.float32), mp, kp)
+    b = _pad_last2(b.astype(jnp.float32), kp, np_)
+    a3 = a if a.ndim == 3 else a[None]
+    nk = kp // bk
+    grid = (nb, mp // bm, np_ // bn, nk)
     kernel = functools.partial(
         _tcec_kernel, n_words=pol.n_words,
-        schedule=_SCHEDULES[pol.passes], nk=nk)
-    return pl.pallas_call(
+        schedule=_SCHEDULES[pol.passes], nk=nk,
+        vpu=pol.backend == "vpu")
+    out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            _in_spec(3, bm, bk, "a"),
+            _in_spec(b.ndim, bk, bn, "b"),
         ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        out_specs=pl.BlockSpec((1, bm, bn), lambda bi, i, j, kk: (bi, i, j)),
+        out_shape=jax.ShapeDtypeStruct((nb, mp, np_), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         compiler_params=_compiler_params(),
         interpret=interpret,
-    )(a.astype(jnp.float32), b.astype(jnp.float32))
+    )(a3, b)
+    out = out[:, :m, :n]
+    return out if a.ndim == 3 else out[0]
 
 
 def tcec_matmul_staged(a: jnp.ndarray, b: jnp.ndarray,
@@ -169,7 +262,8 @@ def tcec_matmul_staged(a: jnp.ndarray, b: jnp.ndarray,
                        block: Tuple[int, int, int] | None = None,
                        interpret: bool = False) -> jnp.ndarray:
     """WMMA-API-baseline data flow: split words are materialized in HBM and
-    each streamed through VMEM as its own staged buffer (Fig. 6, top)."""
+    each streamed through VMEM as its own staged buffer (Fig. 6, top).
+    Accepts the same 2-D/batched/broadcast shapes as ``tcec_matmul_pallas``."""
     return _tcec_matmul_staged(a, b, resolve_policy(policy), block, interpret)
 
 
@@ -179,28 +273,87 @@ def _tcec_matmul_staged(a: jnp.ndarray, b: jnp.ndarray,
                         block: Tuple[int, int, int] | None = None,
                         interpret: bool = False) -> jnp.ndarray:
     pol = policy
-    m, k = a.shape
-    _, n = b.shape
+    if pol.backend == "vpu":
+        raise ValueError(
+            "tcec_matmul_staged stages bf16 split words by construction; a "
+            "vpu (plain-fp32) policy has no staged data flow — use "
+            "tcec_matmul_pallas, which honors backend=\"vpu\" exactly")
+    nb, m, n, k = _check_shapes(a, b)
     bm, bn, bk = block or default_blocks(m, n, k)
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0
-    nk = k // bk
-    grid = (m // bm, n // bn, nk)
-    aw = split_words(a.astype(jnp.float32), pol.n_words, staged=True)
-    bw = split_words(b.astype(jnp.float32), pol.n_words, staged=True)
+    mp, np_, kp = pad_amounts(m, n, k, (bm, bn, bk))
+    a = _pad_last2(a.astype(jnp.float32), mp, kp)
+    b = _pad_last2(b.astype(jnp.float32), kp, np_)
+    nk = kp // bk
+    grid = (nb, mp // bm, np_ // bn, nk)
+    # Zero padding splits to all-zero words, so splitting after padding is
+    # exact.  The batch dim (if any) rides along elementwise.
+    aw = split_words(a if a.ndim == 3 else a[None], pol.n_words, staged=True)
+    bw = split_words(b, pol.n_words, staged=True)
     kernel = functools.partial(
         _staged_kernel, n_words=pol.n_words,
         schedule=_SCHEDULES[pol.passes], nk=nk)
     in_specs = (
-        [pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))] * pol.n_words
-        + [pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))] * pol.n_words
+        [_in_spec(3, bm, bk, "a")] * pol.n_words
+        + [_in_spec(b.ndim, bk, bn, "b")] * pol.n_words
     )
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        out_specs=pl.BlockSpec((1, bm, bn), lambda bi, i, j, kk: (bi, i, j)),
+        out_shape=jax.ShapeDtypeStruct((nb, mp, np_), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         compiler_params=_compiler_params(),
         interpret=interpret,
     )(*aw, *bw)
+    out = out[:, :m, :n]
+    return out if a.ndim == 3 else out[0]
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrapper: backward runs the same batched kernel.
+# ---------------------------------------------------------------------------
+
+def tcec_matmul_pallas_grad(a: jnp.ndarray, b: jnp.ndarray,
+                            policy: TcecPolicy | str | None = None,
+                            block: Tuple[int, int, int] | None = None,
+                            interpret: bool = False) -> jnp.ndarray:
+    """Differentiable ``tcec_matmul_pallas``.
+
+    The ``custom_vjp`` backward computes dA = g @ B^T and dB = A^T @ g
+    through the *same* batched Pallas kernel with the *same* policy —
+    mirroring ``core/tcec.py``'s backward schedule, so a model trained on
+    the kernel uses the footprint-reduced emulation end-to-end.
+    """
+    return _tcec_pallas_vjp(a, b, resolve_policy(policy), block, interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _tcec_pallas_vjp(a, b, policy: TcecPolicy,
+                     block: Optional[Tuple[int, int, int]],
+                     interpret: bool):
+    return _tcec_matmul_pallas(a, b, policy, block, interpret)
+
+
+def _tcec_pallas_vjp_fwd(a, b, policy, block, interpret):
+    return _tcec_pallas_vjp(a, b, policy, block, interpret), (a, b)
+
+
+def _tcec_pallas_vjp_bwd(policy, block, interpret, res, g):
+    a, b = res
+    # The forward block tiling need not divide the transposed shapes —
+    # let the default chooser (+ padding) pick backward blocks.
+    da = _tcec_matmul_pallas(
+        g, jnp.swapaxes(b, -1, -2), policy, None, interpret)
+    if b.ndim == 2 and a.ndim == 3:
+        # broadcast rhs: dB sums over the batch — fold batch into rows.
+        a2 = a.reshape(-1, a.shape[-1])
+        g2 = g.reshape(-1, g.shape[-1])
+        db = _tcec_matmul_pallas(a2.T, g2, policy, None, interpret)
+    else:
+        db = _tcec_matmul_pallas(
+            jnp.swapaxes(a, -1, -2), g, policy, None, interpret)
+    return da.astype(a.dtype), db.astype(b.dtype)
+
+
+_tcec_pallas_vjp.defvjp(_tcec_pallas_vjp_fwd, _tcec_pallas_vjp_bwd)

@@ -161,6 +161,27 @@ def _entry_name(comps: Dict[str, Computation], hlo: str) -> str:
     return next(iter(comps))
 
 
+def _split_top_level(args: str) -> List[str]:
+    """Split an operand list on commas OUTSIDE any (), [], {} nesting.
+
+    Modern XLA prints inline operand types — ``dot(f32[64,128]{1,0} %a, ...)``
+    — so a naive ``split(",")`` would cut inside ``[64,128]`` and ``{1,0}``.
+    """
+    parts: List[str] = []
+    depth = 0
+    start = 0
+    for i, ch in enumerate(args):
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            parts.append(args[start:i])
+            start = i + 1
+    parts.append(args[start:])
+    return parts
+
+
 def _args_of(op: Op) -> List[str]:
     """Operand names (up to the first attribute)."""
     depth = 0
@@ -175,7 +196,7 @@ def _args_of(op: Op) -> List[str]:
             depth -= 1
     args = op.rest[:end]
     names = []
-    for a in args.split(","):
+    for a in _split_top_level(args):
         a = a.strip().lstrip("%")
         # strip inline type prefix: "f32[8,16]{1,0} %name"
         if " " in a:

@@ -19,25 +19,30 @@ from typing import Optional, Tuple
 import jax
 
 
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+def _axis_type_kwargs(n: int) -> dict:
+    """``axis_types=Auto`` where the jax version has it (>= 0.5); older
+    versions predate explicit axis types and default to the same behavior."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)))
 
 
 def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
     """Arbitrary mesh (tests / elastic re-meshing)."""
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)))
 
 
 def make_host_mesh():
     """Single-device mesh for CPU smoke tests/examples."""
     n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"), axis_types=_auto(2))
+    return jax.make_mesh((n, 1), ("data", "model"), **_axis_type_kwargs(2))
 
 
 def dp_axes(mesh) -> Tuple[str, ...]:

@@ -66,7 +66,10 @@ def initialize(rng: jax.Array, tree):
         elif spec.init == "ones":
             arr = jnp.ones(spec.shape, dt)
         else:
-            fan_in = spec.shape[0] if len(spec.shape) > 1 else max(spec.shape[-1], 1)
+            # shape[-2] is the true fan-in for both plain (in, out) weights
+            # and group-stacked (n_groups, in, out) weights; shape[0] would
+            # read the stacking dimension and over-scale every block weight.
+            fan_in = spec.shape[-2] if len(spec.shape) > 1 else max(spec.shape[-1], 1)
             std = spec.init_scale / (fan_in ** 0.5)
             arr = (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dt)
         out.append(arr)
@@ -145,7 +148,17 @@ def dense(x: jnp.ndarray, w: jnp.ndarray, site: Optional[str] = None,
         policy, site = site, None
     pol: TcecPolicy = resolve_policy(policy, site)
     dn = (((x.ndim - 1,), (0,)), ((), ()))
-    if pol.backend == "mxu" and not pol.error_correction:
+    if pol.kernel == "pallas":
+        # Kernel-backend dispatch: the scoped policy flips this matmul onto
+        # the batched, differentiable Pallas TCEC kernel (in-VREG splits).
+        # ops.dense owns eligibility and falls back to the jnp TCEC path for
+        # shapes/backends the kernel cannot express (e.g. vpu).
+        from repro.kernels.ops import dense as kernel_dense
+        y = kernel_dense(x, w, pol)
+        if pol.backend == "mxu" and not pol.error_correction:
+            # same dtype contract as the uncorrected fast path below
+            y = y.astype(x.dtype)
+    elif pol.backend == "mxu" and not pol.error_correction:
         if w.dtype == jnp.bfloat16:
             y = _mm_bf16(x.astype(w.dtype), w).astype(x.dtype)
         else:

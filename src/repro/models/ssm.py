@@ -189,7 +189,12 @@ def _mlstm_chunk(q, k, v, log_f, log_i, chunk, C0, n0):
 
     qs, ks, vs, lfs, lis = map(resh, (q * scale, k, v, log_f, log_i))
 
-    from .base import mma_einsum
+    from .base import mma_einsum, mma_dtype
+    # Intermediate tiles round to the matrix-unit dtype: bf16 on TPU (§Perf
+    # H6 traffic discipline), fp32 on the CPU test backend — keeping the
+    # chunked path's arithmetic aligned with the sequential decode recurrence
+    # there (prefill->decode consistency).
+    tile_dt = mma_dtype()
 
     def chunk_step(carry, xs_):
         C_prev, n_prev = carry
@@ -206,10 +211,10 @@ def _mlstm_chunk(q, k, v, log_f, log_i, chunk, C0, n0):
         lij = ti - tj + li[:, None, :, :]
         mask = (jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :])
         D = jnp.where(mask[None, :, :, None], jnp.exp(jnp.minimum(lij, 20.0)), 0.0)
-        # score x decay tiles stay in the compute dtype (bf16 on the MXU):
-        # fp32 (t, t) tiles double the dominant traffic (§Perf H6)
+        # score x decay tiles stay in the matrix-unit dtype (bf16 on the
+        # MXU): fp32 (t, t) tiles double the dominant traffic (§Perf H6)
         s_qk = mma_einsum("bihd,bjhd->bijh", qc, kc)
-        sd = (s_qk * D).astype(qc.dtype)
+        sd = (s_qk * D).astype(tile_dt)
         y_intra = mma_einsum("bijh,bjhd->bihd", sd, vc)
         # normalizer: q_t . n_t where n_t = sum_j decay_j i_j k_j (+ carried)
         nrm_intra = jnp.sum(sd.astype(jnp.float32), axis=2)
@@ -219,7 +224,7 @@ def _mlstm_chunk(q, k, v, log_f, log_i, chunk, C0, n0):
         # state update to end of chunk
         tot = clf[:, -1]                                  # (b, nh)
         decay_j = jnp.exp(tot[:, None] - clf + li)        # (b, t, nh)
-        kd = (kc.astype(jnp.float32) * decay_j[..., None]).astype(kc.dtype)
+        kd = (kc.astype(jnp.float32) * decay_j[..., None]).astype(tile_dt)
         C_new = C_prev * jnp.exp(tot)[..., None, None] + mma_einsum(
             "bthd,bthe->bhde", kd, vc)
         n_new = n_prev * jnp.exp(tot)[..., None] + jnp.sum(

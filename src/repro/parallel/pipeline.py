@@ -86,10 +86,14 @@ def run_pipeline(mesh: Mesh, stage_fn, stage_params_stacked, x_micro,
         jax.tree.map(lambda _: P(axis), stage_params_stacked),
         P(),
     )
-    mapped = jax.shard_map(
-        lambda sp, x: fn(jax.tree.map(lambda a: a[0], sp), x),
-        mesh=mesh, in_specs=in_specs, out_specs=P(),
-        check_vma=False)
+    body = lambda sp, x: fn(jax.tree.map(lambda a: a[0], sp), x)
+    if hasattr(jax, "shard_map"):              # jax >= 0.6
+        mapped = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                               out_specs=P(), check_vma=False)
+    else:                                      # jax 0.4.x/0.5.x spelling
+        from jax.experimental.shard_map import shard_map
+        mapped = shard_map(body, mesh=mesh, in_specs=in_specs,
+                           out_specs=P(), check_rep=False)
     return mapped(stage_params_stacked, x_micro)
 
 

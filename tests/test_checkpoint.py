@@ -76,8 +76,8 @@ def test_elastic_reshard_restore(tmp_path):
     ck = Checkpointer(tmp_path)
     t = tree()
     ck.save(1, t)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     from jax.sharding import NamedSharding, PartitionSpec as P
     sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), t)
     out, _ = ck.restore(t, shardings=sh)

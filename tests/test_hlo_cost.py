@@ -65,8 +65,8 @@ def test_collectives_parsed_on_sharded_module():
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.launch import hlo_cost
-mesh = jax.make_mesh((8,), ("model",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((8,), ("model",))
 a = jax.ShapeDtypeStruct((256, 256), jnp.float32)
 b = jax.ShapeDtypeStruct((256, 256), jnp.float32)
 with mesh:

@@ -1,10 +1,15 @@
 """Pallas TCEC matmul kernel: shape/policy sweep vs the pure-jnp oracle
-(interpret mode executes the kernel body on CPU)."""
+(interpret mode executes the kernel body on CPU), plus the batched /
+differentiable / padded / policy-dispatched kernel family."""
 import numpy as np
 import pytest
+import jax
 import jax.numpy as jnp
 
-from repro.kernels.tcec_matmul import tcec_matmul_pallas, tcec_matmul_staged
+from repro.core.context import policy_scope
+from repro.core.tcec import tc_matmul
+from repro.kernels.tcec_matmul import (tcec_matmul_pallas, tcec_matmul_staged,
+                                       tcec_matmul_pallas_grad)
 from repro.kernels import ref as kref
 
 SHAPES = [
@@ -66,3 +71,257 @@ def test_nonsquare_blocks_and_ill_scaled_inputs():
     ref = np.asarray(kref.matmul_fp64_ref(a, b))
     assert np.max(np.abs(out - ref)) / (np.max(np.abs(ref)) + 1e-30) < 1e-4
     assert np.all(np.isfinite(out))
+
+
+# ---------------------------------------------------------------------------
+# Batched kernel family
+# ---------------------------------------------------------------------------
+
+BATCHED_SHAPES = [
+    # (batch, m, k, n, block)  — block None = default chooser
+    (3, 128, 128, 128, (128, 128, 128)),
+    (2, 64, 256, 128, (64, 128, 256)),
+    (4, 32, 64, 32, None),
+]
+
+
+@pytest.mark.parametrize("bsz,m,k,n,block", BATCHED_SHAPES)
+@pytest.mark.parametrize("policy", POLICIES)
+def test_batched_kernel_vs_fp64(bsz, m, k, n, block, policy):
+    """(b,m,k)@(b,k,n) through one pallas_call matches the batched oracle."""
+    rng = np.random.default_rng(bsz * 31 + m + k + n)
+    a = rng.standard_normal((bsz, m, k)).astype(np.float32)
+    b = rng.standard_normal((bsz, k, n)).astype(np.float32)
+    out = np.asarray(tcec_matmul_pallas(jnp.asarray(a), jnp.asarray(b),
+                                        policy, block, True))
+    assert out.shape == (bsz, m, n)
+    ref = np.asarray(kref.matmul_fp64_ref(a, b))
+    scale = np.max(np.abs(ref))
+    assert np.max(np.abs(out - ref)) / scale < TOL[policy], policy
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_batched_broadcast_rhs(policy):
+    """(b,m,k)@(k,n): the 2-D rhs block is reused for every batch index."""
+    rng = np.random.default_rng(7)
+    a = rng.standard_normal((3, 64, 128)).astype(np.float32)
+    b = rng.standard_normal((128, 64)).astype(np.float32)
+    out = np.asarray(tcec_matmul_pallas(jnp.asarray(a), jnp.asarray(b),
+                                        policy, None, True))
+    ref = np.asarray(kref.matmul_fp64_ref(a, b))
+    scale = np.max(np.abs(ref))
+    assert out.shape == (3, 64, 64)
+    assert np.max(np.abs(out - ref)) / scale < TOL[policy], policy
+
+
+def test_batched_staged_equals_fused():
+    rng = np.random.default_rng(8)
+    a = rng.standard_normal((2, 128, 256)).astype(np.float32)
+    b = rng.standard_normal((2, 256, 128)).astype(np.float32)
+    fused = np.asarray(tcec_matmul_pallas(jnp.asarray(a), jnp.asarray(b),
+                                          "bf16x6", (128, 128, 256), True))
+    staged = np.asarray(tcec_matmul_staged(jnp.asarray(a), jnp.asarray(b),
+                                           "bf16x6", (128, 128, 256), True))
+    np.testing.assert_array_equal(fused, staged)
+
+
+def test_batched_staged_broadcast_rhs():
+    rng = np.random.default_rng(9)
+    a = rng.standard_normal((2, 64, 128)).astype(np.float32)
+    b = rng.standard_normal((128, 64)).astype(np.float32)
+    fused = np.asarray(tcec_matmul_pallas(jnp.asarray(a), jnp.asarray(b),
+                                          "bf16x6", None, True))
+    staged = np.asarray(tcec_matmul_staged(jnp.asarray(a), jnp.asarray(b),
+                                           "bf16x6", None, True))
+    np.testing.assert_array_equal(fused, staged)
+
+
+def test_staged_rejects_vpu_policy():
+    """The staged variant is a bf16-word data flow; a vpu policy there
+    would silently truncate to bf16 — it must raise instead."""
+    a = jnp.zeros((32, 64), jnp.float32)
+    b = jnp.zeros((64, 32), jnp.float32)
+    with pytest.raises(ValueError, match="vpu"):
+        tcec_matmul_staged(a, b, "fp32_vpu", None, True)
+
+
+def test_vpu_policy_runs_plain_fp32():
+    """backend="vpu" skips splitting: bit-identical to the fp32 dot."""
+    rng = np.random.default_rng(10)
+    a = jnp.asarray(rng.standard_normal((2, 32, 64)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((2, 64, 32)).astype(np.float32))
+    out = tcec_matmul_pallas(a, b, "fp32_vpu", None, True)
+    ref = jnp.einsum("bmk,bkn->bmn", a, b)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+# -- padding path -----------------------------------------------------------
+
+PAD_SHAPES = [
+    (100, 72, 50),      # nothing divides the default blocks
+    (130, 128, 129),    # one past a block boundary
+    (8, 520, 8),        # k > default bk
+]
+
+
+@pytest.mark.parametrize("m,k,n", PAD_SHAPES)
+@pytest.mark.parametrize("variant", ["fused", "staged"])
+def test_padding_non_dividing_shapes(m, k, n, variant):
+    """Dims that don't divide the block are zero-padded and sliced back."""
+    fn = tcec_matmul_pallas if variant == "fused" else tcec_matmul_staged
+    rng = np.random.default_rng(m + k + n)
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    b = rng.standard_normal((k, n)).astype(np.float32)
+    out = np.asarray(fn(jnp.asarray(a), jnp.asarray(b), "bf16x6", None, True))
+    assert out.shape == (m, n)
+    ref = np.asarray(kref.matmul_fp64_ref(a, b))
+    assert np.max(np.abs(out - ref)) / np.max(np.abs(ref)) < TOL["bf16x6"]
+
+
+def test_padding_batched_non_dividing():
+    rng = np.random.default_rng(11)
+    a = rng.standard_normal((3, 100, 72)).astype(np.float32)
+    b = rng.standard_normal((3, 72, 50)).astype(np.float32)
+    out = np.asarray(tcec_matmul_pallas(jnp.asarray(a), jnp.asarray(b),
+                                        "bf16x6", None, True))
+    assert out.shape == (3, 100, 50)
+    ref = np.asarray(kref.matmul_fp64_ref(a, b))
+    assert np.max(np.abs(out - ref)) / np.max(np.abs(ref)) < TOL["bf16x6"]
+
+
+def test_shape_errors_are_valueerrors():
+    a = jnp.zeros((2, 8, 16))
+    with pytest.raises(ValueError):
+        tcec_matmul_pallas(jnp.zeros((8, 16)), jnp.zeros((2, 16, 8)),
+                           "bf16x6", None, True)       # 2-D lhs, batched rhs
+    with pytest.raises(ValueError):
+        tcec_matmul_pallas(a, jnp.zeros((3, 16, 8)), "bf16x6", None, True)
+    with pytest.raises(ValueError):
+        tcec_matmul_pallas(a, jnp.zeros((17, 8)), "bf16x6", None, True)
+
+
+# -- custom_vjp -------------------------------------------------------------
+
+def _grad_pair(f, *args):
+    return jax.grad(lambda *a: jnp.sum(jnp.sin(f(*a))), argnums=(0, 1))(*args)
+
+
+@pytest.mark.parametrize("policy", ["bf16x3", "bf16x6"])
+def test_vjp_matches_jnp_tcec_grads(policy):
+    """jax.grad through the Pallas kernel == grads of the jnp TCEC path."""
+    rng = np.random.default_rng(12)
+    a = jnp.asarray(rng.standard_normal((48, 64)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((64, 32)).astype(np.float32))
+    ga_p, gb_p = _grad_pair(
+        lambda x, y: tcec_matmul_pallas_grad(x, y, policy, None, True), a, b)
+    ga_j, gb_j = _grad_pair(lambda x, y: tc_matmul(x, y, policy), a, b)
+    np.testing.assert_allclose(np.asarray(ga_p), np.asarray(ga_j),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gb_p), np.asarray(gb_j),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_vjp_batched_and_broadcast():
+    """Batched dA/dB run the same kernel; broadcast dB sums over batch."""
+    rng = np.random.default_rng(13)
+    a = jnp.asarray(rng.standard_normal((3, 24, 40)).astype(np.float32))
+    bb = jnp.asarray(rng.standard_normal((3, 40, 16)).astype(np.float32))
+    b2 = jnp.asarray(rng.standard_normal((40, 16)).astype(np.float32))
+    for b in (bb, b2):
+        ga_p, gb_p = _grad_pair(
+            lambda x, y: tcec_matmul_pallas_grad(x, y, "bf16x6", None, True),
+            a, b)
+        ga_j, gb_j = _grad_pair(lambda x, y: tc_matmul(x, y, "bf16x6"), a, b)
+        assert ga_p.shape == a.shape and gb_p.shape == b.shape
+        np.testing.assert_allclose(np.asarray(ga_p), np.asarray(ga_j),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(gb_p), np.asarray(gb_j),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_vjp_padded_shapes():
+    """Gradients are exact w.r.t. the sliced (unpadded) output."""
+    rng = np.random.default_rng(14)
+    a = jnp.asarray(rng.standard_normal((50, 36)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((36, 20)).astype(np.float32))
+    ga_p, gb_p = _grad_pair(
+        lambda x, y: tcec_matmul_pallas_grad(x, y, "bf16x6", None, True), a, b)
+    ga_j, gb_j = _grad_pair(lambda x, y: tc_matmul(x, y, "bf16x6"), a, b)
+    np.testing.assert_allclose(np.asarray(ga_p), np.asarray(ga_j),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gb_p), np.asarray(gb_j),
+                               rtol=1e-5, atol=1e-5)
+
+
+# -- policy_scope kernel dispatch ------------------------------------------
+
+def test_policy_scope_flips_dense_onto_kernel():
+    """An end-to-end dense layer under policy_scope(kernel="pallas") runs
+    the Pallas kernel and matches the jnp TCEC path, forward and backward."""
+    from repro.models.base import dense
+    rng = np.random.default_rng(15)
+    x = jnp.asarray(rng.standard_normal((2, 12, 48)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((48, 24)).astype(np.float32))
+
+    with policy_scope("bf16x6_pallas"):
+        y_pal = dense(x, w, "ffn")
+    y_ref = tc_matmul(x, w, "bf16x6")
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               rtol=1e-6, atol=1e-6)
+
+    def loss_pal(w_):
+        with policy_scope("bf16x6_pallas"):
+            return jnp.sum(jnp.sin(dense(x, w_, "ffn")))
+
+    def loss_ref(w_):
+        return jnp.sum(jnp.sin(tc_matmul(x, w_, "bf16x6")))
+
+    g_pal = jax.grad(loss_pal)(w)
+    g_ref = jax.grad(loss_ref)(w)
+    np.testing.assert_allclose(np.asarray(g_pal), np.asarray(g_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_pallas_dense_keeps_uncorrected_dtype_contract():
+    """dense() output dtype follows x for uncorrected policies on BOTH
+    kernel backends (fp32 only for corrected ones)."""
+    import dataclasses
+    from repro.core.policy import get_policy
+    from repro.models.base import dense
+    x = jnp.ones((4, 16), jnp.bfloat16)
+    w = jnp.ones((16, 8), jnp.bfloat16)
+    p1 = dataclasses.replace(get_policy("bf16x1"), kernel="pallas")
+    assert dense(x, w, policy=p1).dtype == jnp.bfloat16      # uncorrected
+    assert dense(x, w, policy="bf16x1").dtype == jnp.bfloat16
+    p6 = get_policy("bf16x6_pallas")
+    assert dense(x, w, policy=p6).dtype == jnp.float32       # corrected
+    assert dense(x, w, policy="bf16x6").dtype == jnp.float32
+
+
+def test_pallas_dense_vpu_policy_falls_back_to_xla_path():
+    """A kernel="pallas" policy with the vpu backend is ineligible for the
+    Mosaic kernel and must match the plain XLA vpu path exactly."""
+    import dataclasses
+    from repro.core.policy import get_policy
+    from repro.models.base import dense
+    rng = np.random.default_rng(17)
+    x = jnp.asarray(rng.standard_normal((4, 16)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((16, 8)).astype(np.float32))
+    pv = dataclasses.replace(get_policy("fp32_vpu"), kernel="pallas")
+    np.testing.assert_array_equal(
+        np.asarray(dense(x, w, policy=pv)),
+        np.asarray(dense(x, w, policy="fp32_vpu")))
+
+
+def test_ops_tcec_matmul_respects_policy_kernel():
+    """kernels.ops.tcec_matmul routes kernel="pallas" policies to Pallas
+    even off-TPU (interpret), and stays on jnp otherwise."""
+    from repro.kernels import ops
+    rng = np.random.default_rng(16)
+    a = jnp.asarray(rng.standard_normal((32, 48)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((48, 16)).astype(np.float32))
+    with policy_scope("bf16x6_pallas"):
+        out = ops.tcec_matmul(a, b)
+    ref = np.asarray(kref.matmul_fp64_ref(a, b))
+    assert np.max(np.abs(np.asarray(out) - ref)) / np.max(np.abs(ref)) \
+        < TOL["bf16x6"]

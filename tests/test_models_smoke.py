@@ -11,6 +11,10 @@ from repro.models import (init_params, loss_fn, prefill, decode_step,
                           init_decode_caches, param_count)
 from repro.models.model import backbone
 
+# Multi-minute per-arch smoke sweep: excluded from the fast CI tier
+# (`-m "not slow"`), still part of the default full run.
+pytestmark = pytest.mark.slow
+
 B, S = 2, 32
 
 

@@ -219,10 +219,23 @@ def test_three_sites_three_policies_single_forward():
 
     mixed = loss_under(dict(router="bf16x3", lm_head="bf16x6"))
     assert np.isfinite(mixed)
-    # the per-site overrides really reach their sites: changing only the
-    # lm_head policy changes the loss (fp32 params make the ladder visible)
-    plain = loss_under(dict(router="bf16x3", lm_head="bf16x1"))
-    assert mixed != plain
+    # The per-site overrides really reach their sites: changing only the
+    # lm_head policy changes the LM-head logits (bf16x6 runs the split
+    # emulation, bf16x1 the plain dot — bit-different arithmetic).  The
+    # scalar *loss* is too coarse a probe: with fp32 params both paths are
+    # fp32-accurate and the ~1e-7-relative difference can round away in the
+    # fp32 mean.
+    from repro.models import prefill
+    pbatch = {"tokens": batch["tokens"]}
+
+    def logits_under(scope_kwargs):
+        with policy_scope("bf16x1", **scope_kwargs):
+            logits, _ = prefill(params, pbatch, cfg)
+        return np.asarray(logits)
+
+    l6 = logits_under(dict(router="bf16x3", lm_head="bf16x6"))
+    l1 = logits_under(dict(router="bf16x3", lm_head="bf16x1"))
+    assert np.any(l6 != l1)
 
 
 def test_deprecated_config_fields_still_work_and_warn():

@@ -70,6 +70,34 @@ def test_tcec_policy_error_ladder(m, k, n, seed):
     assert e6 < 64 * np.finfo(np.float32).eps * max(k, 4) ** 0.5
 
 
+@settings(max_examples=20, deadline=None)
+@given(st.integers(3, 7),              # k = 2**3 .. 2**7
+       st.integers(0, 8),              # per-element exponent spread (decades)
+       st.integers(0, 2 ** 31 - 1))
+def test_bf16x6_error_bound_vs_k_and_spread(log2k, spread, seed):
+    """Paper §4.4 accuracy claim as a regression gate: bf16x6 max relative
+    error stays ~2^-24-level (x a sqrt(k) accumulation factor and a safety
+    constant) as the contraction length and the exponent spread grow — for
+    BOTH the pure-jnp TCEC path and the Pallas kernel in interpret mode."""
+    from repro.kernels.tcec_matmul import tcec_matmul_pallas
+    k = 2 ** log2k
+    m = n = 16
+    rng = np.random.default_rng(seed)
+    a = (rng.standard_normal((m, k))
+         * 10.0 ** rng.integers(-spread, spread + 1, (m, k))).astype(np.float32)
+    b = rng.standard_normal((k, n)).astype(np.float32)
+    ref = a.astype(np.float64) @ b.astype(np.float64)
+    scale = np.max(np.abs(ref)) + 1e-30
+    bound = 64 * 2.0 ** -24 * max(k, 4) ** 0.5
+
+    e_jnp = np.max(np.abs(np.asarray(
+        tc_matmul(jnp.asarray(a), jnp.asarray(b), "bf16x6")) - ref)) / scale
+    e_pal = np.max(np.abs(np.asarray(tcec_matmul_pallas(
+        jnp.asarray(a), jnp.asarray(b), "bf16x6", None, True)) - ref)) / scale
+    assert e_jnp < bound, (e_jnp, bound, k, spread)
+    assert e_pal < bound, (e_pal, bound, k, spread)
+
+
 @settings(max_examples=50, deadline=None)
 @given(st.integers(0, 2 ** 31 - 1))
 def test_tcec_matches_fp32_accuracy(seed):

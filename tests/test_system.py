@@ -17,6 +17,10 @@ from repro.runtime.train_loop import TrainLoop, TrainLoopConfig
 from repro.runtime.fault_tolerance import (
     StepWatchdog, WatchdogConfig, NanGuard, run_with_retries, RetryPolicy)
 
+# Multi-minute end-to-end tests: excluded from the fast CI tier
+# (`-m "not slow"`), still part of the default full run.
+pytestmark = pytest.mark.slow
+
 
 def build_loop(tmp_path, steps=40, arch="qwen2-0.5b", **loop_kw):
     cfg = get_config(arch, reduced=True)
