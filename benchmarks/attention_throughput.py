@@ -1,0 +1,111 @@
+"""Attention as a TCEC site, Fig.-10-style: policy x (sq, skv, d) sweep.
+
+Wall-clock TFlop/s needs the TPU, so — like ``tcec_throughput`` — this
+reports the quantities the paper's throughput argument rests on, measured
+on the flash kernel as implemented:
+
+  * the VMEM working set of one flash grid step under the on-the-fly
+    (WMMAe) data flow vs the staged-words counterfactual (every split word
+    of Q/K/P/V materialized as its own buffer, the WMMA-API-baseline
+    analogue) — the footprint reduction that buys larger kv blocks at the
+    same VMEM budget;
+  * the roofline-attainable TFlop/s per policy (useful peak divides by the
+    MXU pass count; staging bound from the per-block arithmetic
+    intensity);
+  * measured interpret-mode wall time per policy on a small shape
+    (host CPU, directional only) plus max relative error vs the fp64
+    oracle — the accuracy-vs-throughput trade the README table quotes.
+"""
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import roofline as rl
+from repro.core.policy import get_policy
+
+POLICIES = ("fp32_vpu", "bf16x1", "bf16x3", "bf16x6")
+SHAPES = ((128, 128, 64), (256, 256, 64), (128, 512, 64), (256, 256, 128))
+BQ = BK = 128
+
+
+def _attention_fp64(q, k, v):
+    s = np.einsum("bhqd,bhkd->bhqk", q.astype(np.float64),
+                  k.astype(np.float64)) / np.sqrt(q.shape[-1])
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    return np.einsum("bhqk,bhkd->bhqd", p, v.astype(np.float64))
+
+
+def footprint_rows():
+    """VMEM bytes of one flash grid step: fused vs staged-words."""
+    rows = []
+    for (sq, skv, d) in SHAPES:
+        bq, bk = min(BQ, sq), min(BK, skv)
+        # fused: fp32 q/k/v blocks + fp32 (acc, m, l) scratch
+        fused = 4 * (bq * d + 2 * bk * d) + 4 * (bq * d + 2 * bq)
+        for policy in ("bf16x3", "bf16x6"):
+            w = get_policy(policy).n_words
+            # staged counterfactual: w bf16 word-buffers for q and k plus
+            # the score-tile words for P, v words — 2 bytes per word elem
+            staged = (2 * w * (bq * d + bk * d + bq * bk + bk * d)
+                      + 4 * (bq * d + 2 * bq))
+            tag = f"sq{sq}_skv{skv}_d{d}_{policy}"
+            rows.append((f"vmem_bytes_fused_{tag}", float(fused)))
+            rows.append((f"vmem_ratio_staged_over_fused_{tag}",
+                         staged / fused))
+    return rows
+
+
+def bound_rows():
+    """Roofline-attainable TFlop/s per policy (v5e, flash block AI)."""
+    rows = []
+    for (sq, skv, d) in SHAPES[:2]:
+        # equivalent cubic blocking of one (bq, bk, d) attention tile
+        n_eq = int((min(BQ, sq) * min(BK, skv) * d) ** (1.0 / 3.0))
+        for policy in POLICIES:
+            pol = get_policy(policy)
+            if pol.backend == "vpu":
+                bound = rl.TPU_V5E.vector_tflops
+            else:
+                bound = rl.tcec_attainable_tflops(
+                    n_eq, pol.passes, pol.fragment_gen, rl.TPU_V5E)
+            rows.append((f"v5e_bound_sq{sq}_skv{skv}_d{d}_{policy}_tflops",
+                         bound))
+    return rows
+
+
+def measured_rows(b=1, h=2, sq=128, skv=128, d=64, reps=3):
+    """Interpret-mode wall time + fp64-oracle error per policy (host CPU)."""
+    from repro.kernels.flash_attention import flash_attention
+    rng = np.random.default_rng(0)
+    q = rng.standard_normal((b, h, sq, d)).astype(np.float32)
+    k = rng.standard_normal((b, h, skv, d)).astype(np.float32)
+    v = rng.standard_normal((b, h, skv, d)).astype(np.float32)
+    ref = _attention_fp64(q, k, v)
+    scale = np.max(np.abs(ref))
+    qj, kj, vj = map(jnp.asarray, (q, k, v))
+    rows = []
+    for policy in POLICIES:
+        def call():
+            return flash_attention(qj, kj, vj, causal=False, policy=policy,
+                                   interpret=True).block_until_ready()
+        out = np.asarray(call())                 # warm the compile cache
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            call()
+        rows.append((f"flash_{policy}_us",
+                     (time.perf_counter() - t0) / reps * 1e6))
+        rows.append((f"flash_{policy}_max_rel_err",
+                     float(np.max(np.abs(out - ref)) / scale)))
+        rows.append((f"flash_{policy}_mxu_passes",
+                     float(get_policy(policy).flops_multiplier())))
+    return rows
+
+
+def run():
+    rows = []
+    rows.extend(footprint_rows())
+    rows.extend(bound_rows())
+    rows.extend(measured_rows())
+    return rows

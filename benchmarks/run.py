@@ -8,6 +8,7 @@
   Fig. 7        -> ai_curves       (TCEC staging roofline, 52 -> 104 TFlop/s)
   Fig. 8        -> tcec_accuracy   (measured: emulation matches fp32)
                    tcec_throughput (bounds + compiled HBM-traffic ratio)
+  Fig. 10       -> attention_throughput (policy x (sq, skv, d) flash sweep)
   §4.4 policies -> policy_sweep    (every registered policy via policy_scope)
   §Roofline     -> roofline        (cluster table from dry-run artifacts)
 
@@ -21,8 +22,8 @@ import traceback
 
 def main() -> None:
     from benchmarks import (bf_table, ai_curves, householder, givens,
-                            tcec_accuracy, tcec_throughput, policy_sweep,
-                            roofline)
+                            tcec_accuracy, tcec_throughput,
+                            attention_throughput, policy_sweep, roofline)
     modules = [
         ("bf_table", bf_table),
         ("ai_curves", ai_curves),
@@ -30,6 +31,7 @@ def main() -> None:
         ("givens", givens),
         ("tcec_accuracy", tcec_accuracy),
         ("tcec_throughput", tcec_throughput),
+        ("attention_throughput", attention_throughput),
         ("policy_sweep", policy_sweep),
         ("roofline", roofline),
     ]

@@ -5,9 +5,12 @@ caches, report tokens/sec.
         --batch 8 --gen 48
 
 ``--policy``/``--kernel`` wrap the whole serve path in a ``policy_scope``:
-``--kernel pallas`` flips every eligible dense matmul onto the batched
-Pallas TCEC kernel (native on TPU; interpret-mode — slow — on CPU, so pair
-it with a small --gen when trying it on a laptop).
+``--kernel pallas`` flips every eligible dense matmul AND the attention
+QK^T/PV onto the footprint-reduced Pallas kernels (native on TPU;
+interpret-mode — slow — on CPU, so pair it with a small --gen when trying
+it on a laptop).  ``--attn-policy`` pins just the ``"attn"`` site, e.g.
+
+    --policy bf16x1 --attn-policy bf16x6     # fp32-accurate attention only
 """
 import argparse
 import dataclasses
@@ -42,6 +45,11 @@ def main():
                     help="kernel backend override for the chosen --policy "
                          "(pallas = footprint-reduced Mosaic kernel); "
                          "requires --policy so the pass schedule is explicit")
+    ap.add_argument("--attn-policy", default=None,
+                    choices=registered_policies(),
+                    help="policy for the \"attn\" site only (QK^T/PV in "
+                         "flash/chunked/decode attention); overrides "
+                         "--policy at that site")
     args = ap.parse_args()
     if args.kernel and not args.policy:
         ap.error("--kernel requires --policy (the kernel override applies "
@@ -69,8 +77,13 @@ def main():
         if args.kernel:
             pol = dataclasses.replace(pol, kernel=args.kernel)
         print(f"policy_scope: {pol}")
+    overrides = {}
+    if args.attn_policy:
+        overrides["attn"] = get_policy(args.attn_policy)
+        print(f"attn site: {overrides['attn']}")
     import contextlib
-    scope = policy_scope(pol) if pol is not None else contextlib.nullcontext()
+    scope = (policy_scope(pol, **overrides)
+             if pol is not None or overrides else contextlib.nullcontext())
     with mesh, activation_sharding(mesh), scope:
         gen, tps = generate(cfg, params, tokens, max_len, args.gen,
                             batch_extras=extras)

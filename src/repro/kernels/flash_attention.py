@@ -1,4 +1,5 @@
-"""Pallas TPU flash attention — the paper's footprint principle on attention.
+"""Pallas TPU flash attention — the paper's footprint principle on attention,
+now a first-class TCEC site.
 
 The WMMAe insight (don't stage what you can generate/stream in registers)
 applied to the framework's dominant kernel: the (sq, skv) score matrix is
@@ -7,28 +8,62 @@ statistics in VMEM scratch, and the causal mask is *generated from its
 structural rule* (an iota comparison — a ``foreach_ij`` fragment) instead of
 being loaded from memory.
 
-Layout: q (b, h, sq, d), k/v (b, h, skv, d) -> o (b, h, sq, d).
-Grid: (b*h, sq/bq, skv/bk) with the kv axis innermost ('arbitrary') carrying
-(m, l, acc) scratch across kv blocks.
+QK^T and PV run with **policy-selected precision** through the shared split
+core (``kernels/tcec_core``): a vpu policy computes plain fp32 dots, an
+uncorrected MXU policy the classic bf16 passes, and ``bf16x3``/``bf16x6``
+split Q, K, P and V into bf16 words *inside the kernel body* (in VREGs —
+never a staged word buffer, exactly the matmul kernel's data flow) and
+accumulate the scheduled MXU passes in fp32.  The same schedule runs in the
+XLA twins (``models/attention.py``), so prefill/decode/kernel numerics agree
+per policy.
+
+Layout: q (b, h, sq, d), k/v (b, kvh, skv, d|dv) -> o (b, h, sq, dv);
+GQA (h % kvh == 0) is handled by the grid's index maps (kv blocks are
+re-streamed per query-head group, no repeated-head copies in HBM).
+Grid: (b, h, sq/bq, skv/bk) with the kv axis innermost ('arbitrary')
+carrying (m, l, acc) scratch across kv blocks.
+
+Shape robustness: sq/skv that don't divide the blocks are zero-padded and
+the padded kv columns masked via the structural rule (``col < kv_len``);
+``kv_len`` is also a public argument so callers with right-padded KV
+(batched cross-attention) mask the padding inside the kernel.  Fully-masked
+score rows (e.g. ``kv_len == 0``) emit exact zeros — no division by the
+empty softmax sum.
+
+``flash_attention`` is differentiable: interpret-mode ``pallas_call`` has no
+VJP rule, so a ``custom_vjp`` recomputes the backward through the dense
+policy-reference twin (``ref.attention_policy_ref``) with the same policy —
+fine for the serve/prefill paths this kernel owns (training uses the
+rematerializing chunked twin).
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.policy import TcecPolicy
+from repro.core.context import resolve_policy
+from .tcec_core import policy_dot, dot_params, compiler_params, round_up as _round_up
+
 __all__ = ["flash_attention"]
 
 NEG_INF = -1e30
 
+# q (bq, d) x k (bk, d) -> s (bq, bk): contract d on both.
+_QK_DN = (((1,), (1,)), ((), ()))
+# p (bq, bk) x v (bk, dv) -> o (bq, dv).
+_PV_DN = (((1,), (0,)), ((), ()))
+
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
-                  *, causal, scale, nk, bq, bk):
-    qi = pl.program_id(1)
-    ki = pl.program_id(2)
+                  *, causal, scale, kv_len, nk, bq, bk, dot_kw):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
 
     @pl.when(ki == 0)
     def _init():
@@ -36,67 +71,159 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0].astype(jnp.float32)                  # (bq, d)
-    k = k_ref[0].astype(jnp.float32)                  # (bk, d)
-    v = v_ref[0].astype(jnp.float32)                  # (bk, d)
+    q = q_ref[0, 0].astype(jnp.float32)               # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)               # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)               # (bk, dv)
 
-    s = jax.lax.dot_general(                          # (bq, bk)
-        q.astype(jnp.bfloat16), k.astype(jnp.bfloat16),
-        (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32) * scale
+    # QK^T at policy-selected precision (split words live in VREGs).
+    s = policy_dot(q, k, _QK_DN, **dot_kw) * scale    # (bq, bk)
 
+    # Structural-rule mask (foreach_ij): row = absolute q idx, col = kv.
+    # Padded / caller-declared-invalid kv columns are masked the same way.
+    rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    cols = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    valid = cols < kv_len
     if causal:
-        # Structural-rule mask (foreach_ij): row = absolute q idx, col = kv.
-        rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
-        cols = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-        s = jnp.where(rows >= cols, s, NEG_INF)
+        valid = jnp.logical_and(valid, rows >= cols)
+    s = jnp.where(valid, s, NEG_INF)
 
     m_prev = m_ref[...]                               # (bq, 1)
     m_cur = jnp.max(s, axis=-1, keepdims=True)
     m_new = jnp.maximum(m_prev, m_cur)
     alpha = jnp.exp(m_prev - m_new)
-    p = jnp.exp(s - m_new)                            # (bq, bk)
+    # Rows with no valid column so far have m_new == NEG_INF; exp(s - m_new)
+    # would be exp(0) == 1 there, silently attending to masked positions.
+    # Such rows contribute nothing: p == 0 keeps (l, acc) at zero.
+    p = jnp.where(m_new > 0.5 * NEG_INF,
+                  jnp.exp(s - m_new), 0.0)            # (bq, bk)
     l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
-    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
-        p.astype(jnp.bfloat16), v.astype(jnp.bfloat16),
-        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    # PV at the same policy: P is split like any fp32 operand.
+    acc_ref[...] = acc_ref[...] * alpha + policy_dot(p, v, _PV_DN, **dot_kw)
     m_ref[...] = m_new
 
     @pl.when(ki == nk - 1)
     def _done():
-        o_ref[0, ...] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        l = l_ref[...]
+        # Fully-masked rows (l == 0) emit exact zeros, not 0/0.
+        o_ref[0, 0, ...] = jnp.where(
+            l > 0.0, acc_ref[...] / jnp.where(l > 0.0, l, 1.0), 0.0)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("causal", "block_q", "block_k", "interpret"))
-def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
-                    causal: bool = True, block_q: int = 128,
-                    block_k: int = 128, interpret: bool = False) -> jnp.ndarray:
+def _pad_seq(x: jnp.ndarray, target: int) -> jnp.ndarray:
+    pad = target - x.shape[2]
+    if pad == 0:
+        return x
+    return jnp.pad(x, [(0, 0), (0, 0), (0, pad), (0, 0)])
+
+
+@functools.partial(
+    jax.jit, static_argnames=("policy", "causal", "block_q", "block_k",
+                              "kv_len", "interpret"))
+def _flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     policy: TcecPolicy, causal: bool, block_q: int,
+                     block_k: int, kv_len: Optional[int],
+                     interpret: bool) -> jnp.ndarray:
     b, h, sq, d = q.shape
-    _, _, skv, _ = k.shape
-    bq = min(block_q, sq)
-    bk = min(block_k, skv)
-    assert sq % bq == 0 and skv % bk == 0
-    nk = skv // bk
+    _, kvh, skv, _ = k.shape
+    dv = v.shape[-1]
+    if h % kvh != 0:
+        raise ValueError(f"q heads {h} not a multiple of kv heads {kvh}")
+    if kv_len is None:
+        kv_len = skv
+    if not 0 <= kv_len <= skv:
+        raise ValueError(f"kv_len {kv_len} outside [0, {skv}]")
+    rep = h // kvh
+    # Non-dividing sq/skv are zero-padded to the block grid; padded kv
+    # columns fall under the kv_len mask, padded q rows are sliced off.
+    bq = min(block_q, _round_up(sq, 8))
+    bk = min(block_k, _round_up(skv, 128))
+    sqp, skvp = _round_up(sq, bq), _round_up(skv, bk)
+    qf = _pad_seq(q, sqp)
+    kf = _pad_seq(k, skvp)
+    vf = _pad_seq(v, skvp)
+    nk = skvp // bk
     scale = 1.0 / (d ** 0.5)
-    qf = q.reshape(b * h, sq, d)
-    kf = k.reshape(b * h, skv, d)
-    vf = v.reshape(b * h, skv, d)
     out = pl.pallas_call(
         functools.partial(_flash_kernel, causal=causal, scale=scale,
-                          nk=nk, bq=bq, bk=bk),
-        grid=(b * h, sq // bq, nk),
+                          kv_len=kv_len, nk=nk, bq=bq, bk=bk,
+                          dot_kw=dot_params(policy)),
+        grid=(b, h, sqp // bq, nk),
         in_specs=[
-            pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
-            pl.BlockSpec((1, bk, d), lambda bh, qi, ki: (bh, ki, 0)),
-            pl.BlockSpec((1, bk, d), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, 1, bq, d), lambda bi, hh, qi, ki: (bi, hh, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bi, hh, qi, ki, rep=rep: (bi, hh // rep, ki, 0)),
+            pl.BlockSpec((1, 1, bk, dv),
+                         lambda bi, hh, qi, ki, rep=rep: (bi, hh // rep, ki, 0)),
         ],
-        out_specs=pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
-        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), jnp.float32),
+        out_specs=pl.BlockSpec((1, 1, bq, dv),
+                               lambda bi, hh, qi, ki: (bi, hh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sqp, dv), jnp.float32),
         scratch_shapes=[
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, 1), jnp.float32),
-            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, dv), jnp.float32),
         ],
+        compiler_params=compiler_params(
+            ("parallel", "parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qf, kf, vf)
-    return out.reshape(b, h, sq, d).astype(q.dtype)
+    out = out[:, :, :sq]
+    # dense()'s dtype contract: corrected/vpu policies emit fp32, the plain
+    # bf16 policy follows the input dtype.
+    if policy.error_correction or policy.backend == "vpu":
+        return out
+    return out.astype(q.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False,
+                    policy: TcecPolicy | str | None = None,
+                    kv_len: Optional[int] = None) -> jnp.ndarray:
+    """Fused flash attention with policy-selected QK^T/PV precision.
+
+    q (b, h, sq, d); k (b, kvh, skv, d); v (b, kvh, skv, dv) with
+    h % kvh == 0 (GQA served by index maps, no head copies).  ``policy``
+    is a registered name, a ``TcecPolicy``, or ``None`` — resolved from the
+    active policy context at the ``"attn"`` site *before* the jit boundary,
+    so compile caches key on the concrete policy.  ``kv_len`` masks kv
+    columns >= kv_len (right-padded caches/cross-attention); fully-masked
+    rows return zeros.  ``kv_len`` is a *static* argument — the mask is
+    generated from its structural rule inside the kernel, so each distinct
+    length compiles once; steady-state serving with per-request lengths
+    should bucket kv_len (or use the XLA twins, which pay no recompile).
+    Differentiable: backward recomputes through the dense policy-reference
+    twin under the same policy.
+    """
+    return _flash_vjp(q, k, v, resolve_policy(policy, "attn"), causal,
+                      block_q, block_k, kv_len, interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _flash_vjp(q, k, v, policy, causal, block_q, block_k, kv_len, interpret):
+    return _flash_attention(q, k, v, policy, causal, block_q, block_k,
+                            kv_len, interpret)
+
+
+def _flash_vjp_fwd(q, k, v, policy, causal, block_q, block_k, kv_len,
+                   interpret):
+    out = _flash_vjp(q, k, v, policy, causal, block_q, block_k, kv_len,
+                     interpret)
+    return out, (q, k, v)
+
+
+def _flash_vjp_bwd(policy, causal, block_q, block_k, kv_len, interpret,
+                   res, g):
+    q, k, v = res
+    from . import ref as _ref
+
+    def twin(q_, k_, v_):
+        return _ref.attention_policy_ref(q_, k_, v_, policy, causal=causal,
+                                         kv_len=kv_len)
+
+    _, vjp = jax.vjp(twin, q, k, v)
+    dq, dk, dv = vjp(g.astype(jnp.float32))
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash_vjp.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)

@@ -96,9 +96,22 @@ def cumsum(x, block_n: int = 256, *, force_pallas: bool = False,
     return _ref.scan_cumsum_ref(x, block_n)
 
 
-def attention(q, k, v, causal: bool = True, *, force_pallas: bool = False,
-              interpret: bool = False):
-    if on_tpu() or force_pallas or interpret:
-        return flash_attention(q, k, v, causal=causal,
+def attention(q, k, v, causal: bool = True, *, policy=None,
+              site: str = "attn", kv_len: int | None = None,
+              force_pallas: bool = False, interpret: bool = False):
+    """Fused attention with policy dispatch at the ``"attn"`` site.
+
+    The resolved policy picks both the arithmetic (QK^T/PV pass schedule)
+    and the kernel backend: ``kernel == "pallas"`` (or running on TPU)
+    routes through the flash Pallas kernel — interpret mode off-TPU — and
+    everything else through the dense XLA twin with the same schedule.
+    """
+    pol = resolve_policy(policy, site)
+    if pol.kernel == "pallas" or on_tpu() or force_pallas or interpret:
+        return flash_attention(q, k, v, causal=causal, policy=pol,
+                               kv_len=kv_len,
                                interpret=interpret or not on_tpu())
-    return _ref.attention_ref(q, k, v, causal=causal)
+    if pol.backend == "mxu" and pol.passes == 1 and kv_len is None:
+        return _ref.attention_ref(q, k, v, causal=causal)  # legacy bf16 path
+    return _ref.attention_policy_ref(q, k, v, pol, causal=causal,
+                                     kv_len=kv_len)

@@ -71,6 +71,42 @@ def cumsum_exact_ref(x: jnp.ndarray) -> jnp.ndarray:
     return jnp.cumsum(x.astype(jnp.float32), axis=-1)
 
 
+def attention_policy_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         policy=None, causal: bool = True,
+                         kv_len=None) -> jnp.ndarray:
+    """Dense softmax attention with policy-selected QK^T/PV precision.
+
+    The XLA-twin oracle for the policy-aware flash kernel: same split
+    schedule (``kernels/tcec_core``), same structural masks (causal iota +
+    ``col < kv_len``), same fully-masked-row contract (zeros).  GQA kv
+    heads (kvh dividing h) are repeated logically.  Corrected/vpu policies
+    return fp32; the plain bf16 policy follows q's dtype.
+    """
+    from repro.core.context import resolve_policy
+    from .tcec_core import tcec_einsum
+    pol = resolve_policy(policy, "attn")
+    b, h, sq, d = q.shape
+    kvh, skv = k.shape[1], k.shape[2]
+    if kvh != h:
+        k = jnp.repeat(k, h // kvh, axis=1)
+        v = jnp.repeat(v, h // kvh, axis=1)
+    scale = 1.0 / (d ** 0.5)
+    s = tcec_einsum("bhqd,bhkd->bhqk", q, k, pol) * scale
+    valid = jnp.ones((sq, skv), bool)
+    if kv_len is not None:
+        valid = valid & (jnp.arange(skv)[None, :] < kv_len)
+    if causal:
+        valid = valid & (jnp.arange(sq)[:, None] >= jnp.arange(skv)[None, :])
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # rows with no valid column: softmax degenerates to uniform — emit zeros
+    p = jnp.where(jnp.any(valid, axis=-1)[:, None], p, 0.0)
+    o = tcec_einsum("bhqk,bhkd->bhqd", p, v, pol)
+    if pol.error_correction or pol.backend == "vpu":
+        return o
+    return o.astype(q.dtype)
+
+
 def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                   causal: bool = True) -> jnp.ndarray:
     """Dense softmax attention oracle (bf16 MMA for the two matmuls)."""

@@ -1,0 +1,197 @@
+"""Shared TCEC split/accumulate core — ONE split implementation for every
+error-corrected matmul site (standalone matmul kernels AND attention).
+
+The paper's WMMAe-TCEC insight is a *data-flow* property: the bf16 words of
+an FP32 operand are generated in registers, never staged as separate
+buffers.  That property is independent of which kernel consumes the words,
+so the split/accumulate machinery lives here and is imported by
+
+  * ``kernels/tcec_matmul.py``   — the standalone Pallas matmul family,
+  * ``kernels/flash_attention.py`` — QK^T and PV inside the fused flash
+    kernel (policy-selected precision per MXU pass schedule),
+  * ``models/attention.py``      — the XLA-compilable twins
+    (``chunked_attention`` / ``decode_attention`` / MLA), via
+    ``tcec_einsum``, so prefill, decode and the Pallas kernel run the same
+    split arithmetic.
+
+Two call forms cover both worlds:
+
+  * ``policy_dot(a, b, dn, n_words=, schedule=, vpu=)`` — static-parameter
+    form for Pallas kernel bodies (everything but the operands is a Python
+    constant; the splits are plain jnp ops on VREG values).
+  * ``tcec_einsum(eq, a, b, policy)`` — einsum form for the XLA twins
+    (XLA fuses the splits into the matmul operands: the WMMAe data flow).
+
+The pass-pair tables (``SCHEDULES``) are re-exported from ``core/tcec.py``
+(smallest-magnitude-first ordering, the RZ-avoidance schedule).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import TcecPolicy
+from repro.core.tcec import _SCHEDULES as SCHEDULES
+
+__all__ = [
+    "SCHEDULES", "MATMUL_DN", "round_up", "split_vregs", "mma_passes",
+    "policy_dot", "dot_params", "tcec_einsum", "compiler_params",
+]
+
+# (m, k) @ (k, n) dimension_numbers — the default contraction.
+MATMUL_DN = (((1,), (0,)), ((), ()))
+
+
+def round_up(x: int, mult: int) -> int:
+    """Round x up to a multiple of mult (block/tile alignment)."""
+    return -(-x // mult) * mult
+
+
+def split_vregs(x: jnp.ndarray, n_words: int) -> List[jnp.ndarray]:
+    """Split an FP32 value into bf16 words without leaving registers.
+
+    Iterative Dekker split: each word is the bf16 rounding of the running
+    residual, so ``x ~= sum(words)`` with the error bounded by the last
+    word's truncation (~2^-8 per word).  ``n_words == 1`` is the plain bf16
+    cast (the uncorrected policy).
+    """
+    words = []
+    rest = x
+    for _ in range(n_words - 1):
+        w = rest.astype(jnp.bfloat16)
+        words.append(w)
+        rest = rest - w.astype(jnp.float32)
+    words.append(rest.astype(jnp.bfloat16))
+    return words
+
+
+def mma_passes(aw: Sequence[jnp.ndarray], bw: Sequence[jnp.ndarray],
+               schedule, dn=MATMUL_DN) -> jnp.ndarray:
+    """Run the MXU pass schedule over split words; fp32 partial sum.
+
+    ``schedule`` is a tuple of (a_word_idx, b_word_idx) pairs in
+    smallest-magnitude-first order so the FP32 accumulation keeps low bits.
+    """
+    acc = None
+    for (i, j) in schedule:
+        term = jax.lax.dot_general(
+            aw[i], bw[j], dn, preferred_element_type=jnp.float32)
+        acc = term if acc is None else acc + term
+    return acc
+
+
+def policy_dot(a: jnp.ndarray, b: jnp.ndarray, dn=MATMUL_DN, *,
+               n_words: int, schedule, vpu: bool) -> jnp.ndarray:
+    """Policy-selected-precision dot for Pallas kernel bodies.
+
+    All policy facets arrive as static Python values (``dot_params``
+    derives them from a ``TcecPolicy``), so this traces inside a kernel
+    body exactly like hand-written splitting: vpu = plain fp32 VPU dot;
+    otherwise split both operands in VREGs and accumulate the scheduled
+    MXU passes.
+    """
+    if vpu:
+        return jax.lax.dot_general(
+            a.astype(jnp.float32), b.astype(jnp.float32), dn,
+            preferred_element_type=jnp.float32)
+    aw = split_vregs(a.astype(jnp.float32), n_words)
+    bw = split_vregs(b.astype(jnp.float32), n_words)
+    return mma_passes(aw, bw, schedule, dn)
+
+
+def dot_params(policy: TcecPolicy) -> Dict:
+    """Static ``policy_dot`` kwargs for a policy (kernel-launch helper)."""
+    return dict(n_words=policy.n_words, schedule=SCHEDULES[policy.passes],
+                vpu=policy.backend == "vpu")
+
+
+def tcec_einsum(eq: str, a: jnp.ndarray, b: jnp.ndarray,
+                policy: TcecPolicy) -> jnp.ndarray:
+    """The split schedule as an einsum — the XLA-twin form.
+
+    Same arithmetic as ``policy_dot`` for arbitrary two-operand einsum
+    equations (attention's batched/grouped contractions): vpu runs one fp32
+    einsum; MXU policies split both operands into bf16 words
+    (``passes == 1`` is the plain bf16 cast) and accumulate the scheduled
+    cross-term einsums in fp32, smallest-magnitude terms first.  The splits
+    are ordinary jnp ops, so XLA fuses them into the matmul operands — the
+    on-the-fly (WMMAe) data flow, never a staged word buffer.
+
+    Differentiable with policy-consistent accuracy: a ``custom_vjp`` runs
+    the backward contractions through the same split schedule (autodiff
+    through the splits would round the word cotangents to bf16, degrading
+    corrected-policy gradients to plain-bf16 level).  Operand labels summed
+    out by the forward (MLA's absorbed q axis) broadcast in the backward;
+    repeated (diagonal) labels are not supported.
+    """
+    return _tcec_einsum(eq, a, b, policy)
+
+
+def _tcec_einsum_impl(eq: str, a, b, policy: TcecPolicy) -> jnp.ndarray:
+    if policy.backend == "vpu":
+        return jnp.einsum(eq, a.astype(jnp.float32), b.astype(jnp.float32),
+                          preferred_element_type=jnp.float32)
+    aw = split_vregs(a.astype(jnp.float32), policy.n_words)
+    bw = split_vregs(b.astype(jnp.float32), policy.n_words)
+    acc = None
+    for (i, j) in SCHEDULES[policy.passes]:
+        term = jnp.einsum(eq, aw[i], bw[j],
+                          preferred_element_type=jnp.float32)
+        acc = term if acc is None else acc + term
+    return acc
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 3))
+def _tcec_einsum(eq, a, b, policy):
+    return _tcec_einsum_impl(eq, a, b, policy)
+
+
+def _tcec_einsum_fwd(eq, a, b, policy):
+    return _tcec_einsum(eq, a, b, policy), (a, b)
+
+
+def _bwd_operand(lhs_labels, lhs, rhs_labels, rhs, target_labels,
+                 target_shape, policy):
+    """d(target) = <lhs, rhs> through the split schedule.
+
+    A target label absent from both inputs was summed out in the forward
+    (e.g. the q axis of MLA's absorbed "bqhn,lhn->bhl"): its cotangent
+    broadcasts, so contract the reduced equation and broadcast back.
+    """
+    missing = [c for c in target_labels
+               if c not in lhs_labels and c not in rhs_labels]
+    reduced = "".join(c for c in target_labels if c not in missing)
+    d = _tcec_einsum_impl(f"{lhs_labels},{rhs_labels}->{reduced}",
+                          lhs, rhs, policy)
+    if missing:
+        for ax, c in enumerate(target_labels):
+            if c in missing:
+                d = jnp.expand_dims(d, ax)
+        d = jnp.broadcast_to(d, target_shape)
+    return d
+
+
+def _tcec_einsum_bwd(eq, policy, res, g):
+    a, b = res
+    ia, rest = eq.split(",")
+    ib, out = rest.split("->")
+    # da = <g, b> over b's labels; db = <a, g> over a's labels — both
+    # through the same split schedule (mirrors core/tcec's backward).
+    da = _bwd_operand(out, g, ib, b, ia, a.shape, policy)
+    db = _bwd_operand(ia, a, out, g, ib, b.shape, policy)
+    return da.astype(a.dtype), db.astype(b.dtype)
+
+
+_tcec_einsum.defvjp(_tcec_einsum_fwd, _tcec_einsum_bwd)
+
+
+def compiler_params(semantics: Tuple[str, ...]):
+    """Mosaic compiler params with version-tolerant naming."""
+    from jax.experimental.pallas import tpu as pltpu
+    try:
+        return pltpu.CompilerParams(dimension_semantics=semantics)
+    except (AttributeError, TypeError):  # older naming
+        return pltpu.TPUCompilerParams(dimension_semantics=semantics)

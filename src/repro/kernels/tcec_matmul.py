@@ -49,34 +49,16 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.policy import TcecPolicy
 from repro.core.context import resolve_policy
 from repro.core.tcec import _SCHEDULES, split_words
+# The split/accumulate arithmetic is shared with the flash-attention kernel
+# and the XLA attention twins — one implementation in kernels/tcec_core.
+from .tcec_core import split_vregs as _split_vregs, mma_passes as _mma_passes
+from .tcec_core import compiler_params as _shared_compiler_params
+from .tcec_core import round_up as _round_up
 
 __all__ = [
     "tcec_matmul_pallas", "tcec_matmul_staged", "tcec_matmul_pallas_grad",
     "default_blocks", "pad_amounts",
 ]
-
-
-def _split_vregs(x, n_words: int):
-    """Split an FP32 block into bf16 words without leaving registers."""
-    words = []
-    rest = x
-    for _ in range(n_words - 1):
-        w = rest.astype(jnp.bfloat16)
-        words.append(w)
-        rest = rest - w.astype(jnp.float32)
-    words.append(rest.astype(jnp.bfloat16))
-    return words
-
-
-def _mma_passes(aw, bw, schedule):
-    """Run the MXU pass schedule; returns the fp32 partial sum."""
-    acc = None
-    for (i, j) in schedule:
-        term = jax.lax.dot_general(
-            aw[i], bw[j], (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
-        acc = term if acc is None else acc + term
-    return acc
 
 
 def _block2d(ref):
@@ -128,10 +110,6 @@ def _staged_kernel(*refs, n_words, schedule, nk):
     @pl.when(k_idx == nk - 1)
     def _done():
         o_ref[0] = acc_ref[...]
-
-
-def _round_up(x: int, mult: int) -> int:
-    return -(-x // mult) * mult
 
 
 def default_blocks(m: int, n: int, k: int) -> Tuple[int, int, int]:
@@ -199,11 +177,8 @@ def _in_spec(ndim: int, rows: int, cols: int, kind: str):
 
 
 def _compiler_params():
-    semantics = ("parallel", "parallel", "parallel", "arbitrary")
-    try:
-        return pltpu.CompilerParams(dimension_semantics=semantics)
-    except (AttributeError, TypeError):  # older naming
-        return pltpu.TPUCompilerParams(dimension_semantics=semantics)
+    return _shared_compiler_params(
+        ("parallel", "parallel", "parallel", "arbitrary"))
 
 
 def tcec_matmul_pallas(a: jnp.ndarray, b: jnp.ndarray,

@@ -6,6 +6,12 @@
 Demonstrates the production serving path on any mesh: sharded params,
 prefill emits caches, decode_step consumes/updates them in place
 (donated buffers).
+
+The ``--policy`` / ``--site-policy`` flags reach every TCEC site including
+attention: ``--site-policy attn=bf16x6`` runs fp32-accurate QK^T/PV in
+prefill AND decode (one split schedule on both paths), and
+``--policy bf16x6_pallas`` additionally routes prefill attention through
+the fused flash Pallas kernel.
 """
 from __future__ import annotations
 

@@ -6,6 +6,17 @@ softmax (the XLA-compilable twin of ``kernels/flash_attention``; the Pallas
 kernel is used on real TPUs), and causal masks are generated from their
 structural rule (iota comparison) instead of being loaded.
 
+Attention is a first-class TCEC site: every QK^T/PV (and MLA absorbed)
+contraction resolves the ``"attn"`` policy from the active
+``policy_scope`` and runs the shared split schedule
+(``kernels/tcec_core``) — ``bf16x3``/``bf16x6`` recover ~fp24/~fp32
+accuracy on the matrix unit, ``fp32_vpu`` runs plain fp32, and the plain
+bf16 policy keeps the legacy ``mma_einsum`` fast path.  A policy with
+``kernel == "pallas"`` additionally dispatches ``chunked_attention`` onto
+the fused flash Pallas kernel, so one ``policy_scope("bf16x6_pallas")``
+flips the whole hot path.  Prefill, decode and the kernel share one
+schedule, so cached decode stays numerically consistent with prefill.
+
 Cache layout: ``{"k": (b, S, kv_heads, hd), "v": ...}``; MLA caches the
 *compressed* latent ``{"c_kv": (b, S, kv_lora), "k_rope": (b, S, rope_dim)}``
 and decodes through the absorbed-projection path (matmul-chain restructuring:
@@ -20,9 +31,30 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core.context import resolve_policy
+from repro.core.policy import TcecPolicy
+from repro.kernels.tcec_core import tcec_einsum
 from .base import PSpec, dense, rms_norm, rope_cos_sin, apply_rope, mma_einsum, shard_hint
 
 NEG_INF = -1e30
+
+
+def _attn_einsum(eq: str, a: jnp.ndarray, b: jnp.ndarray,
+                 pol: TcecPolicy) -> jnp.ndarray:
+    """Policy-routed attention einsum (fp32 accumulate).
+
+    The plain bf16 MXU policy keeps the legacy ``mma_einsum`` path (bf16
+    operands on TPU, fp32 on the CPU test backend — same contract as
+    ``dense``); corrected policies and vpu run the shared TCEC split
+    schedule, identical to the flash kernel's in-VREG arithmetic.
+    """
+    if pol.backend == "mxu" and pol.passes == 1:
+        return mma_einsum(eq, a, b)
+    return tcec_einsum(eq, a, b, pol)
+
+
+def _plain(pol: TcecPolicy) -> bool:
+    return pol.backend == "mxu" and not pol.error_correction
 
 
 # ---------------------------------------------------------------------------
@@ -31,11 +63,17 @@ NEG_INF = -1e30
 
 def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                       causal: bool, q_chunk: int = 512,
-                      kv_chunk: int = 1024) -> jnp.ndarray:
+                      kv_chunk: int = 1024, kv_len: Optional[int] = None,
+                      policy: TcecPolicy | str | None = None) -> jnp.ndarray:
     """q (b, sq, h, d), k/v (b, skv, kvh, d) -> (b, sq, h, d).
 
     GQA: h % kvh == 0; kv heads are repeated logically via reshape (no copy
     materialized beyond the chunk).
+
+    ``policy`` (default: the context's ``"attn"`` policy) selects the
+    QK^T/PV precision; ``kernel == "pallas"`` dispatches to the fused flash
+    kernel.  ``kv_len`` masks kv positions >= kv_len (right-padded
+    cross-attention); fully-masked rows emit zeros.
 
     Causal self-attention (sq == skv) skips fully-masked (q, kv) chunk pairs
     entirely (a pair-list scan over the lower triangle) — ~2x fewer MXU
@@ -45,12 +83,25 @@ def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     dv = v.shape[-1]
     rep = h // kvh
     scale = 1.0 / (d ** 0.5)
+    pol = resolve_policy(policy, "attn")
+    if pol.kernel == "pallas" and pol.backend == "mxu":
+        # Kernel-backend dispatch (the attention analogue of base.dense's
+        # Pallas routing): run the fused Mosaic kernel — native on TPU,
+        # interpret mode elsewhere.  Lazy import + module attribute lookup
+        # so tests can monkeypatch the kernel entry point.
+        import importlib
+        _fa = importlib.import_module("repro.kernels.flash_attention")
+        o = _fa.flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=causal, policy=pol,
+            kv_len=kv_len, interpret=jax.default_backend() != "tpu")
+        return o.transpose(0, 2, 1, 3)
     from .base import largest_divisor_leq
     q_chunk = largest_divisor_leq(sq, q_chunk)
     kv_chunk = largest_divisor_leq(skv, kv_chunk)
     nq, nk = sq // q_chunk, skv // kv_chunk
-    if causal and sq == skv and nq > 1:
-        return _causal_pair_attention(q, k, v, q_chunk, kv_chunk, scale)
+    if causal and sq == skv and nq > 1 and kv_len is None:
+        return _causal_pair_attention(q, k, v, q_chunk, kv_chunk, scale, pol)
 
     q = shard_hint(q, "batch", None, "heads", None)
     k = shard_hint(k, "batch", None, "kv", None)
@@ -69,20 +120,27 @@ def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         def kv_step(carry, ki):
             m, l, acc = carry
             k_blk, v_blk, k_off = ki
-            s = shard_hint(mma_einsum("bqgrd,bkgd->bgrqk", q32, k_blk),
+            s = shard_hint(_attn_einsum("bqgrd,bkgd->bgrqk", q32, k_blk, pol),
                            "batch", "kv", None, None, None) * scale
-            if causal:
+            if causal or kv_len is not None:
                 rows = q_off + jax.lax.broadcasted_iota(
                     jnp.int32, (q_chunk, kv_chunk), 0)
                 cols = k_off + jax.lax.broadcasted_iota(
                     jnp.int32, (q_chunk, kv_chunk), 1)
-                s = jnp.where(rows[None, None, None] >= cols[None, None, None],
-                              s, NEG_INF)
+                valid = jnp.ones((q_chunk, kv_chunk), bool)
+                if kv_len is not None:
+                    valid = valid & (cols < kv_len)
+                if causal:
+                    valid = valid & (rows >= cols)
+                s = jnp.where(valid[None, None, None], s, NEG_INF)
             m_new = jnp.maximum(m, jnp.max(s, -1))
             alpha = jnp.exp(m - m_new)
-            p = jnp.exp(s - m_new[..., None])
+            # rows with no valid column yet (m_new == NEG_INF) must not
+            # attend: exp(s - m_new) would be 1 at every masked position
+            p = jnp.where((m_new > 0.5 * NEG_INF)[..., None],
+                          jnp.exp(s - m_new[..., None]), 0.0)
             l_new = l * alpha + jnp.sum(p, -1)
-            pv = mma_einsum("bgrqk,bkgd->bgrqd", p, v_blk)
+            pv = _attn_einsum("bgrqk,bkgd->bgrqd", p, v_blk, pol)
             acc_new = acc * alpha[..., None] + pv
             return (m_new, l_new, acc_new), None
 
@@ -98,7 +156,11 @@ def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         (m, l, acc), _ = jax.lax.scan(
             jax.checkpoint(kv_step), init,
             (kc.swapaxes(0, 1), vc.swapaxes(0, 1), k_offs))
-        out = acc / jnp.maximum(l, 1e-30)[..., None]     # (b, g, r, qc, d)
+        # fully-masked rows (l == 0): emit zeros, never divide by the
+        # empty softmax sum
+        out = jnp.where((l > 0.0)[..., None],
+                        acc / jnp.maximum(l, 1e-30)[..., None],
+                        0.0)                             # (b, g, r, qc, d)
         return None, out
 
     q_offs = jnp.arange(nq, dtype=jnp.int32) * q_chunk
@@ -108,10 +170,10 @@ def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                            (qc.swapaxes(0, 1), q_offs))
     # outs: (nq, b, kvh, rep, q_chunk, dv) -> (b, sq, h, dv)
     out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, h, dv)
-    return out.astype(q.dtype)
+    return out if not _plain(pol) else out.astype(q.dtype)
 
 
-def _causal_pair_attention(q, k, v, q_chunk, kv_chunk, scale):
+def _causal_pair_attention(q, k, v, q_chunk, kv_chunk, scale, pol):
     """Causal chunked attention visiting only lower-triangular chunk pairs.
 
     The (q_chunk_idx, kv_chunk_idx) pairs with kv_end <= q_end are enumerated
@@ -159,7 +221,7 @@ def _causal_pair_attention(q, k, v, q_chunk, kv_chunk, scale):
         l = jnp.where(first, jnp.zeros_like(l), l)
         acc = jnp.where(first, jnp.zeros_like(acc), acc)
 
-        s = mma_einsum("bqgrd,bkgd->bgrqk", q_blk, k_blk) * scale
+        s = _attn_einsum("bqgrd,bkgd->bgrqk", q_blk, k_blk, pol) * scale
         rows = i * q_chunk + jax.lax.broadcasted_iota(
             jnp.int32, (q_chunk, kv_chunk), 0)
         cols = j * kv_chunk + jax.lax.broadcasted_iota(
@@ -168,15 +230,19 @@ def _causal_pair_attention(q, k, v, q_chunk, kv_chunk, scale):
                       s, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(s, -1))
         alpha = jnp.exp(m - m_new)
-        p = jnp.exp(s - m_new[..., None]).astype(jnp.bfloat16)  # bf16 tile
+        p = jnp.where((m_new > 0.5 * NEG_INF)[..., None],
+                      jnp.exp(s - m_new[..., None]), 0.0)
+        if _plain(pol):
+            p = p.astype(jnp.bfloat16)       # bf16 probability tile (§Perf H2)
         l = l * alpha + jnp.sum(p, -1, dtype=jnp.float32)
-        pv = mma_einsum("bgrqk,bkgd->bgrqd", p, v_blk)
+        pv = _attn_einsum("bgrqk,bkgd->bgrqd", p, v_blk, pol)
         acc = acc * alpha[..., None] + pv
         m = m_new
 
         # write the running result for q chunk i; later pairs of the same i
         # overwrite it in place, so the final write is the complete block
-        out_blk = (acc / jnp.maximum(l, 1e-30)[..., None])
+        out_blk = jnp.where((l > 0.0)[..., None],
+                            acc / jnp.maximum(l, 1e-30)[..., None], 0.0)
         outs = jax.lax.dynamic_update_index_in_dim(
             outs, out_blk.astype(outs.dtype), i, 0)
         return (m, l, acc, outs), None
@@ -184,34 +250,44 @@ def _causal_pair_attention(q, k, v, q_chunk, kv_chunk, scale):
     m0 = hint_c(jnp.full((b, kvh, rep, q_chunk), NEG_INF, jnp.float32))
     l0 = hint_c(jnp.zeros((b, kvh, rep, q_chunk), jnp.float32))
     acc0 = hint_c(jnp.zeros((b, kvh, rep, q_chunk, dv), jnp.float32))
-    outs0 = jnp.zeros((nq, b, kvh, rep, q_chunk, dv), q.dtype)
+    outs0 = jnp.zeros((nq, b, kvh, rep, q_chunk, dv),
+                      q.dtype if _plain(pol) else jnp.float32)
     (_, _, _, outs), _ = jax.lax.scan(
         jax.checkpoint(pair_step), (m0, l0, acc0, outs0),
         (pi, pj, is_first, is_last))
     out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, h, dv)
-    return out.astype(q.dtype)
+    return out if not _plain(pol) else out.astype(q.dtype)
 
 
 def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
-                     cache_index: jnp.ndarray) -> jnp.ndarray:
+                     cache_index: jnp.ndarray,
+                     policy: TcecPolicy | str | None = None) -> jnp.ndarray:
     """One-token attention against a cache.
 
     q (b, 1, h, d); k/v_cache (b, S, kvh, d); positions > cache_index masked.
+    QK/PV run the context-resolved ``"attn"`` policy's split schedule, so
+    decode matches prefill numerics per policy.  A negative ``cache_index``
+    (no valid positions) emits zeros.
     """
     b, _, h, d = q.shape
     _, S, kvh, _ = k_cache.shape
     rep = h // kvh
     scale = 1.0 / (d ** 0.5)
+    pol = resolve_policy(policy, "attn")
     qh = shard_hint(q.reshape(b, kvh, rep, d), "batch", "kv", None, None)
     k_cache = shard_hint(k_cache, "batch", "seq", "kv", None)
     v_cache = shard_hint(v_cache, "batch", "seq", "kv", None)
-    s = shard_hint(mma_einsum("bgrd,bsgd->bgrs", qh, k_cache) * scale,
+    s = shard_hint(_attn_einsum("bgrd,bsgd->bgrs", qh, k_cache, pol) * scale,
                    "batch", "kv", None, "seq")
     valid = jnp.arange(S, dtype=jnp.int32)[None] <= cache_index[:, None]
     s = jnp.where(valid[:, None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    o = mma_einsum("bgrs,bsgd->bgrd", p, v_cache)
-    return o.reshape(b, 1, h, d).astype(q.dtype)
+    # fully-masked rows: softmax of all-NEG_INF degenerates to uniform —
+    # emit zeros instead of averaging the (invalid) cache
+    p = jnp.where(jnp.any(valid, -1)[:, None, None, None], p, 0.0)
+    o = _attn_einsum("bgrs,bsgd->bgrd", p, v_cache, pol)
+    o = o.reshape(b, 1, h, d)
+    return o if not _plain(pol) else o.astype(q.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -242,10 +318,12 @@ def gqa_apply(p, x: jnp.ndarray, cfg: ArchConfig, positions: jnp.ndarray,
               causal: bool = True,
               kv_source: Optional[jnp.ndarray] = None,
               is_cross: bool = False,
-              emit_kv: bool = False) -> Tuple[jnp.ndarray, Optional[Dict]]:
+              emit_kv: bool = False,
+              kv_len: Optional[int] = None) -> Tuple[jnp.ndarray, Optional[Dict]]:
     """GQA attention. cache given -> decode (x is (b, 1, d)), returns updated
     cache.  is_cross: cross-attention (kv from kv_source at prefill, from the
-    precomputed cache at decode; no rope)."""
+    precomputed cache at decode; no rope).  kv_len masks right-padded
+    kv_source positions; fully-masked query rows attend to nothing (zeros)."""
     b, s, d = x.shape
     h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
     pol = "attn"
@@ -262,7 +340,7 @@ def gqa_apply(p, x: jnp.ndarray, cfg: ArchConfig, positions: jnp.ndarray,
             skv = kv_source.shape[1]
             k = dense(kv_source, p["wk"], pol, p.get("bk")).reshape(b, skv, kvh, hd)
             v = dense(kv_source, p["wv"], pol, p.get("bv")).reshape(b, skv, kvh, hd)
-            o = chunked_attention(q, k, v, causal=False)
+            o = chunked_attention(q, k, v, causal=False, kv_len=kv_len)
             new_cache = {"k": k, "v": v}
         y = dense(o.reshape(b, s, h * hd), p["wo"], pol)
         return y.astype(x.dtype), new_cache
@@ -339,6 +417,7 @@ def mla_apply(p, x: jnp.ndarray, cfg: ArchConfig, positions: jnp.ndarray,
     b, s, d = x.shape
     h = cfg.n_heads
     pol = "attn"
+    apol = resolve_policy(None, "attn")   # attn-site policy for the absorbed
     nope, rope_d, vd = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
 
     q_nope, q_rope = _mla_q(p, x, cfg)
@@ -360,25 +439,31 @@ def mla_apply(p, x: jnp.ndarray, cfg: ArchConfig, positions: jnp.ndarray,
         r_cache = jax.lax.dynamic_update_slice_in_dim(
             cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), cache_index, axis=1)
         S = c_cache.shape[1]
-        # absorb W_uk into q: q_c (b, h, lora)
-        q_c = mma_einsum("bqhn,lhn->bhl", q_nope, w_uk)
-        s_nope = mma_einsum("bhl,bsl->bhs", q_c, c_cache)
-        s_rope = mma_einsum("bqhr,bsr->bhs", q_rope, r_cache)
+        # absorb W_uk into q: q_c (b, h, lora) — the whole absorbed chain
+        # runs the attn-site split schedule so decode matches prefill
+        q_c = _attn_einsum("bqhn,lhn->bhl", q_nope, w_uk, apol)
+        s_nope = _attn_einsum("bhl,bsl->bhs", q_c, c_cache, apol)
+        s_rope = _attn_einsum("bqhr,bsr->bhs", q_rope, r_cache, apol)
         scores = (s_nope + s_rope) / ((nope + rope_d) ** 0.5)
         valid = jnp.arange(S, dtype=jnp.int32)[None] <= cache_index
         scores = jnp.where(valid[:, None], scores, NEG_INF)
         probs = jax.nn.softmax(scores, axis=-1)
-        o_c = mma_einsum("bhs,bsl->bhl", probs, c_cache)
-        o = mma_einsum("bhl,lhv->bhv", o_c, w_uv)
+        # emit zeros for rows with no valid cache position (cache_index < 0)
+        probs = jnp.where(jnp.any(valid, -1)[:, None, None], probs, 0.0)
+        o_c = _attn_einsum("bhs,bsl->bhl", probs, c_cache, apol)
+        o = _attn_einsum("bhl,lhv->bhv", o_c, w_uv, apol)
         y = dense(o.reshape(b, 1, h * vd).astype(x.dtype), p["wo"], pol)
         return y.astype(x.dtype), {"c_kv": c_cache, "k_rope": r_cache}
 
     # --- train/prefill: expand K/V, chunked attention ---
-    k_nope = mma_einsum("bsl,lhn->bshn", c_kv, w_uk).astype(x.dtype)
-    v = mma_einsum("bsl,lhv->bshv", c_kv, w_uv).astype(x.dtype)
+    # expansion precision follows the attn policy (fp32 words under
+    # corrected policies keep prefill consistent with absorbed decode)
+    kv_dt = x.dtype if _plain(apol) else jnp.float32
+    k_nope = _attn_einsum("bsl,lhn->bshn", c_kv, w_uk, apol).astype(kv_dt)
+    v = _attn_einsum("bsl,lhv->bshv", c_kv, w_uv, apol).astype(kv_dt)
     k_rope_b = jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, rope_d))
     q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
-    k_full = jnp.concatenate([k_nope, k_rope_b.astype(x.dtype)], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_rope_b.astype(kv_dt)], axis=-1)
     o = chunked_attention(q_full, k_full, v, causal=causal)
     y = dense(o.reshape(b, s, h * vd), p["wo"], pol)
     new_cache = {"c_kv": c_kv, "k_rope": k_rope}

@@ -1,0 +1,145 @@
+"""Shared fp64 oracles + error-metric helpers for the whole test suite.
+
+One authoritative high-precision reference per primitive (matmul, softmax
+attention, the recurrent mixers), so accuracy tests across files measure
+against the same arithmetic, plus the assertion helpers that express the
+paper's accuracy claims (max relative error vs an fp64 oracle, ulp
+distance).
+
+All oracles run in numpy float64 outside jit — they are references, not
+implementations under test.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# error metrics
+# ---------------------------------------------------------------------------
+
+def max_rel_err(out, ref) -> float:
+    """max |out - ref| normalized by max |ref| (the paper's Fig.-8 metric)."""
+    out = np.asarray(out, np.float64)
+    ref = np.asarray(ref, np.float64)
+    scale = np.max(np.abs(ref)) + 1e-300
+    return float(np.max(np.abs(out - ref)) / scale)
+
+
+def assert_max_rel_err(out, ref, bound: float, what: str = "") -> None:
+    err = max_rel_err(out, ref)
+    assert err < bound, (
+        f"{what or 'output'}: max rel err {err:.3e} >= bound {bound:.3e}")
+
+
+def ulp_distance(out, ref) -> np.ndarray:
+    """Elementwise distance in units of the fp32 last place at ref's scale."""
+    out = np.asarray(out, np.float32).astype(np.float64)
+    ref = np.asarray(ref, np.float64)
+    ulp = np.spacing(np.abs(ref).astype(np.float32)).astype(np.float64)
+    return np.abs(out - ref) / np.maximum(ulp, np.finfo(np.float32).tiny)
+
+
+def assert_ulp_close(out, ref, max_ulp: float, what: str = "") -> None:
+    d = ulp_distance(out, ref)
+    assert np.max(d) <= max_ulp, (
+        f"{what or 'output'}: max ulp distance {np.max(d):.1f} > {max_ulp}")
+
+
+# ---------------------------------------------------------------------------
+# matmul / attention
+# ---------------------------------------------------------------------------
+
+def matmul_fp64(a, b) -> np.ndarray:
+    """fp64 matmul oracle; numpy ``@`` broadcasting covers the kernel's
+    batched (b,m,k)@(b,k,n) and broadcast (b,m,k)@(k,n) shape family."""
+    return np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+
+
+def attention_fp64(q, k, v, causal: bool = True,
+                   kv_len: Optional[int] = None,
+                   layout: str = "bhsd") -> np.ndarray:
+    """fp64 softmax-attention oracle.
+
+    layout "bhsd": q (b, h, sq, d), k/v (b, kvh, skv, d|dv) — the kernel
+    layout; "bshd": q (b, sq, h, d), k/v (b, skv, kvh, d) — the model twin
+    layout (returned in the same layout as the input).  GQA kv heads are
+    repeated; kv positions >= kv_len are masked; fully-masked rows are
+    zero (the framework-wide contract).
+    """
+    if layout not in ("bhsd", "bshd"):
+        raise ValueError(f"bad layout {layout}")
+    qn = np.asarray(q, np.float64)
+    kn = np.asarray(k, np.float64)
+    vn = np.asarray(v, np.float64)
+    if layout == "bshd":
+        qn, kn, vn = (x.transpose(0, 2, 1, 3) for x in (qn, kn, vn))
+    h, kvh = qn.shape[1], kn.shape[1]
+    if kvh != h:
+        kn = np.repeat(kn, h // kvh, axis=1)
+        vn = np.repeat(vn, h // kvh, axis=1)
+    sq, d = qn.shape[2], qn.shape[3]
+    skv = kn.shape[2]
+    s = np.einsum("bhqd,bhkd->bhqk", qn, kn) / np.sqrt(d)
+    valid = np.ones((sq, skv), bool)
+    if kv_len is not None:
+        valid &= np.arange(skv)[None, :] < kv_len
+    if causal:
+        valid &= np.arange(sq)[:, None] >= np.arange(skv)[None, :]
+    s = np.where(valid, s, -np.inf)
+    m = np.max(s, axis=-1, keepdims=True)
+    m = np.where(np.isfinite(m), m, 0.0)          # fully-masked rows
+    p = np.exp(s - m)
+    l = np.sum(p, axis=-1, keepdims=True)
+    p = np.where(l > 0.0, p / np.where(l > 0.0, l, 1.0), 0.0)
+    o = np.einsum("bhqk,bhkd->bhqd", p, vn)
+    return o if layout == "bhsd" else o.transpose(0, 2, 1, 3)
+
+
+# ---------------------------------------------------------------------------
+# recurrent mixers (sequential recurrences, the chunk-form references)
+# ---------------------------------------------------------------------------
+
+def mlstm_sequential(q, k, v, lf, li, C0, n0):
+    """Step-by-step mLSTM recurrence: q/k/v (b, s, nh, dh), log gates
+    (b, s, nh); returns (y (b, s, nh, dh), C_last, n_last)."""
+    q, k, v = (np.asarray(x, np.float64) for x in (q, k, v))
+    lf, li = np.asarray(lf, np.float64), np.asarray(li, np.float64)
+    C = np.asarray(C0, np.float64)
+    n = np.asarray(n0, np.float64)
+    s = q.shape[1]
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    ys = []
+    for t in range(s):
+        f_ = np.exp(lf[:, t])[..., None, None]
+        i_ = np.exp(li[:, t])[..., None, None]
+        C = C * f_ + i_ * k[:, t][..., :, None] * v[:, t][..., None, :]
+        n = n * f_[..., 0] + i_[..., 0] * k[:, t]
+        num = np.einsum("bhd,bhde->bhe", q[:, t] * scale, C)
+        den = np.abs(np.einsum("bhd,bhd->bh", q[:, t] * scale, n))
+        ys.append(num / np.maximum(den, 1.0)[..., None])
+    return np.stack(ys, 1), C, n
+
+
+def mamba_sequential(x, dt, B, C, a):
+    """Step-by-step selective-SSM recurrence: x/dt (b, s, d_in),
+    B/C (b, s, n), a (d_in, n); returns (y (b, s, d_in), h_last)."""
+    x, dt = np.asarray(x, np.float64), np.asarray(dt, np.float64)
+    B, C = np.asarray(B, np.float64), np.asarray(C, np.float64)
+    a = np.asarray(a, np.float64)
+    b, s, d_in = x.shape
+    h = np.zeros((b, d_in, a.shape[1]))
+    ys = []
+    for t in range(s):
+        decay = np.exp(dt[:, t, :, None] * a[None])
+        h = decay * h + (dt[:, t] * x[:, t])[..., None] * B[:, t, None, :]
+        ys.append(np.sum(h * C[:, t, None, :], axis=-1))
+    return np.stack(ys, 1), h
+
+
+def as_np(x) -> np.ndarray:
+    """jnp -> np with dtype preserved (helper for comparing test outputs)."""
+    return np.asarray(jnp.asarray(x))

@@ -1,0 +1,392 @@
+"""Attention as a TCEC site: policy-selected QK^T/PV precision in the flash
+Pallas kernel (interpret mode) and its XLA twins, the fully-masked-row
+contract, prefill/decode cache consistency under corrected policies, and
+site-reach of ``policy_scope`` through a model forward."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, BlockSpec, MlaConfig
+from repro.core.context import policy_scope
+from repro.kernels.flash_attention import flash_attention
+from repro.models.attention import (chunked_attention, decode_attention,
+                                    gqa_apply, gqa_params, mla_apply,
+                                    mla_params)
+from repro.models.base import initialize
+
+from oracles import attention_fp64, assert_max_rel_err, max_rel_err
+
+POLICIES = ["fp32_vpu", "bf16x1", "bf16x3", "bf16x6"]
+# max-rel-err ceilings vs the fp64 oracle (well-conditioned N(0,1) inputs):
+# vpu/bf16x6 at fp32 level, bf16x3 at the 2-word (~fp24) level, bf16x1 at
+# the plain-bf16 level.
+TOL = {"fp32_vpu": 4e-6, "bf16x1": 5e-2, "bf16x3": 5e-4, "bf16x6": 4e-6}
+
+
+def _qkv(rng, b, h, kvh, sq, skv, d, dv=None):
+    q = rng.standard_normal((b, h, sq, d)).astype(np.float32)
+    k = rng.standard_normal((b, kvh, skv, d)).astype(np.float32)
+    v = rng.standard_normal((b, kvh, skv, dv or d)).astype(np.float32)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel: policy x causal x GQA x non-dividing shapes vs fp64
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("h,kvh,sq,skv,d", [
+    (4, 4, 128, 128, 64),      # dividing blocks, MHA
+    (4, 2, 128, 128, 32),      # GQA 2:1
+    (8, 2, 100, 72, 32),       # GQA 4:1, nothing divides the blocks
+])
+def test_flash_policy_parity_vs_fp64(policy, causal, h, kvh, sq, skv, d):
+    rng = np.random.default_rng(h + kvh + sq + skv + (13 if causal else 0))
+    q, k, v = _qkv(rng, 2, h, kvh, sq, skv, d)
+    out = np.asarray(flash_attention(
+        *map(jnp.asarray, (q, k, v)), causal=causal, policy=policy,
+        interpret=True))
+    assert_max_rel_err(out, attention_fp64(q, k, v, causal=causal),
+                       TOL[policy], f"flash {policy}")
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("causal", [False, True])
+def test_chunked_policy_parity_vs_fp64(policy, causal):
+    """The XLA twin runs the same schedule (non-dividing chunk shapes)."""
+    rng = np.random.default_rng(71 if causal else 72)
+    b, s, h, kvh, d = 2, 96, 4, 2, 32
+    q = rng.standard_normal((b, s, h, d)).astype(np.float32)
+    k = rng.standard_normal((b, s, kvh, d)).astype(np.float32)
+    v = rng.standard_normal((b, s, kvh, d)).astype(np.float32)
+    out = np.asarray(chunked_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), causal=causal,
+        q_chunk=32, kv_chunk=48, policy=policy))
+    assert_max_rel_err(out, attention_fp64(q, k, v, causal=causal,
+                                           layout="bshd"),
+                       TOL[policy], f"chunked {policy}")
+
+
+def test_policy_precision_separation(monkeypatch):
+    """Acceptance gate: under bf16x6 BOTH attention implementations match
+    the fp64 oracle to <= 2^-20 max relative error on well-conditioned
+    inputs where plain bf16 misses by >= 2^-8."""
+    rng = np.random.default_rng(0)
+    b, h, sq, skv, d = 2, 2, 128, 128, 64
+    q, k, v = _qkv(rng, b, h, h, sq, skv, d)
+    ref = attention_fp64(q, k, v, causal=False)
+
+    def flash_err(policy):
+        out = flash_attention(*map(jnp.asarray, (q, k, v)), causal=False,
+                              policy=policy, interpret=True)
+        return max_rel_err(np.asarray(out), ref)
+
+    assert flash_err("bf16x6") <= 2.0 ** -20
+    assert flash_err("bf16x1") >= 2.0 ** -8
+
+    qs, ks, vs = (x.transpose(0, 2, 1, 3) for x in (q, k, v))
+    refs = ref.transpose(0, 2, 1, 3)
+
+    def chunked_err(policy):
+        out = chunked_attention(*map(jnp.asarray, (qs, ks, vs)),
+                                causal=False, q_chunk=64, kv_chunk=64,
+                                policy=policy)
+        return max_rel_err(np.asarray(out), refs)
+
+    assert chunked_err("bf16x6") <= 2.0 ** -20
+    # the plain policy's mma_einsum path is fp32 on the CPU test backend;
+    # pin it to real bf16 operands to measure the plain-bf16 miss
+    monkeypatch.setenv("REPRO_MMA_DTYPE", "bfloat16")
+    assert chunked_err("bf16x1") >= 2.0 ** -8
+
+
+def test_flash_matches_chunked_twin_bitlevel_tolerance():
+    """Kernel and XLA twin share one split implementation: under bf16x6
+    they agree to fp32 roundoff (different accumulation order only)."""
+    rng = np.random.default_rng(5)
+    q, k, v = _qkv(rng, 1, 4, 2, 64, 64, 32)
+    out_k = np.asarray(flash_attention(
+        *map(jnp.asarray, (q, k, v)), causal=True, policy="bf16x6",
+        interpret=True))
+    out_t = np.asarray(chunked_attention(
+        jnp.asarray(q.transpose(0, 2, 1, 3)),
+        jnp.asarray(k.transpose(0, 2, 1, 3)),
+        jnp.asarray(v.transpose(0, 2, 1, 3)), causal=True,
+        policy="bf16x6")).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(out_k, out_t, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Fully-masked rows (padded-kv cross-attention): zeros, not 1/l blowups
+# ---------------------------------------------------------------------------
+
+def test_fully_masked_rows_emit_zeros():
+    rng = np.random.default_rng(11)
+    q, k, v = _qkv(rng, 2, 2, 2, 16, 24, 32)
+    for policy in ("bf16x1", "bf16x6"):
+        out = np.asarray(flash_attention(
+            *map(jnp.asarray, (q, k, v)), causal=False, policy=policy,
+            kv_len=0, interpret=True))
+        assert np.all(out == 0.0), policy
+        qs, ks, vs = (x.transpose(0, 2, 1, 3) for x in (q, k, v))
+        out_c = np.asarray(chunked_attention(
+            *map(jnp.asarray, (qs, ks, vs)), causal=False, kv_len=0,
+            policy=policy))
+        assert np.all(out_c == 0.0), policy
+    # decode with no valid cache position (cache_index < 0)
+    dec = np.asarray(decode_attention(
+        jnp.asarray(q[:, :, :1].transpose(0, 2, 1, 3)),
+        jnp.asarray(k.transpose(0, 2, 1, 3)),
+        jnp.asarray(v.transpose(0, 2, 1, 3)),
+        jnp.full((2,), -1, jnp.int32)))
+    assert np.all(dec == 0.0)
+
+
+@pytest.mark.parametrize("impl", ["flash", "chunked"])
+def test_partial_kv_padding_matches_truncated_oracle(impl):
+    """col >= kv_len masking == attention over the first kv_len positions."""
+    rng = np.random.default_rng(12)
+    kv_len = 40
+    q, k, v = _qkv(rng, 2, 4, 2, 32, 64, 32)
+    ref = attention_fp64(q, k[:, :, :kv_len], v[:, :, :kv_len], causal=False)
+    if impl == "flash":
+        out = np.asarray(flash_attention(
+            *map(jnp.asarray, (q, k, v)), causal=False, policy="bf16x6",
+            kv_len=kv_len, interpret=True))
+    else:
+        out = np.asarray(chunked_attention(
+            jnp.asarray(q.transpose(0, 2, 1, 3)),
+            jnp.asarray(k.transpose(0, 2, 1, 3)),
+            jnp.asarray(v.transpose(0, 2, 1, 3)), causal=False,
+            kv_len=kv_len, policy="bf16x6")).transpose(0, 2, 1, 3)
+    assert_max_rel_err(out, ref, TOL["bf16x6"], f"{impl} kv_len")
+
+
+def test_cross_attention_padded_kv_regression():
+    """End-to-end bugfix scenario: GQA cross-attention against a fully
+    padded KV source must return finite values (and zero attention output
+    before the output projection's bias-free matmul -> zeros)."""
+    cfg = _gqa_cfg()
+    p = initialize(jax.random.PRNGKey(0), gqa_params(cfg))
+    b, s, skv = 2, 8, 16
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, cfg.d_model),
+                          jnp.float32)
+    src = jax.random.normal(jax.random.PRNGKey(2), (b, skv, cfg.d_model),
+                            jnp.float32)
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    y, _ = gqa_apply(p, x, cfg, positions, causal=False, kv_source=src,
+                     is_cross=True, kv_len=0)
+    assert np.all(np.isfinite(np.asarray(y)))
+    assert np.all(np.asarray(y) == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Prefill/decode cache consistency under corrected policies
+# ---------------------------------------------------------------------------
+
+def _gqa_cfg():
+    return ArchConfig(
+        name="tiny-gqa", family="dense", n_layers=1, d_model=32, n_heads=4,
+        n_kv_heads=2, d_ff=64, vocab=64,
+        pattern=(BlockSpec("attn", "dense"),),
+        param_dtype="float32", remat="none")
+
+
+def _mla_cfg():
+    return ArchConfig(
+        name="tiny-mla", family="dense", n_layers=1, d_model=32, n_heads=2,
+        n_kv_heads=2, d_ff=64, vocab=64,
+        pattern=(BlockSpec("mla", "dense"),),
+        mla=MlaConfig(kv_lora_rank=16, q_lora_rank=0, qk_nope_head_dim=16,
+                      qk_rope_head_dim=8, v_head_dim=16),
+        param_dtype="float32", remat="none")
+
+
+CONSISTENCY_TOL = {"bf16x3": 2e-3, "bf16x6": 2e-5}
+
+
+@pytest.mark.parametrize("policy", ["bf16x3", "bf16x6"])
+def test_gqa_prefill_decode_consistency(policy):
+    """Decoding token s against the prefill cache == prefilling s+1 tokens,
+    under the corrected policies (one split schedule on both paths)."""
+    cfg = _gqa_cfg()
+    p = initialize(jax.random.PRNGKey(0), gqa_params(cfg))
+    b, s = 2, 12
+    kvh, hd = cfg.n_kv_heads, cfg.d_model // cfg.n_heads
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s + 1, cfg.d_model),
+                          jnp.float32)
+    positions = jnp.broadcast_to(jnp.arange(s + 1)[None], (b, s + 1))
+    with policy_scope(policy):
+        y_full, _ = gqa_apply(p, x, cfg, positions)
+        _, kv = gqa_apply(p, x[:, :s], cfg, positions[:, :s], emit_kv=True)
+        cache = {
+            "k": jnp.zeros((b, s + 1, kvh, hd), jnp.float32)
+            .at[:, :s].set(kv["k"].astype(jnp.float32)),
+            "v": jnp.zeros((b, s + 1, kvh, hd), jnp.float32)
+            .at[:, :s].set(kv["v"].astype(jnp.float32)),
+        }
+        y_dec, _ = gqa_apply(p, x[:, s:], cfg, positions[:, s:],
+                             cache=cache, cache_index=s)
+    np.testing.assert_allclose(
+        np.asarray(y_dec[:, 0]), np.asarray(y_full[:, -1]),
+        rtol=CONSISTENCY_TOL[policy], atol=CONSISTENCY_TOL[policy])
+
+
+@pytest.mark.parametrize("policy", ["bf16x3", "bf16x6"])
+def test_mla_prefill_decode_consistency(policy):
+    """MLA absorbed decode vs expanded prefill: the matmul-chain
+    restructuring stays consistent under the corrected policies."""
+    cfg = _mla_cfg()
+    p = initialize(jax.random.PRNGKey(0), mla_params(cfg))
+    b, s = 2, 10
+    m = cfg.mla
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s + 1, cfg.d_model),
+                          jnp.float32)
+    positions = jnp.broadcast_to(jnp.arange(s + 1)[None], (b, s + 1))
+    with policy_scope(policy):
+        y_full, _ = mla_apply(p, x, cfg, positions)
+        _, latent = mla_apply(p, x[:, :s], cfg, positions[:, :s])
+        cache = {
+            "c_kv": jnp.zeros((b, s + 1, m.kv_lora_rank), jnp.float32)
+            .at[:, :s].set(latent["c_kv"].astype(jnp.float32)),
+            "k_rope": jnp.zeros((b, s + 1, m.qk_rope_head_dim), jnp.float32)
+            .at[:, :s].set(latent["k_rope"].astype(jnp.float32)),
+        }
+        y_dec, _ = mla_apply(p, x[:, s:], cfg, positions[:, s:],
+                             cache=cache, cache_index=s)
+    np.testing.assert_allclose(
+        np.asarray(y_dec[:, 0]), np.asarray(y_full[:, -1]),
+        rtol=CONSISTENCY_TOL[policy], atol=CONSISTENCY_TOL[policy])
+
+
+# ---------------------------------------------------------------------------
+# Site reach + kernel dispatch through a model forward
+# ---------------------------------------------------------------------------
+
+def test_policy_scope_attn_site_reaches_model_forward():
+    """Changing only the attn-site policy changes prefill logits — the
+    scope reaches QK^T/PV through the model with zero policy strings."""
+    from repro.models import init_params, prefill
+    cfg = _gqa_cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                          cfg.vocab)}
+
+    def logits_under(**scope_kwargs):
+        with policy_scope("bf16x1", **scope_kwargs):
+            logits, _ = prefill(params, batch, cfg)
+        return np.asarray(logits)
+
+    l1 = logits_under(attn="bf16x1")
+    l6 = logits_under(attn="bf16x6")
+    assert np.any(l1 != l6)
+    assert np.all(np.isfinite(l6))
+
+
+def test_policy_scope_pallas_flips_model_attention_onto_kernel(monkeypatch):
+    """One policy_scope("bf16x6_pallas") routes model attention through the
+    flash Pallas kernel (site-reach at the kernel-dispatch level)."""
+    import importlib
+    fa = importlib.import_module("repro.kernels.flash_attention")
+    from repro.models import init_params, prefill
+    cfg = _gqa_cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (1, 16), 0,
+                                          cfg.vocab)}
+    calls = []
+    orig = fa.flash_attention
+
+    def spy(*args, **kwargs):
+        calls.append(1)
+        return orig(*args, **kwargs)
+
+    monkeypatch.setattr(fa, "flash_attention", spy)
+    with policy_scope("bf16x6_pallas"):
+        logits_pal, _ = prefill(params, batch, cfg)
+    assert calls, "flash kernel was not dispatched under the pallas policy"
+    with policy_scope("bf16x6"):
+        logits_xla, _ = prefill(params, batch, cfg)
+    np.testing.assert_allclose(np.asarray(logits_pal), np.asarray(logits_xla),
+                               rtol=1e-4, atol=1e-4)
+    with policy_scope("bf16x1"):
+        logits_plain, _ = prefill(params, batch, cfg)
+    assert np.any(np.asarray(logits_pal) != np.asarray(logits_plain))
+
+
+# ---------------------------------------------------------------------------
+# Differentiability of the kernel path
+# ---------------------------------------------------------------------------
+
+def test_flash_grads_match_xla_twin():
+    """jax.grad through the Pallas kernel (custom_vjp; backward recomputes
+    via the dense policy twin) tracks the chunked twin's grads."""
+    rng = np.random.default_rng(21)
+    q, k, v = _qkv(rng, 1, 2, 2, 32, 32, 16)
+    qj, kj, vj = map(jnp.asarray, (q, k, v))
+
+    def loss_flash(q_):
+        return jnp.sum(jnp.sin(flash_attention(
+            q_, kj, vj, causal=True, policy="bf16x6", interpret=True)))
+
+    def loss_twin(q_):
+        return jnp.sum(jnp.sin(chunked_attention(
+            q_.transpose(0, 2, 1, 3), kj.transpose(0, 2, 1, 3),
+            vj.transpose(0, 2, 1, 3), causal=True,
+            policy="bf16x6").transpose(0, 2, 1, 3)))
+
+    g_f = jax.grad(loss_flash)(qj)
+    g_t = jax.grad(loss_twin)(qj)
+    np.testing.assert_allclose(np.asarray(g_f), np.asarray(g_t),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_tcec_einsum_grad_with_summed_out_label():
+    """Regression: backward of an einsum whose operand label is summed out
+    in the forward (MLA's absorbed "bqhn,lhn->bhl") broadcasts instead of
+    crashing, and corrected-policy grads stay at fp32 level."""
+    from repro.kernels.tcec_core import tcec_einsum
+    from repro.core.policy import get_policy
+    rng = np.random.default_rng(31)
+    a = jnp.asarray(rng.standard_normal((2, 1, 3, 8)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((16, 3, 8)).astype(np.float32))
+    eq = "bqhn,lhn->bhl"
+
+    def loss(f):
+        return lambda a_: jnp.sum(jnp.sin(f(a_)))
+
+    g6 = jax.grad(loss(lambda a_: tcec_einsum(eq, a_, b,
+                                              get_policy("bf16x6"))))(a)
+    gf = jax.grad(loss(lambda a_: jnp.einsum(
+        eq, a_, b, preferred_element_type=jnp.float32)))(a)
+    np.testing.assert_allclose(np.asarray(g6), np.asarray(gf),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("policy", ["bf16x6"])
+def test_mla_decode_differentiable_under_corrected_policy(policy):
+    """jax.grad through the MLA absorbed-decode path under a corrected
+    attn policy (exercises the summed-out-label backward end-to-end)."""
+    cfg = _mla_cfg()
+    p = initialize(jax.random.PRNGKey(0), mla_params(cfg))
+    b, S = 2, 6
+    m = cfg.mla
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, 1, cfg.d_model),
+                          jnp.float32)
+    cache = {"c_kv": jax.random.normal(
+                 jax.random.PRNGKey(2), (b, S, m.kv_lora_rank), jnp.float32),
+             "k_rope": jax.random.normal(
+                 jax.random.PRNGKey(3), (b, S, m.qk_rope_head_dim),
+                 jnp.float32)}
+    positions = jnp.full((b, 1), S - 1, jnp.int32)
+
+    def loss(x_):
+        with policy_scope(policy):
+            y, _ = mla_apply(p, x_, cfg, positions, cache=cache,
+                             cache_index=S - 1)
+        return jnp.sum(jnp.sin(y))
+
+    g = jax.grad(loss)(x)
+    assert np.all(np.isfinite(np.asarray(g)))
+    assert np.any(np.asarray(g) != 0.0)

@@ -12,6 +12,8 @@ from repro.kernels.tcec_matmul import (tcec_matmul_pallas, tcec_matmul_staged,
                                        tcec_matmul_pallas_grad)
 from repro.kernels import ref as kref
 
+from oracles import matmul_fp64, assert_max_rel_err, max_rel_err
+
 SHAPES = [
     (128, 128, 128, (128, 128, 128)),
     (256, 512, 128, (128, 128, 256)),
@@ -30,9 +32,7 @@ def test_tcec_kernel_vs_fp64(m, k, n, block, policy):
     b = rng.standard_normal((k, n)).astype(np.float32)
     out = np.asarray(tcec_matmul_pallas(jnp.asarray(a), jnp.asarray(b),
                                         policy, block, True))
-    ref = np.asarray(kref.matmul_fp64_ref(a, b))
-    scale = np.max(np.abs(ref))
-    assert np.max(np.abs(out - ref)) / scale < TOL[policy], policy
+    assert_max_rel_err(out, matmul_fp64(a, b), TOL[policy], policy)
 
 
 @pytest.mark.parametrize("policy", ["bf16x3", "bf16x6"])
@@ -68,8 +68,7 @@ def test_nonsquare_blocks_and_ill_scaled_inputs():
     b = rng.standard_normal((512, 128)).astype(np.float32)
     out = np.asarray(tcec_matmul_pallas(jnp.asarray(a), jnp.asarray(b),
                                         "bf16x6", (128, 128, 512), True))
-    ref = np.asarray(kref.matmul_fp64_ref(a, b))
-    assert np.max(np.abs(out - ref)) / (np.max(np.abs(ref)) + 1e-30) < 1e-4
+    assert_max_rel_err(out, matmul_fp64(a, b), 1e-4, "ill-scaled bf16x6")
     assert np.all(np.isfinite(out))
 
 
@@ -95,9 +94,7 @@ def test_batched_kernel_vs_fp64(bsz, m, k, n, block, policy):
     out = np.asarray(tcec_matmul_pallas(jnp.asarray(a), jnp.asarray(b),
                                         policy, block, True))
     assert out.shape == (bsz, m, n)
-    ref = np.asarray(kref.matmul_fp64_ref(a, b))
-    scale = np.max(np.abs(ref))
-    assert np.max(np.abs(out - ref)) / scale < TOL[policy], policy
+    assert_max_rel_err(out, matmul_fp64(a, b), TOL[policy], policy)
 
 
 @pytest.mark.parametrize("policy", POLICIES)
@@ -108,10 +105,8 @@ def test_batched_broadcast_rhs(policy):
     b = rng.standard_normal((128, 64)).astype(np.float32)
     out = np.asarray(tcec_matmul_pallas(jnp.asarray(a), jnp.asarray(b),
                                         policy, None, True))
-    ref = np.asarray(kref.matmul_fp64_ref(a, b))
-    scale = np.max(np.abs(ref))
     assert out.shape == (3, 64, 64)
-    assert np.max(np.abs(out - ref)) / scale < TOL[policy], policy
+    assert_max_rel_err(out, matmul_fp64(a, b), TOL[policy], policy)
 
 
 def test_batched_staged_equals_fused():
@@ -174,8 +169,7 @@ def test_padding_non_dividing_shapes(m, k, n, variant):
     b = rng.standard_normal((k, n)).astype(np.float32)
     out = np.asarray(fn(jnp.asarray(a), jnp.asarray(b), "bf16x6", None, True))
     assert out.shape == (m, n)
-    ref = np.asarray(kref.matmul_fp64_ref(a, b))
-    assert np.max(np.abs(out - ref)) / np.max(np.abs(ref)) < TOL["bf16x6"]
+    assert_max_rel_err(out, matmul_fp64(a, b), TOL["bf16x6"], variant)
 
 
 def test_padding_batched_non_dividing():
@@ -185,8 +179,7 @@ def test_padding_batched_non_dividing():
     out = np.asarray(tcec_matmul_pallas(jnp.asarray(a), jnp.asarray(b),
                                         "bf16x6", None, True))
     assert out.shape == (3, 100, 50)
-    ref = np.asarray(kref.matmul_fp64_ref(a, b))
-    assert np.max(np.abs(out - ref)) / np.max(np.abs(ref)) < TOL["bf16x6"]
+    assert_max_rel_err(out, matmul_fp64(a, b), TOL["bf16x6"], "batched pad")
 
 
 def test_shape_errors_are_valueerrors():
@@ -322,6 +315,4 @@ def test_ops_tcec_matmul_respects_policy_kernel():
     b = jnp.asarray(rng.standard_normal((48, 16)).astype(np.float32))
     with policy_scope("bf16x6_pallas"):
         out = ops.tcec_matmul(a, b)
-    ref = np.asarray(kref.matmul_fp64_ref(a, b))
-    assert np.max(np.abs(np.asarray(out) - ref)) / np.max(np.abs(ref)) \
-        < TOL["bf16x6"]
+    assert_max_rel_err(np.asarray(out), matmul_fp64(a, b), TOL["bf16x6"])

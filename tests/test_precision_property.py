@@ -98,6 +98,42 @@ def test_bf16x6_error_bound_vs_k_and_spread(log2k, spread, seed):
     assert e_pal < bound, (e_pal, bound, k, spread)
 
 
+@settings(max_examples=20, deadline=None)
+@given(st.integers(3, 7),              # skv = 2**3 .. 2**7
+       st.integers(0, 6),              # per-element exponent spread on V
+       st.integers(0, 2 ** 31 - 1))
+def test_bf16x6_attention_error_bound_vs_skv_and_spread(log2skv, spread, seed):
+    """The paper's §4.4 accuracy claim extended to the attention site:
+    bf16x6 QK^T/PV keeps the max relative error at the ~2^-24 level (x a
+    sqrt(skv) accumulation factor and a safety constant) as the kv length
+    and the value-matrix exponent spread grow — for BOTH the Pallas flash
+    kernel (interpret mode) and the XLA twin ``chunked_attention``."""
+    from oracles import attention_fp64, max_rel_err
+    from repro.kernels.flash_attention import flash_attention
+    from repro.models.attention import chunked_attention
+    skv = 2 ** log2skv
+    b, h, sq, d = 1, 1, 16, 32
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((b, h, sq, d)).astype(np.float32)
+    k = rng.standard_normal((b, h, skv, d)).astype(np.float32)
+    v = (rng.standard_normal((b, h, skv, d))
+         * 10.0 ** rng.integers(-spread, spread + 1, (b, h, skv, d))
+         ).astype(np.float32)
+    ref = attention_fp64(q, k, v, causal=False)
+    bound = 64 * 2.0 ** -24 * max(skv, 4) ** 0.5
+
+    e_pal = max_rel_err(np.asarray(flash_attention(
+        *map(jnp.asarray, (q, k, v)), causal=False, policy="bf16x6",
+        interpret=True)), ref)
+    e_xla = max_rel_err(np.asarray(chunked_attention(
+        jnp.asarray(q.transpose(0, 2, 1, 3)),
+        jnp.asarray(k.transpose(0, 2, 1, 3)),
+        jnp.asarray(v.transpose(0, 2, 1, 3)), causal=False,
+        policy="bf16x6")).transpose(0, 2, 1, 3), ref)
+    assert e_pal < bound, (e_pal, bound, skv, spread)
+    assert e_xla < bound, (e_xla, bound, skv, spread)
+
+
 @settings(max_examples=50, deadline=None)
 @given(st.integers(0, 2 ** 31 - 1))
 def test_tcec_matches_fp32_accuracy(seed):

@@ -1,11 +1,14 @@
 """Recurrent mixers: chunked-parallel forms must match sequential recurrences
-exactly (regression test for the mLSTM decay-matrix off-by-one)."""
+exactly (regression test for the mLSTM decay-matrix off-by-one).  The
+sequential references live in tests/oracles.py (shared fp64 oracle module)."""
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.models import ssm
 from repro.configs import get_config
+
+from oracles import mlstm_sequential, mamba_sequential
 
 
 def test_mlstm_chunk_matches_sequential():
@@ -21,21 +24,10 @@ def test_mlstm_chunk_matches_sequential():
     n0 = jnp.zeros((b, nh, dh))
     y_chunk, C_l, n_l = ssm._mlstm_chunk(q, k, v, lf, li, 8, C0, n0)
 
-    scale = 1.0 / (dh ** 0.5)
-    C, n = C0, n0
-    ys = []
-    for t in range(s):
-        f_ = jnp.exp(lf[:, t])[..., None, None]
-        i_ = jnp.exp(li[:, t])[..., None, None]
-        C = C * f_ + i_ * k[:, t][..., :, None] * v[:, t][..., None, :]
-        n = n * f_[..., 0] + i_[..., 0] * k[:, t]
-        num = jnp.einsum("bhd,bhde->bhe", q[:, t] * scale, C)
-        den = jnp.abs(jnp.einsum("bhd,bhd->bh", q[:, t] * scale, n))
-        ys.append(num / jnp.maximum(den, 1.0)[..., None])
-    y_seq = jnp.stack(ys, 1)
-    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_seq),
+    y_seq, C, n = mlstm_sequential(q, k, v, lf, li, C0, n0)
+    np.testing.assert_allclose(np.asarray(y_chunk), y_seq,
                                rtol=1e-4, atol=1e-5)
-    np.testing.assert_allclose(np.asarray(C_l), np.asarray(C),
+    np.testing.assert_allclose(np.asarray(C_l), C,
                                rtol=1e-4, atol=1e-5)
 
 
@@ -50,16 +42,10 @@ def test_mamba_chunk_matches_sequential():
     a = -jnp.exp(jax.random.normal(ks[4], (d_in, n)))
     y_chunk, h_last = ssm._ssm_chunk_scan(x, dt, B, C, a, chunk=4)
 
-    h = jnp.zeros((b, d_in, n))
-    ys = []
-    for t in range(s):
-        decay = jnp.exp(dt[:, t, :, None] * a[None])
-        h = decay * h + (dt[:, t] * x[:, t])[..., None] * B[:, t, None, :]
-        ys.append(jnp.sum(h * C[:, t, None, :], axis=-1))
-    y_seq = jnp.stack(ys, 1)
-    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_seq),
+    y_seq, h = mamba_sequential(x, dt, B, C, a)
+    np.testing.assert_allclose(np.asarray(y_chunk), y_seq,
                                rtol=1e-4, atol=1e-5)
-    np.testing.assert_allclose(np.asarray(h_last), np.asarray(h),
+    np.testing.assert_allclose(np.asarray(h_last), h,
                                rtol=1e-4, atol=1e-5)
 
 
