@@ -1,0 +1,83 @@
+"""Einsum-frontend benchmark: what the API flexibility buys in data flow.
+
+Two comparisons, both with a staged-bytes estimate alongside the measured
+walltime (CPU timings are directional; the bytes column is the claim):
+
+* fused vs unfused epilogue — ``tcec.einsum(..., epilogue=...)`` applies
+  scale/bias/act/residual on the accumulator (one store at out_dtype) vs
+  the unfused chain, which round-trips the fp32 (m, n) product through the
+  memory tier before the elementwise ops (the ``store_with_operation``
+  claim: saved bytes = the fp32 intermediate the fusion never stores).
+
+* fragment vs materialized operand — a triangular rhs generated from its
+  ``foreach_ij`` rule inside the split pipeline vs the same operand built,
+  stored and reloaded (the paper Code 4/5 claim: the fragment never exists
+  as a (k, n) buffer; saved staged bytes = 4*k*n).
+"""
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import tcec
+
+M, K, N = 512, 512, 512
+REPS = 10
+
+
+def _time(fn, *args):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(REPS):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / REPS * 1e6
+
+
+def run():
+    rng = np.random.default_rng(11)
+    a = jnp.asarray(rng.standard_normal((M, K)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((K, N)).astype(np.float32))
+    bias = jnp.asarray(rng.standard_normal(N).astype(np.float32))
+    res = jnp.asarray(rng.standard_normal((M, N)).astype(np.float32))
+    rows = []
+
+    # -- fused vs unfused epilogue (XLA path, bf16x3) ----------------------
+    ep = tcec.Epilogue(bias=bias, activation="silu", residual=res,
+                       out_dtype="bfloat16")
+    fused = jax.jit(lambda x, y: tcec.einsum(
+        "mk,kn->mn", x, y, policy="bf16x3", epilogue=ep))
+
+    def unfused_fn(x, y):
+        z = tcec.einsum("mk,kn->mn", x, y, policy="bf16x3")
+        z = jax.lax.optimization_barrier(z)      # force the fp32 store
+        return (jax.nn.silu(z + bias) + res).astype(jnp.bfloat16)
+
+    unfused = jax.jit(unfused_fn)
+    rows.append(("epilogue_fused_us", _time(fused, a, b)))
+    rows.append(("epilogue_unfused_us", _time(unfused, a, b)))
+    # the fp32 (m, n) intermediate the fusion never stores + reloads
+    rows.append(("epilogue_saved_staged_bytes", float(2 * 4 * M * N)))
+
+    # -- fragment vs materialized operand (bf16x3) -------------------------
+    tri = tcec.triangular(K)
+    frag = jax.jit(lambda x: tcec.einsum("mk,kn->mn", x, tri,
+                                         policy="bf16x3"))
+
+    def materialized_fn(x):
+        u = jax.lax.optimization_barrier(tri.build())   # staged (k, n) buffer
+        return tcec.einsum("mk,kn->mn", x, u, policy="bf16x3")
+
+    materialized = jax.jit(materialized_fn)
+    rows.append(("fragment_us", _time(frag, a)))
+    rows.append(("materialized_us", _time(materialized, a)))
+    rows.append(("fragment_saved_staged_bytes", float(2 * 4 * K * N)))
+
+    # sanity: both pairs agree
+    d1 = float(jnp.max(jnp.abs(fused(a, b).astype(jnp.float32)
+                               - unfused(a, b).astype(jnp.float32))))
+    d2 = float(jnp.max(jnp.abs(frag(a) - materialized(a))))
+    rows.append(("epilogue_pair_max_diff", d1))
+    rows.append(("fragment_pair_max_diff", d2))
+    return rows

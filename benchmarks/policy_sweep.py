@@ -16,7 +16,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import tc_matmul, policy_scope, registered_policies, get_policy
+from repro import tcec
+from repro.core import policy_scope, registered_policies, get_policy
 
 M = K = N = 256
 REPS = 5
@@ -24,7 +25,8 @@ REPS = 5
 
 def _bench_one(a, b, ref, scale):
     # The workload under test never names a policy: context-resolved.
-    fn = jax.jit(lambda x, y: tc_matmul(x, y))
+    fn = jax.jit(lambda x, y: tcec.einsum("mk,kn->mn", x, y,
+                                          precision="strict"))
     out = np.asarray(fn(a, b))          # compile + policy resolution at trace
     t0 = time.perf_counter()
     for _ in range(REPS):

@@ -10,6 +10,8 @@
                    tcec_throughput (bounds + compiled HBM-traffic ratio)
   Fig. 10       -> attention_throughput (policy x (sq, skv, d) flash sweep)
   §4.4 policies -> policy_sweep    (every registered policy via policy_scope)
+  §API (Code 4/5) -> einsum_frontend (fused-epilogue + fragment-operand
+                   walltime vs the staged/unfused twins, saved-bytes claim)
   §Roofline     -> roofline        (cluster table from dry-run artifacts)
 
 Every row prints as ``name,value,derived`` where timing rows use us_per_call
@@ -23,7 +25,8 @@ import traceback
 def main() -> None:
     from benchmarks import (bf_table, ai_curves, householder, givens,
                             tcec_accuracy, tcec_throughput,
-                            attention_throughput, policy_sweep, roofline)
+                            attention_throughput, policy_sweep,
+                            einsum_frontend, roofline)
     modules = [
         ("bf_table", bf_table),
         ("ai_curves", ai_curves),
@@ -33,6 +36,7 @@ def main() -> None:
         ("tcec_throughput", tcec_throughput),
         ("attention_throughput", attention_throughput),
         ("policy_sweep", policy_sweep),
+        ("einsum_frontend", einsum_frontend),
         ("roofline", roofline),
     ]
     failures = 0

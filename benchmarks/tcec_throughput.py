@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import roofline as rl
-from repro.core.tcec import tc_matmul
+from repro import tcec
 from repro.core.policy import TcecPolicy, get_policy
 
 
@@ -31,7 +31,8 @@ def staged_vs_fused_hbm_bytes(m=2048, k=2048, n=2048, policy="bf16x6"):
     for frag in ("on_the_fly", "staged"):
         pol = dataclasses.replace(get_policy(policy), fragment_gen=frag)
         comp = jax.jit(
-            lambda x, y, pol=pol: tc_matmul(x, y, pol)).lower(a, b).compile()
+            lambda x, y, pol=pol: tcec.matmul(x, y, policy=pol,
+                                  precision="strict")).lower(a, b).compile()
         res = hlo_cost.analyze(comp.as_text())
         out[frag] = res.hbm_bytes
     return out

@@ -1,5 +1,8 @@
 """Quickstart: the paper's two contributions in 60 lines.
 
+Every contraction below goes through ``repro.tcec.einsum`` — the single
+policy-aware frontend (fragment-rule operands and fused epilogues included).
+
     PYTHONPATH=src python examples/quickstart.py
 
 1. TCEC — FP32-accurate matmul emulated with bf16 MXU passes, without
@@ -13,7 +16,8 @@
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import (tc_matmul, split3, reconstruct, foreach_ij,
+from repro import tcec
+from repro.core import (split3, reconstruct, foreach_ij,
                         triangular_ones, householder, givens,
                         policy_scope, resolve, register_policy, TcecPolicy)
 from repro.core import roofline as rl
@@ -28,7 +32,9 @@ def main():
 
     print("== TCEC: error-corrected matmul emulation on the MXU ==")
     for pol in ("bf16x1", "bf16x3", "bf16x6", "fp32_vpu"):
-        out = np.asarray(tc_matmul(jnp.asarray(a), jnp.asarray(b), pol))
+        out = np.asarray(tcec.einsum("mk,kn->mn", jnp.asarray(a),
+                                     jnp.asarray(b), policy=pol,
+                                     precision="strict"))
         err = np.max(np.abs(out - ref)) / scale
         note = {"bf16x1": "plain bf16 (uncorrected)",
                 "bf16x3": "2-word split, 3 passes",
@@ -61,12 +67,12 @@ def main():
     aj, bj = jnp.asarray(a), jnp.asarray(b)
     # Tier 1 — global default (ships as bf16x1, plain mixed precision).
     print(f"  tier 1 global default {resolve()!r}: "
-          f"err={rel_err(tc_matmul(aj, bj)):.2e}")
+          f"err={rel_err(tcec.matmul(aj, bj, precision='strict')):.2e}")
     # Tier 2 — policy_scope: sweep policies over unmodified code.
     for name in ("bf16x3", "bf16x6"):
         with policy_scope(name):
             print(f"  tier 2 policy_scope({name!r}):   "
-                  f"err={rel_err(tc_matmul(aj, bj)):.2e}")
+                  f"err={rel_err(tcec.matmul(aj, bj, precision='strict')):.2e}")
     # Tier 3 — named-site overrides: one scope, different policy per site.
     with policy_scope("bf16x1", lm_head="bf16x6"):
         print(f"  tier 3 site overrides: bulk={resolve().passes} passes, "

@@ -4,8 +4,11 @@ caches, report tokens/sec.
     PYTHONPATH=src python examples/serve_batched.py --arch qwen2-0.5b \
         --batch 8 --gen 48
 
-``--policy``/``--kernel`` wrap the whole serve path in a ``policy_scope``:
-``--kernel pallas`` flips every eligible dense matmul AND the attention
+``--policy``/``--kernel`` wrap the whole serve path in a ``policy_scope``;
+every contraction resolves it through the single einsum frontend
+(``repro.tcec.einsum``), so one flag reaches dense, attention, MoE experts
+and the SSM recurrences alike.  ``--kernel pallas`` flips every eligible
+dense matmul AND the attention
 QK^T/PV onto the footprint-reduced Pallas kernels (native on TPU;
 interpret-mode — slow — on CPU, so pair it with a small --gen when trying
 it on a laptop).  ``--attn-policy`` pins just the ``"attn"`` site, e.g.

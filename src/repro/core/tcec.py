@@ -1,7 +1,10 @@
 """TCEC — FP32-accurate matmul emulation on the MXU (paper §4.4, TPU-adapted).
 
-``tc_matmul(a, b, policy)`` computes ``a @ b`` in FP32-level accuracy using
-only bf16 MXU passes, following Ootomo & Yokota's error-correction scheme:
+This module holds the split-word primitives (``split_words``, the
+``_SCHEDULES`` pass tables, ``tc_dot_general``) that the einsum frontend
+(``repro.tcec``) executes; ``tc_matmul`` itself is a deprecation shim over
+the frontend.  The arithmetic: ``a @ b`` in FP32-level accuracy using only
+bf16 MXU passes, following Ootomo & Yokota's error-correction scheme:
 
     A = A_hi + A_mid (+ A_lo)      (bf16 words, Dekker-exact split)
     C = sum of cross-term matmuls, accumulated smallest-first in FP32.
@@ -20,26 +23,21 @@ matmul), doubling staging-tier traffic.  ``"on_the_fly"`` is the WMMAe data
 flow: splits stay fusible into the matmul operands (and the Pallas kernel in
 ``repro.kernels.tcec_matmul`` performs them inside VMEM/VREGs explicitly).
 
-The function is differentiable: a ``custom_vjp`` runs the backward matmuls
-through the same machinery, so a model trained with a TCEC policy uses the
-emulation end-to-end.
-
 ``policy`` may be a preset/registered name, a ``TcecPolicy`` instance, or
 ``None`` — in which case the policy is resolved from the active
 ``repro.core.context`` scope for the (optional) ``site`` tag.  Resolution
-happens before tracing-sensitive machinery (the custom_vjp static argument is
-always the concrete ``TcecPolicy``), so jit caches key on the resolved policy,
-never on the mutable context.
+happens before tracing-sensitive machinery (the frontend's custom_vjp static
+argument is always the concrete ``TcecPolicy``), so jit caches key on the
+resolved policy, never on the mutable context.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from .policy import TcecPolicy, get_policy
+from .policy import TcecPolicy
 from .context import resolve_policy
 from .precision import split2, split3
 
@@ -67,9 +65,9 @@ def split_words(a: jnp.ndarray, n_words: int, staged: bool) -> Sequence[jnp.ndar
 
 # Cross-term schedule per pass count: (a_word_idx, b_word_idx) in
 # smallest-magnitude-first order so FP32 accumulation preserves low bits.
-# Shared with the Pallas kernel family (repro.kernels.tcec_matmul), whose
-# custom_vjp backward mirrors _tc_matmul_bwd's dA = g@B^T / dB = A^T@g
-# schedule through the same pass table.
+# Shared with the Pallas kernel family (repro.kernels.tcec_matmul) and the
+# einsum frontend (repro.tcec), whose shared custom_vjp backward runs
+# dA = g@B^T / dB = A^T@g through the same pass table.
 _SCHEDULES = {
     1: ((0, 0),),
     3: ((1, 0), (0, 1), (0, 0)),
@@ -117,59 +115,26 @@ def tc_dot_general(
     return acc
 
 
-def _matmul_dims(a_ndim: int, b_ndim: int):
-    """dimension_numbers for (..., m, k) @ (k, n) | (..., k, n) with batching."""
-    if b_ndim == 2:
-        return (((a_ndim - 1,), (0,)), ((), ()))
-    # batched: leading dims of a and b are batch dims (must match count)
-    nbatch = min(a_ndim, b_ndim) - 2
-    return (
-        ((a_ndim - 1,), (nbatch,)),
-        (tuple(range(nbatch)), tuple(range(nbatch))),
-    )
-
-
 def tc_matmul(a: jnp.ndarray, b: jnp.ndarray,
               policy: TcecPolicy | str | None = None,
               site: Optional[str] = None) -> jnp.ndarray:
-    """Emulated FP32 matmul ``a @ b`` on the MXU.
+    """Deprecated: emulated FP32 matmul ``a @ b`` on the MXU.
 
-    a: (..., m, k)  b: (k, n) or (..., k, n)  ->  (..., m, n) float32.
-    ``policy`` is a registered name, a ``TcecPolicy``, or ``None`` (resolve
-    from the active policy context for ``site``)."""
-    return _tc_matmul(a, b, resolve_policy(policy, site))
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
-def _tc_matmul(a: jnp.ndarray, b: jnp.ndarray, policy: TcecPolicy) -> jnp.ndarray:
-    # policy is the concrete (frozen, hashable) TcecPolicy: the custom_vjp
-    # static argument never depends on the mutable context.
-    dn = _matmul_dims(a.ndim, b.ndim)
-    return tc_dot_general(a, b, dn, policy)
-
-
-def _tc_matmul_fwd(a, b, policy):
-    return _tc_matmul(a, b, policy), (a, b)
-
-
-def _tc_matmul_bwd(policy, res, g):
-    a, b = res
-    # dA = g @ B^T ; dB = A^T @ g — both through TCEC with the same policy.
-    if b.ndim == 2:
-        dn_a = (((a.ndim - 1,), (1,)), ((), ()))       # g (...,m,n) x b (k,n) -> contract n
-        da = tc_dot_general(g, b, dn_a, policy)
-        # dB = sum over batch+m: a (...,m,k), g (...,m,n) -> (k, n)
-        lead = tuple(range(a.ndim - 1))
-        dn_b = ((lead, lead), ((), ()))
-        db = tc_dot_general(a, g, dn_b, policy)
-    else:
-        nbatch = min(a.ndim, b.ndim) - 2
-        batch = tuple(range(nbatch))
-        dn_a = (((a.ndim - 1,), (b.ndim - 1,)), (batch, batch))  # contract n
-        da = tc_dot_general(g, b, dn_a, policy)
-        dn_b = (((nbatch,), (nbatch,)), (batch, batch))          # contract m
-        db = tc_dot_general(a, g, dn_b, policy)
-    return da.astype(a.dtype), db.astype(b.dtype)
-
-
-_tc_matmul.defvjp(_tc_matmul_fwd, _tc_matmul_bwd)
+    ``repro.tcec.einsum``/``repro.tcec.matmul`` with ``precision="strict"``
+    is the same contract — a: (..., m, k), b: (k, n) or batched, fp32 out,
+    policy resolved from the context for ``site`` when not explicit, and a
+    shared ``custom_vjp`` running the backward matmuls through the same
+    split schedule."""
+    import dataclasses
+    import warnings
+    warnings.warn(
+        "core.tcec.tc_matmul is deprecated; use repro.tcec.matmul(a, b, "
+        "policy=..., site=..., precision=\"strict\") (or repro.tcec.einsum)",
+        DeprecationWarning, stacklevel=2)
+    from repro.tcec import matmul as _frontend_matmul
+    pol = resolve_policy(policy, site)
+    if pol.kernel != "xla":
+        # tc_matmul was always the XLA split path; keep the shim faithful
+        # (the frontend is where kernel dispatch lives).
+        pol = dataclasses.replace(pol, kernel="xla")
+    return _frontend_matmul(a, b, policy=pol, precision="strict")

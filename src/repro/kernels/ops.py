@@ -2,26 +2,33 @@
 
 On TPU the Pallas (Mosaic) kernels run natively; everywhere else callers get
 either interpret-mode execution (bit-faithful kernel-body semantics, slow —
-tests use this) or the pure-JAX oracle path (fast, XLA-compiled — the
+tests use this) or the einsum-frontend path (fast, XLA-compiled — the
 distributed models use this so every mesh/backend can compile them).
+
+``dense`` and ``tcec_matmul`` are deprecation shims over ``repro.tcec``
+(the frontend's planner owns kernel eligibility now); the structured ops'
+non-Pallas path runs the same ``foreach_ij`` rules as the kernels through
+the frontend as ``FragmentOperand``s at the tagged ``"structured"`` site.
 """
 from __future__ import annotations
+
+import warnings
 
 import jax
 import jax.numpy as jnp
 
+from repro import tcec as _tcec
 from repro.core.context import resolve_policy
-from repro.core.tcec import tc_matmul
 from . import ref as _ref
 from .tcec_matmul import (tcec_matmul_pallas, tcec_matmul_staged,
-                          tcec_matmul_pallas_grad)
+                          tcec_matmul_pallas_grad, tcec_matmul_fused)
 from .structured import householder_apply, givens_apply, scan_cumsum
 from .flash_attention import flash_attention
 
 __all__ = [
     "on_tpu", "tcec_matmul", "dense", "householder", "givens", "cumsum",
     "attention", "tcec_matmul_pallas", "tcec_matmul_staged",
-    "tcec_matmul_pallas_grad",
+    "tcec_matmul_pallas_grad", "tcec_matmul_fused",
 ]
 
 
@@ -31,69 +38,89 @@ def on_tpu() -> bool:
 
 def tcec_matmul(a, b, policy=None, *, site: str | None = None,
                 force_pallas: bool = False, interpret: bool = False):
-    """Error-corrected emulated-FP32 matmul; Pallas on TPU, jnp elsewhere.
+    """Deprecated: error-corrected emulated-FP32 matmul.
 
-    ``policy=None`` resolves from the active policy context for ``site``.
-    A resolved ``policy.kernel == "pallas"`` forces the (differentiable)
-    Pallas path regardless of backend — interpret mode off-TPU."""
+    Use ``repro.tcec.einsum`` (``precision="strict"`` for the emulation
+    semantics) — its planner routes ``kernel == "pallas"`` policies onto
+    the Mosaic kernel.  ``force_pallas``/``interpret`` still pin the kernel
+    directly for kernel-vs-twin studies."""
+    warnings.warn(
+        "kernels.ops.tcec_matmul is deprecated; use repro.tcec.einsum "
+        "(precision=\"strict\")", DeprecationWarning, stacklevel=2)
     pol = resolve_policy(policy, site)
-    if pol.kernel == "pallas" or on_tpu() or force_pallas or interpret:
+    if force_pallas or interpret or on_tpu():
+        # legacy contract: Pallas on TPU (or when pinned), jnp elsewhere
         return tcec_matmul_pallas_grad(
             a, b, pol, interpret=interpret or not on_tpu())
-    return tc_matmul(a, b, pol)
-
-
-def _pallas_eligible(x, w, pol) -> bool:
-    """Can this dense matmul run the Pallas TCEC kernel?
-
-    The kernel expresses 2-D / batch-leading fp32-accumulating matmuls on
-    the MXU; anything else (vpu backend, >3-D dot_generals the host wrapper
-    would have to reshape ambiguously) stays on the XLA path.
-    """
-    return (pol.kernel == "pallas" and pol.backend == "mxu"
-            and x.ndim >= 2 and w.ndim == 2)
+    return _tcec.matmul(a, b, policy=pol, precision="strict")
 
 
 def dense(x, w, policy=None, *, site: str | None = None,
           interpret: bool | None = None):
-    """x (..., d) @ w (d, f) with kernel-backend dispatch.
+    """Deprecated: x (..., d) @ w (d, f) with kernel-backend dispatch.
 
-    Resolves the TCEC policy from the explicit argument or the active
-    ``policy_scope`` for ``site``; a policy with ``kernel="pallas"`` routes
-    the matmul through the batched, differentiable Pallas kernel (leading
-    dims folded into rows), so a scope can flip a whole model onto the
-    footprint-reduced kernel.  Other policies take the jnp TCEC path.
-    """
+    ``repro.tcec.einsum`` is the same contract — the planner absorbs the
+    old ``_pallas_eligible`` check (2-D/batch-leading MXU matmuls run the
+    Pallas kernel under ``kernel == "pallas"``, everything else the XLA
+    split path)."""
+    warnings.warn(
+        "kernels.ops.dense is deprecated; use repro.tcec.einsum (or "
+        "models.base.dense for the layer contract)",
+        DeprecationWarning, stacklevel=2)
     pol = resolve_policy(policy, site)
-    if _pallas_eligible(x, w, pol):
-        lead = x.shape[:-1]
-        x2 = x.reshape(-1, x.shape[-1])
-        run_interpret = (not on_tpu()) if interpret is None else interpret
-        out = tcec_matmul_pallas_grad(x2, w, pol, interpret=run_interpret)
-        return out.reshape(*lead, w.shape[-1])
-    # Ineligible shapes/backends fall back to the jnp TCEC path (fp32
-    # operands: the split words must be generated from fp32 sources).
-    return tc_matmul(x.astype(jnp.float32), w.astype(jnp.float32), pol)
+    return _tcec.matmul(x, w, policy=pol, precision="strict",
+                        interpret=interpret)
 
 
 def householder(v, a, *, force_pallas: bool = False, interpret: bool = False):
+    """(I - 2vv^T) A with H generated from its rule, never staged.
+
+    TPU/forced: the bespoke Mosaic kernel.  Fallback: the same rule as a
+    ``FragmentOperand`` through the einsum frontend at the ``"structured"``
+    site (default policy bf16x1-strict == the kernel's bf16 MMA)."""
     if on_tpu() or force_pallas or interpret:
         return householder_apply(v, a, interpret=interpret or not on_tpu())
-    return _ref.householder_ref(v, a)
+    frag = _tcec.householder_operand(v)
+    return _tcec.einsum("bij,bjk->bik", frag, a, site="structured",
+                        precision="strict")
 
 
 def givens(theta, a, gi: int, gj: int, *, force_pallas: bool = False,
            interpret: bool = False):
+    """G(gi, gj, theta_b) A_b — fill + map-set rule, policy-aware fallback."""
     if on_tpu() or force_pallas or interpret:
         return givens_apply(theta, a, gi, gj, interpret=interpret or not on_tpu())
-    return _ref.givens_ref(theta, a, gi, gj)
+    m = a.shape[-2]
+    frag = _tcec.givens_operand(m, gi, gj, theta)
+    return _tcec.einsum("bij,bjk->bik", frag, a, site="structured",
+                        precision="strict")
 
 
 def cumsum(x, block_n: int = 256, *, force_pallas: bool = False,
            interpret: bool = False):
+    """Row-wise cumsum as blockwise x·U on the matrix unit (paper Eq. 3).
+
+    Fallback: the triangular-ones ``FragmentOperand`` per block with a
+    carried offset — the kernel's two-level scan, through the frontend."""
     if on_tpu() or force_pallas or interpret:
         return scan_cumsum(x, block_n, interpret=interpret or not on_tpu())
-    return _ref.scan_cumsum_ref(x, block_n)
+    rows, n = x.shape
+    block_n = min(block_n, n)
+    if n % block_n:
+        # same contract as the kernel path (which asserts divisibility) —
+        # fail loudly instead of silently dropping the trailing columns.
+        raise ValueError(f"cumsum needs n % block_n == 0, got {n} % {block_n}")
+    x = x.astype(jnp.float32)
+    tri = _tcec.triangular(block_n)
+    outs = []
+    carry = jnp.zeros((rows, 1), jnp.float32)
+    for blk in range(n // block_n):
+        xb = x[:, blk * block_n:(blk + 1) * block_n]
+        ob = _tcec.einsum("rn,nm->rm", xb, tri, site="structured",
+                          precision="strict") + carry
+        carry = ob[:, -1:]
+        outs.append(ob)
+    return jnp.concatenate(outs, axis=1)
 
 
 def attention(q, k, v, causal: bool = True, *, policy=None,

@@ -4,16 +4,25 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.tcec import tc_matmul
+from repro import tcec as _tcec
 
 
 def tcec_matmul_ref(a: jnp.ndarray, b: jnp.ndarray, policy="bf16x6") -> jnp.ndarray:
-    """Oracle for tcec_matmul_pallas: the pure-JAX TCEC path.
+    """Oracle for tcec_matmul_pallas: the pure-JAX TCEC path (the einsum
+    frontend's strict/XLA executor).
 
     Accepts the kernel's full shape family — (m,k)@(k,n), batched
     (b,m,k)@(b,k,n) and broadcast (b,m,k)@(k,n) — and policy names or
     ``TcecPolicy`` instances."""
-    return tc_matmul(a.astype(jnp.float32), b.astype(jnp.float32), policy)
+    from repro.core.policy import get_policy
+    pol = get_policy(policy)
+    # Pin the XLA executor regardless of pol.kernel: this is the kernel's
+    # oracle, it must not dispatch back onto the kernel.
+    import dataclasses
+    if pol.kernel != "xla":
+        pol = dataclasses.replace(pol, kernel="xla")
+    return _tcec.matmul(a.astype(jnp.float32), b.astype(jnp.float32),
+                        policy=pol, precision="strict")
 
 
 def matmul_fp64_ref(a, b) -> jnp.ndarray:
@@ -83,7 +92,6 @@ def attention_policy_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     return fp32; the plain bf16 policy follows q's dtype.
     """
     from repro.core.context import resolve_policy
-    from .tcec_core import tcec_einsum
     pol = resolve_policy(policy, "attn")
     b, h, sq, d = q.shape
     kvh, skv = k.shape[1], k.shape[2]
@@ -91,7 +99,8 @@ def attention_policy_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         k = jnp.repeat(k, h // kvh, axis=1)
         v = jnp.repeat(v, h // kvh, axis=1)
     scale = 1.0 / (d ** 0.5)
-    s = tcec_einsum("bhqd,bhkd->bhqk", q, k, pol) * scale
+    s = _tcec.einsum("bhqd,bhkd->bhqk", q, k, policy=pol,
+                     precision="strict") * scale
     valid = jnp.ones((sq, skv), bool)
     if kv_len is not None:
         valid = valid & (jnp.arange(skv)[None, :] < kv_len)
@@ -101,7 +110,8 @@ def attention_policy_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     p = jax.nn.softmax(s, axis=-1)
     # rows with no valid column: softmax degenerates to uniform — emit zeros
     p = jnp.where(jnp.any(valid, axis=-1)[:, None], p, 0.0)
-    o = tcec_einsum("bhqk,bhkd->bhqd", p, v, pol)
+    o = _tcec.einsum("bhqk,bhkd->bhqd", p, v, policy=pol,
+                     precision="strict")
     if pol.error_correction or pol.backend == "vpu":
         return o
     return o.astype(q.dtype)

@@ -9,25 +9,20 @@ so the split/accumulate machinery lives here and is imported by
   * ``kernels/tcec_matmul.py``   — the standalone Pallas matmul family,
   * ``kernels/flash_attention.py`` — QK^T and PV inside the fused flash
     kernel (policy-selected precision per MXU pass schedule),
-  * ``models/attention.py``      — the XLA-compilable twins
-    (``chunked_attention`` / ``decode_attention`` / MLA), via
-    ``tcec_einsum``, so prefill, decode and the Pallas kernel run the same
-    split arithmetic.
+  * ``repro.tcec`` (the einsum frontend) — the XLA-twin executor that the
+    attention/SSM/MoE model code calls, so prefill, decode and the Pallas
+    kernel run the same split arithmetic.
 
-Two call forms cover both worlds:
-
-  * ``policy_dot(a, b, dn, n_words=, schedule=, vpu=)`` — static-parameter
-    form for Pallas kernel bodies (everything but the operands is a Python
-    constant; the splits are plain jnp ops on VREG values).
-  * ``tcec_einsum(eq, a, b, policy)`` — einsum form for the XLA twins
-    (XLA fuses the splits into the matmul operands: the WMMAe data flow).
+``policy_dot(a, b, dn, n_words=, schedule=, vpu=)`` is the static-parameter
+form for Pallas kernel bodies (everything but the operands is a Python
+constant; the splits are plain jnp ops on VREG values).  The old einsum
+form, ``tcec_einsum``, is a deprecation shim over ``repro.tcec.einsum``.
 
 The pass-pair tables (``SCHEDULES``) are re-exported from ``core/tcec.py``
 (smallest-magnitude-first ordering, the RZ-avoidance schedule).
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, List, Sequence, Tuple
 
 import jax
@@ -110,82 +105,28 @@ def dot_params(policy: TcecPolicy) -> Dict:
 
 def tcec_einsum(eq: str, a: jnp.ndarray, b: jnp.ndarray,
                 policy: TcecPolicy) -> jnp.ndarray:
-    """The split schedule as an einsum — the XLA-twin form.
+    """Deprecated: the split schedule as an einsum (the XLA-twin form).
 
-    Same arithmetic as ``policy_dot`` for arbitrary two-operand einsum
-    equations (attention's batched/grouped contractions): vpu runs one fp32
-    einsum; MXU policies split both operands into bf16 words
-    (``passes == 1`` is the plain bf16 cast) and accumulate the scheduled
-    cross-term einsums in fp32, smallest-magnitude terms first.  The splits
-    are ordinary jnp ops, so XLA fuses them into the matmul operands — the
-    on-the-fly (WMMAe) data flow, never a staged word buffer.
-
-    Differentiable with policy-consistent accuracy: a ``custom_vjp`` runs
-    the backward contractions through the same split schedule (autodiff
-    through the splits would round the word cotangents to bf16, degrading
-    corrected-policy gradients to plain-bf16 level).  Operand labels summed
-    out by the forward (MLA's absorbed q axis) broadcast in the backward;
-    repeated (diagonal) labels are not supported.
+    ``repro.tcec.einsum`` with ``precision="strict"`` is the same contract:
+    vpu runs one fp32 einsum; MXU policies split both operands into bf16
+    words (``passes == 1`` is the plain bf16 cast) and accumulate the
+    scheduled cross-term einsums in fp32, smallest-magnitude terms first —
+    with the same ``custom_vjp`` backward (summed-out labels broadcast;
+    corrected-policy cotangents stay fp32-level).
     """
-    return _tcec_einsum(eq, a, b, policy)
-
-
-def _tcec_einsum_impl(eq: str, a, b, policy: TcecPolicy) -> jnp.ndarray:
-    if policy.backend == "vpu":
-        return jnp.einsum(eq, a.astype(jnp.float32), b.astype(jnp.float32),
-                          preferred_element_type=jnp.float32)
-    aw = split_vregs(a.astype(jnp.float32), policy.n_words)
-    bw = split_vregs(b.astype(jnp.float32), policy.n_words)
-    acc = None
-    for (i, j) in SCHEDULES[policy.passes]:
-        term = jnp.einsum(eq, aw[i], bw[j],
-                          preferred_element_type=jnp.float32)
-        acc = term if acc is None else acc + term
-    return acc
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 3))
-def _tcec_einsum(eq, a, b, policy):
-    return _tcec_einsum_impl(eq, a, b, policy)
-
-
-def _tcec_einsum_fwd(eq, a, b, policy):
-    return _tcec_einsum(eq, a, b, policy), (a, b)
-
-
-def _bwd_operand(lhs_labels, lhs, rhs_labels, rhs, target_labels,
-                 target_shape, policy):
-    """d(target) = <lhs, rhs> through the split schedule.
-
-    A target label absent from both inputs was summed out in the forward
-    (e.g. the q axis of MLA's absorbed "bqhn,lhn->bhl"): its cotangent
-    broadcasts, so contract the reduced equation and broadcast back.
-    """
-    missing = [c for c in target_labels
-               if c not in lhs_labels and c not in rhs_labels]
-    reduced = "".join(c for c in target_labels if c not in missing)
-    d = _tcec_einsum_impl(f"{lhs_labels},{rhs_labels}->{reduced}",
-                          lhs, rhs, policy)
-    if missing:
-        for ax, c in enumerate(target_labels):
-            if c in missing:
-                d = jnp.expand_dims(d, ax)
-        d = jnp.broadcast_to(d, target_shape)
-    return d
-
-
-def _tcec_einsum_bwd(eq, policy, res, g):
-    a, b = res
-    ia, rest = eq.split(",")
-    ib, out = rest.split("->")
-    # da = <g, b> over b's labels; db = <a, g> over a's labels — both
-    # through the same split schedule (mirrors core/tcec's backward).
-    da = _bwd_operand(out, g, ib, b, ia, a.shape, policy)
-    db = _bwd_operand(ia, a, out, g, ib, b.shape, policy)
-    return da.astype(a.dtype), db.astype(b.dtype)
-
-
-_tcec_einsum.defvjp(_tcec_einsum_fwd, _tcec_einsum_bwd)
+    import dataclasses
+    import warnings
+    warnings.warn(
+        "kernels.tcec_core.tcec_einsum is deprecated; use "
+        "repro.tcec.einsum(eq, a, b, policy=..., precision=\"strict\")",
+        DeprecationWarning, stacklevel=2)
+    from repro.core.policy import get_policy
+    from repro.tcec import einsum as _frontend_einsum
+    pol = get_policy(policy)
+    if pol.kernel != "xla":
+        # tcec_einsum was always the XLA twin; the frontend owns dispatch.
+        pol = dataclasses.replace(pol, kernel="xla")
+    return _frontend_einsum(eq, a, b, policy=pol, precision="strict")
 
 
 def compiler_params(semantics: Tuple[str, ...]):

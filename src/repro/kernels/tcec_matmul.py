@@ -57,7 +57,7 @@ from .tcec_core import round_up as _round_up
 
 __all__ = [
     "tcec_matmul_pallas", "tcec_matmul_staged", "tcec_matmul_pallas_grad",
-    "default_blocks", "pad_amounts",
+    "tcec_matmul_fused", "default_blocks", "pad_amounts",
 ]
 
 
@@ -281,6 +281,169 @@ def _tcec_matmul_staged(a: jnp.ndarray, b: jnp.ndarray,
         compiler_params=_compiler_params(),
         interpret=interpret,
     )(*aw, *bw)
+    out = out[:, :m, :n]
+    return out if a.ndim == 3 else out[0]
+
+
+# ---------------------------------------------------------------------------
+# Fused kernel for the einsum frontend (repro.tcec): optional in-kernel
+# fragment generation (rhs from a foreach_ij rule — paper Code 4/5) and an
+# epilogue chain applied in the store block (the store_with_operation
+# analogue: scale/bias/activation/residual/output-cast never round-trip an
+# fp32 tensor through HBM).
+# ---------------------------------------------------------------------------
+
+# One activation table for the whole frontend: the names Epilogue accepts
+# are exactly the names this kernel can fuse.
+from repro.tcec.epilogue import ACTIVATIONS as _EPILOGUE_ACTS  # noqa: E402
+
+
+def _fused_kernel(*refs, n_words, schedule, nk, vpu, frag_rule, k_log, n_log,
+                  bk, bn, has_b, has_bias, has_res, scale, activation):
+    """Grid: (b, m/bm, n/bn, k/bk); k innermost ('arbitrary').
+
+    refs: a, [b], [bias], [residual], o, acc-scratch.  When ``frag_rule`` is
+    set the rhs block is generated in VREGs from the rule at its global
+    (k, n) offsets — padded positions (>= the logical k_log/n_log) read 0.
+    """
+    idx = 1
+    a_ref = refs[0]
+    b_ref = refs[idx] if has_b else None
+    idx += int(has_b)
+    bias_ref = refs[idx] if has_bias else None
+    idx += int(has_bias)
+    res_ref = refs[idx] if has_res else None
+    idx += int(has_res)
+    o_ref, acc_ref = refs[idx], refs[idx + 1]
+
+    k_idx = pl.program_id(3)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = _block2d(a_ref).astype(jnp.float32)
+    if has_b:
+        b = _block2d(b_ref).astype(jnp.float32)
+    else:
+        j_idx = pl.program_id(2)
+        ig = k_idx * bk + jax.lax.broadcasted_iota(jnp.int32, (bk, bn), 0)
+        jg = j_idx * bn + jax.lax.broadcasted_iota(jnp.int32, (bk, bn), 1)
+        b = jnp.where((ig < k_log) & (jg < n_log),
+                      frag_rule(ig, jg).astype(jnp.float32), 0.0)
+    if vpu:
+        acc_ref[...] += jax.lax.dot_general(
+            a, b, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    else:
+        aw = _split_vregs(a, n_words)
+        bw = _split_vregs(b, n_words)
+        acc_ref[...] += _mma_passes(aw, bw, schedule)
+
+    @pl.when(k_idx == nk - 1)
+    def _done():
+        y = acc_ref[...]
+        if scale != 1.0:
+            y = y * jnp.float32(scale)
+        if has_bias:
+            y = y + bias_ref[...].astype(jnp.float32)    # (1, bn) broadcasts
+        if activation is not None:
+            y = _EPILOGUE_ACTS[activation](y)
+        if has_res:
+            y = y + _block2d(res_ref).astype(jnp.float32)
+        o_ref[0] = y.astype(o_ref.dtype)
+
+
+def tcec_matmul_fused(a: jnp.ndarray, b: Optional[jnp.ndarray],
+                      policy: TcecPolicy | str | None = None, *,
+                      frag=None, bias: Optional[jnp.ndarray] = None,
+                      residual: Optional[jnp.ndarray] = None,
+                      scale: float = 1.0, activation: Optional[str] = None,
+                      out_dtype: Optional[str] = None,
+                      block: Tuple[int, int, int] | None = None,
+                      interpret: bool = False) -> jnp.ndarray:
+    """TCEC matmul with in-kernel epilogue and optional rhs fragment.
+
+    Same shape family as ``tcec_matmul_pallas``; ``b`` may instead be a
+    fragment (``frag``: an object with ``.rule(i, j)`` and 2-D ``.shape``)
+    generated inside the kernel.  ``bias`` is (n,), ``residual`` matches the
+    output.  Not differentiable by itself — ``repro.tcec`` owns the shared
+    ``custom_vjp`` that backs every frontend path.
+    """
+    if (b is None) == (frag is None):
+        raise ValueError("pass exactly one of b= and frag=")
+    return _tcec_matmul_fused(a, b, resolve_policy(policy), frag, bias,
+                              residual, float(scale), activation, out_dtype,
+                              block, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "policy", "frag", "scale", "activation", "out_dtype", "block",
+    "interpret"))
+def _tcec_matmul_fused(a, b, policy: TcecPolicy, frag, bias, residual,
+                       scale, activation, out_dtype, block, interpret):
+    pol = policy
+    if frag is not None:
+        if len(frag.shape) != 2:
+            raise ValueError(
+                f"in-kernel fragments must be 2-D (k, n), got {frag.shape}")
+        k_log, n_log = frag.shape
+        if a.ndim not in (2, 3) or a.shape[-1] != k_log:
+            raise ValueError(
+                f"lhs {a.shape} does not contract with fragment {frag.shape}")
+        nb = a.shape[0] if a.ndim == 3 else 1
+        m, n, k = a.shape[-2], n_log, k_log
+    else:
+        nb, m, n, k = _check_shapes(a, b)
+        k_log, n_log = k, n
+    if bias is not None and bias.shape != (n,):
+        raise ValueError(f"bias shape {bias.shape} != ({n},)")
+    if residual is not None and residual.shape[-2:] != (m, n):
+        raise ValueError(
+            f"residual shape {residual.shape} does not match output "
+            f"({m}, {n})")
+    bm, bn, bk = block or default_blocks(m, n, k)
+    mp, np_, kp = pad_amounts(m, n, k, (bm, bn, bk))
+    a = _pad_last2(a.astype(jnp.float32), mp, kp)
+    a3 = a if a.ndim == 3 else a[None]
+    nk = kp // bk
+    grid = (nb, mp // bm, np_ // bn, nk)
+
+    inputs = [a3]
+    in_specs = [_in_spec(3, bm, bk, "a")]
+    if frag is None:
+        b = _pad_last2(b.astype(jnp.float32), kp, np_)
+        inputs.append(b)
+        in_specs.append(_in_spec(b.ndim, bk, bn, "b"))
+    if bias is not None:
+        bias2 = jnp.pad(bias.astype(jnp.float32), (0, np_ - n))[None]
+        inputs.append(bias2)
+        in_specs.append(pl.BlockSpec((1, bn), lambda bi, i, j, kk: (0, j)))
+    if residual is not None:
+        res = _pad_last2(residual, mp, np_)
+        res3 = res if res.ndim == 3 else res[None]
+        inputs.append(res3)
+        in_specs.append(
+            pl.BlockSpec((1, bm, bn), lambda bi, i, j, kk: (bi, i, j)))
+
+    o_dt = jnp.dtype(out_dtype) if out_dtype is not None else jnp.float32
+    kernel = functools.partial(
+        _fused_kernel, n_words=pol.n_words, schedule=_SCHEDULES[pol.passes],
+        nk=nk, vpu=pol.backend == "vpu",
+        frag_rule=None if frag is None else frag.rule,
+        k_log=k_log, n_log=n_log, bk=bk, bn=bn,
+        has_b=frag is None, has_bias=bias is not None,
+        has_res=residual is not None, scale=scale, activation=activation)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bm, bn), lambda bi, i, j, kk: (bi, i, j)),
+        out_shape=jax.ShapeDtypeStruct((nb, mp, np_), o_dt),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=_compiler_params(),
+        interpret=interpret,
+    )(*inputs)
     out = out[:, :m, :n]
     return out if a.ndim == 3 else out[0]
 

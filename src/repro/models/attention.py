@@ -8,10 +8,10 @@ structural rule (iota comparison) instead of being loaded.
 
 Attention is a first-class TCEC site: every QK^T/PV (and MLA absorbed)
 contraction resolves the ``"attn"`` policy from the active
-``policy_scope`` and runs the shared split schedule
-(``kernels/tcec_core``) — ``bf16x3``/``bf16x6`` recover ~fp24/~fp32
-accuracy on the matrix unit, ``fp32_vpu`` runs plain fp32, and the plain
-bf16 policy keeps the legacy ``mma_einsum`` fast path.  A policy with
+``policy_scope`` and runs ``repro.tcec.einsum`` — ``bf16x3``/``bf16x6``
+recover ~fp24/~fp32 accuracy on the matrix unit via the shared split
+schedule, ``fp32_vpu`` runs plain fp32, and the plain bf16 policy keeps
+the native matrix-unit fast path.  A policy with
 ``kernel == "pallas"`` additionally dispatches ``chunked_attention`` onto
 the fused flash Pallas kernel, so one ``policy_scope("bf16x6_pallas")``
 flips the whole hot path.  Prefill, decode and the kernel share one
@@ -30,27 +30,28 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import tcec
 from repro.configs.base import ArchConfig
 from repro.core.context import resolve_policy
 from repro.core.policy import TcecPolicy
-from repro.kernels.tcec_core import tcec_einsum
-from .base import PSpec, dense, rms_norm, rope_cos_sin, apply_rope, mma_einsum, shard_hint
+from .base import PSpec, dense, rms_norm, rope_cos_sin, apply_rope, shard_hint
 
 NEG_INF = -1e30
 
 
 def _attn_einsum(eq: str, a: jnp.ndarray, b: jnp.ndarray,
                  pol: TcecPolicy) -> jnp.ndarray:
-    """Policy-routed attention einsum (fp32 accumulate).
-
-    The plain bf16 MXU policy keeps the legacy ``mma_einsum`` path (bf16
-    operands on TPU, fp32 on the CPU test backend — same contract as
-    ``dense``); corrected policies and vpu run the shared TCEC split
-    schedule, identical to the flash kernel's in-VREG arithmetic.
-    """
-    if pol.backend == "mxu" and pol.passes == 1:
-        return mma_einsum(eq, a, b)
-    return tcec_einsum(eq, a, b, pol)
+    """Deprecated: policy-routed attention einsum.  ``repro.tcec.einsum``
+    is the same contract — ``"native"`` precision keeps the plain bf16 MXU
+    policy on the matrix unit's native dtype while corrected policies and
+    vpu run the shared TCEC split schedule, identical to the flash kernel's
+    in-VREG arithmetic."""
+    import warnings
+    warnings.warn(
+        "_attn_einsum is deprecated; use repro.tcec.einsum(eq, a, b, "
+        "policy=pol) (or site=\"attn\")",
+        DeprecationWarning, stacklevel=2)
+    return tcec.einsum(eq, a, b, policy=pol)
 
 
 def _plain(pol: TcecPolicy) -> bool:
@@ -120,7 +121,7 @@ def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         def kv_step(carry, ki):
             m, l, acc = carry
             k_blk, v_blk, k_off = ki
-            s = shard_hint(_attn_einsum("bqgrd,bkgd->bgrqk", q32, k_blk, pol),
+            s = shard_hint(tcec.einsum("bqgrd,bkgd->bgrqk", q32, k_blk, site="attn", policy=pol),
                            "batch", "kv", None, None, None) * scale
             if causal or kv_len is not None:
                 rows = q_off + jax.lax.broadcasted_iota(
@@ -140,7 +141,7 @@ def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
             p = jnp.where((m_new > 0.5 * NEG_INF)[..., None],
                           jnp.exp(s - m_new[..., None]), 0.0)
             l_new = l * alpha + jnp.sum(p, -1)
-            pv = _attn_einsum("bgrqk,bkgd->bgrqd", p, v_blk, pol)
+            pv = tcec.einsum("bgrqk,bkgd->bgrqd", p, v_blk, site="attn", policy=pol)
             acc_new = acc * alpha[..., None] + pv
             return (m_new, l_new, acc_new), None
 
@@ -187,7 +188,6 @@ def _causal_pair_attention(q, k, v, q_chunk, kv_chunk, scale, pol):
     dv = v.shape[-1]
     rep = h // kvh
     nq, nk = sq // q_chunk, skv // kv_chunk
-    from .base import mma_einsum, shard_hint
 
     q = shard_hint(q, "batch", None, "heads", None)
     k = shard_hint(k, "batch", None, "kv", None)
@@ -221,7 +221,7 @@ def _causal_pair_attention(q, k, v, q_chunk, kv_chunk, scale, pol):
         l = jnp.where(first, jnp.zeros_like(l), l)
         acc = jnp.where(first, jnp.zeros_like(acc), acc)
 
-        s = _attn_einsum("bqgrd,bkgd->bgrqk", q_blk, k_blk, pol) * scale
+        s = tcec.einsum("bqgrd,bkgd->bgrqk", q_blk, k_blk, site="attn", policy=pol) * scale
         rows = i * q_chunk + jax.lax.broadcasted_iota(
             jnp.int32, (q_chunk, kv_chunk), 0)
         cols = j * kv_chunk + jax.lax.broadcasted_iota(
@@ -235,7 +235,7 @@ def _causal_pair_attention(q, k, v, q_chunk, kv_chunk, scale, pol):
         if _plain(pol):
             p = p.astype(jnp.bfloat16)       # bf16 probability tile (§Perf H2)
         l = l * alpha + jnp.sum(p, -1, dtype=jnp.float32)
-        pv = _attn_einsum("bgrqk,bkgd->bgrqd", p, v_blk, pol)
+        pv = tcec.einsum("bgrqk,bkgd->bgrqd", p, v_blk, site="attn", policy=pol)
         acc = acc * alpha[..., None] + pv
         m = m_new
 
@@ -277,7 +277,7 @@ def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
     qh = shard_hint(q.reshape(b, kvh, rep, d), "batch", "kv", None, None)
     k_cache = shard_hint(k_cache, "batch", "seq", "kv", None)
     v_cache = shard_hint(v_cache, "batch", "seq", "kv", None)
-    s = shard_hint(_attn_einsum("bgrd,bsgd->bgrs", qh, k_cache, pol) * scale,
+    s = shard_hint(tcec.einsum("bgrd,bsgd->bgrs", qh, k_cache, site="attn", policy=pol) * scale,
                    "batch", "kv", None, "seq")
     valid = jnp.arange(S, dtype=jnp.int32)[None] <= cache_index[:, None]
     s = jnp.where(valid[:, None, None], s, NEG_INF)
@@ -285,7 +285,7 @@ def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
     # fully-masked rows: softmax of all-NEG_INF degenerates to uniform —
     # emit zeros instead of averaging the (invalid) cache
     p = jnp.where(jnp.any(valid, -1)[:, None, None, None], p, 0.0)
-    o = _attn_einsum("bgrs,bsgd->bgrd", p, v_cache, pol)
+    o = tcec.einsum("bgrs,bsgd->bgrd", p, v_cache, site="attn", policy=pol)
     o = o.reshape(b, 1, h, d)
     return o if not _plain(pol) else o.astype(q.dtype)
 
@@ -441,17 +441,17 @@ def mla_apply(p, x: jnp.ndarray, cfg: ArchConfig, positions: jnp.ndarray,
         S = c_cache.shape[1]
         # absorb W_uk into q: q_c (b, h, lora) — the whole absorbed chain
         # runs the attn-site split schedule so decode matches prefill
-        q_c = _attn_einsum("bqhn,lhn->bhl", q_nope, w_uk, apol)
-        s_nope = _attn_einsum("bhl,bsl->bhs", q_c, c_cache, apol)
-        s_rope = _attn_einsum("bqhr,bsr->bhs", q_rope, r_cache, apol)
+        q_c = tcec.einsum("bqhn,lhn->bhl", q_nope, w_uk, site="attn", policy=apol)
+        s_nope = tcec.einsum("bhl,bsl->bhs", q_c, c_cache, site="attn", policy=apol)
+        s_rope = tcec.einsum("bqhr,bsr->bhs", q_rope, r_cache, site="attn", policy=apol)
         scores = (s_nope + s_rope) / ((nope + rope_d) ** 0.5)
         valid = jnp.arange(S, dtype=jnp.int32)[None] <= cache_index
         scores = jnp.where(valid[:, None], scores, NEG_INF)
         probs = jax.nn.softmax(scores, axis=-1)
         # emit zeros for rows with no valid cache position (cache_index < 0)
         probs = jnp.where(jnp.any(valid, -1)[:, None, None], probs, 0.0)
-        o_c = _attn_einsum("bhs,bsl->bhl", probs, c_cache, apol)
-        o = _attn_einsum("bhl,lhv->bhv", o_c, w_uv, apol)
+        o_c = tcec.einsum("bhs,bsl->bhl", probs, c_cache, site="attn", policy=apol)
+        o = tcec.einsum("bhl,lhv->bhv", o_c, w_uv, site="attn", policy=apol)
         y = dense(o.reshape(b, 1, h * vd).astype(x.dtype), p["wo"], pol)
         return y.astype(x.dtype), {"c_kv": c_cache, "k_rope": r_cache}
 
@@ -459,8 +459,8 @@ def mla_apply(p, x: jnp.ndarray, cfg: ArchConfig, positions: jnp.ndarray,
     # expansion precision follows the attn policy (fp32 words under
     # corrected policies keep prefill consistent with absorbed decode)
     kv_dt = x.dtype if _plain(apol) else jnp.float32
-    k_nope = _attn_einsum("bsl,lhn->bshn", c_kv, w_uk, apol).astype(kv_dt)
-    v = _attn_einsum("bsl,lhv->bshv", c_kv, w_uv, apol).astype(kv_dt)
+    k_nope = tcec.einsum("bsl,lhn->bshn", c_kv, w_uk, site="attn", policy=apol).astype(kv_dt)
+    v = tcec.einsum("bsl,lhv->bshv", c_kv, w_uv, site="attn", policy=apol).astype(kv_dt)
     k_rope_b = jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, rope_d))
     q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
     k_full = jnp.concatenate([k_nope, k_rope_b.astype(kv_dt)], axis=-1)

@@ -20,14 +20,15 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import string
 from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro import tcec
 from repro.core.context import resolve_policy
-from repro.core.policy import PRESETS as _PRESETS, TcecPolicy
-from repro.core.tcec import tc_dot_general
+from repro.core.policy import BF16X1, PRESETS as _PRESETS, TcecPolicy
 from repro.core import fragment
 
 Params = Any  # nested dict of arrays / PSpec
@@ -86,52 +87,19 @@ def logical_axes_tree(tree):
 # Primitive layers (functional)
 # ---------------------------------------------------------------------------
 
-@jax.custom_vjp
-def _mm_bf16(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
-    """bf16 matmul with a bandwidth-disciplined backward (§Perf H5).
-
-    Forward accumulates fp32 on the MXU; the backward dx dot emits bf16
-    directly, so the tensor-parallel partial-sum all-reduce of dx runs at
-    bf16 wire width (autodiff would reduce the fp32 dot output and convert
-    after — 2x the dominant cross-model-axis collective).  dw keeps fp32
-    accumulation (it contracts the long token dimension)."""
-    dn = (((x.ndim - 1,), (0,)), ((), ()))
-    return jax.lax.dot_general(
-        x, w, dn, preferred_element_type=jnp.float32).astype(x.dtype)
-
-
-def _mm_bf16_fwd(x, w):
-    return _mm_bf16(x, w), (x, w)
-
-
-def _mm_bf16_bwd(res, g):
-    x, w = res
-    g = g.astype(x.dtype)
-    # dx = g @ w^T, emitted in bf16 (collective-width discipline)
-    dn_x = (((g.ndim - 1,), (1,)), ((), ()))
-    dx = jax.lax.dot_general(g, w, dn_x, preferred_element_type=x.dtype)
-    # dw = x^T @ g over all leading dims, fp32 accumulation
-    lead = tuple(range(x.ndim - 1))
-    dn_w = ((lead, lead), ((), ()))
-    dw = jax.lax.dot_general(x, g, dn_w,
-                             preferred_element_type=jnp.float32)
-    return dx.astype(x.dtype), dw.astype(w.dtype)
-
-
-_mm_bf16.defvjp(_mm_bf16_fwd, _mm_bf16_bwd)
-
-
 def dense(x: jnp.ndarray, w: jnp.ndarray, site: Optional[str] = None,
           bias: Optional[jnp.ndarray] = None, *,
-          policy=None) -> jnp.ndarray:
-    """x (..., d) @ w (d, f) through the TCEC policy layer.
+          policy=None, activation: Optional[str] = None) -> jnp.ndarray:
+    """x (..., d) @ w (d, f) through the einsum frontend (``repro.tcec``).
 
     The matmul's policy is resolved from the active policy context for the
-    ``site`` tag (an explicit ``policy=`` keyword bypasses the context).
-    Dispatch is on the resolved ``TcecPolicy``: an uncorrected MXU policy
-    (``passes=1``) takes the single-pass fast path (standard mixed precision,
-    bf16 backward collectives); corrected policies run error-corrected
-    emulation with fused splits (never staged).  Output dtype follows x for
+    ``site`` tag (an explicit ``policy=`` keyword bypasses the context); the
+    frontend's planner picks the executor (an uncorrected MXU policy is the
+    single-pass fast path; corrected policies run the split schedule with
+    fused — never staged — words; ``kernel == "pallas"`` routes eligible
+    shapes onto the batched Mosaic kernel).  The bias add, optional
+    ``activation`` and the output cast ride the fused epilogue, so the fp32
+    accumulator never round-trips HBM.  Output dtype follows x for
     uncorrected policies, fp32 for corrected ones.
     """
     if policy is None and site is not None and (
@@ -147,28 +115,19 @@ def dense(x: jnp.ndarray, w: jnp.ndarray, site: Optional[str] = None,
             DeprecationWarning, stacklevel=2)
         policy, site = site, None
     pol: TcecPolicy = resolve_policy(policy, site)
-    dn = (((x.ndim - 1,), (0,)), ((), ()))
-    if pol.kernel == "pallas":
-        # Kernel-backend dispatch: the scoped policy flips this matmul onto
-        # the batched, differentiable Pallas TCEC kernel (in-VREG splits).
-        # ops.dense owns eligibility and falls back to the jnp TCEC path for
-        # shapes/backends the kernel cannot express (e.g. vpu).
-        from repro.kernels.ops import dense as kernel_dense
-        y = kernel_dense(x, w, pol)
-        if pol.backend == "mxu" and not pol.error_correction:
-            # same dtype contract as the uncorrected fast path below
-            y = y.astype(x.dtype)
-    elif pol.backend == "mxu" and not pol.error_correction:
-        if w.dtype == jnp.bfloat16:
-            y = _mm_bf16(x.astype(w.dtype), w).astype(x.dtype)
-        else:
-            y = jax.lax.dot_general(
-                x, w, dn, preferred_element_type=jnp.float32).astype(x.dtype)
-    else:
-        y = tc_dot_general(x.astype(jnp.float32), w.astype(jnp.float32), dn, pol)
-    if bias is not None:
-        y = y + bias.astype(y.dtype)
-    return y
+    plain = pol.backend == "mxu" and not pol.error_correction
+    # The MoE router and tied LM heads deliberately hold fp32 weights; the
+    # native mma cast would silently round them to bf16 on TPU.
+    exec_pol = tcec.wide_weight_policy(pol, w.dtype)
+    lead = string.ascii_lowercase[:x.ndim - 1]
+    ep = None
+    if bias is not None or activation is not None or plain:
+        ep = tcec.Epilogue(bias=bias, activation=activation,
+                           out_dtype=x.dtype if plain else None)
+    # policy is already resolved; site rides along as the trace tag.
+    return tcec.einsum(f"{lead}y,yz->{lead}z", x, w,
+                       site=site if isinstance(site, str) else None,
+                       policy=exec_pol, epilogue=ep)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
@@ -264,26 +223,24 @@ def shard_hint(x: jnp.ndarray, *logical) -> jnp.ndarray:
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
 
 
-def mma_dtype() -> jnp.dtype:
-    """Input dtype for matrix-unit einsums.
-
-    bf16 on TPU (MXU) and during dry-run lowering (REPRO_MMA_DTYPE=bfloat16,
-    so compiled byte counts reflect the real mixed-precision data flow);
-    fp32 on the CPU test backend, whose dot thunks lack batched bf16 support.
-    """
-    import os
-    env = os.environ.get("REPRO_MMA_DTYPE")
-    if env:
-        return jnp.dtype(env)
-    return jnp.dtype(jnp.bfloat16) if jax.default_backend() == "tpu" \
-        else jnp.dtype(jnp.float32)
+# Canonical implementation lives with the einsum frontend; re-exported here
+# because model code historically imported it from models.base.
+mma_dtype = tcec.mma_dtype
 
 
 def mma_einsum(eq: str, *ops: jnp.ndarray) -> jnp.ndarray:
-    """einsum on the matrix unit: operands in mma_dtype, fp32 accumulate."""
-    dt = mma_dtype()
-    return jnp.einsum(eq, *[o.astype(dt) for o in ops],
-                      preferred_element_type=jnp.float32)
+    """Deprecated: einsum on the matrix unit (mma_dtype operands, fp32
+    accumulate).  Use ``repro.tcec.einsum`` — its default ``"native"``
+    precision with the plain policy is exactly this contract, and a tagged
+    ``site=`` makes the call policy-aware."""
+    import warnings
+    warnings.warn(
+        "mma_einsum is deprecated; use repro.tcec.einsum(eq, a, b, site=...)",
+        DeprecationWarning, stacklevel=2)
+    if len(ops) != 2:
+        raise ValueError(
+            f"mma_einsum supported exactly two operands, got {len(ops)}")
+    return tcec.einsum(eq, ops[0], ops[1], policy=BF16X1)
 
 
 def largest_divisor_leq(n: int, target: int) -> int:

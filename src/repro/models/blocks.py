@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, BlockSpec
-from .base import PSpec, dense, rms_norm, act_fn, shard_hint
+from .base import PSpec, dense, rms_norm, shard_hint
 from . import attention, moe as moe_mod, ssm
 
 
@@ -30,11 +30,14 @@ def ffn_params(cfg: ArchConfig) -> Dict[str, PSpec]:
 
 
 def ffn_apply(p, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
-    act = act_fn(cfg.act)
-    # gating arithmetic in the compute dtype (bf16): matmuls already
-    # accumulate fp32 internally; fp32 gate/up tensors (and their fp32
-    # cotangents) would double FFN activation traffic (§Perf H3)
-    h = act(dense(x, p["w_gate"], "ffn")) * dense(x, p["w_up"], "ffn")
+    # The gate activation is a fused epilogue on the gate matmul's fp32
+    # accumulator; under the plain policy dense stores the gated tensor in
+    # the compute dtype (bf16), keeping FFN activation traffic (and the
+    # fp32 cotangents autodiff would otherwise flow) at bf16 width
+    # (§Perf H3).  Corrected policies keep the fp32 gate, same as their
+    # dense contract.
+    gated = dense(x, p["w_gate"], "ffn", activation=cfg.act)
+    h = gated * dense(x, p["w_up"], "ffn")
     return dense(h.astype(x.dtype), p["w_down"], "ffn").astype(x.dtype)
 
 

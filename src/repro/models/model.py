@@ -28,8 +28,9 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import tcec
 from repro.configs.base import ArchConfig, BlockSpec
-from repro.core.context import policy_defaults, resolve
+from repro.core.context import policy_defaults
 from .base import PSpec, abstract, initialize, logical_axes_tree, dense, rms_norm, shard_hint
 from .blocks import block_param_specs, block_apply, block_cache_spec
 
@@ -192,17 +193,17 @@ def backbone(params, batch: Dict, cfg: ArchConfig, *, emit_cache=False,
 
 
 def _logits(params, h: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
-    pol = resolve("lm_head")
     if cfg.tie_embeddings:
-        w = params["embed"]          # (v, d)
-        dn = (((h.ndim - 1,), (1,)), ((), ()))
-        if pol.backend == "mxu" and not pol.error_correction:
-            out = jax.lax.dot_general(h, w, dn, preferred_element_type=jnp.float32)
-        else:
-            from repro.core.tcec import tc_dot_general
-            out = tc_dot_general(h.astype(jnp.float32), w.astype(jnp.float32),
-                                 dn, pol)
-        return out
+        # h (..., d) against the (v, d) embedding — contract d on both;
+        # wide_weight_policy keeps fp32 embeddings unrounded under
+        # uncorrected policies (same contract as base.dense).
+        import string
+        from repro.core.context import resolve
+        w = params["embed"]
+        pol = tcec.wide_weight_policy(resolve("lm_head"), w.dtype)
+        lead = string.ascii_lowercase[:h.ndim - 1]
+        return tcec.einsum(f"{lead}y,zy->{lead}z", h, w,
+                           site="lm_head", policy=pol)
     return dense(h, params["lm_head"], "lm_head").astype(jnp.float32)
 
 

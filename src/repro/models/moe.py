@@ -10,6 +10,12 @@ The router's logits run through the TCEC policy layer at the tagged
 decisions without an FP32 copy of the router weights — the paper's technique
 applied where numerics matter most at negligible FLOP cost.  Override per
 run with ``policy_scope(router=...)``; no config surgery needed.
+
+The expert FFN matmuls (``w_gate``/``w_up``/``w_down``) are tagged ``"ffn"``
+and the dispatch/combine contractions ``"moe_shared"``, all through
+``repro.tcec.einsum`` — so ``policy_scope(ffn=...)`` reaches the experts the
+same way it reaches a dense FFN, and the gate activation is a fused epilogue
+on the gate matmul's accumulator.
 """
 from __future__ import annotations
 
@@ -18,9 +24,10 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import tcec
 from repro.configs.base import ArchConfig
 from repro.core.context import policy_defaults
-from .base import PSpec, dense, act_fn, mma_einsum, shard_hint
+from .base import PSpec, dense, shard_hint
 
 
 def moe_params(cfg: ArchConfig) -> Dict[str, PSpec]:
@@ -62,7 +69,6 @@ def moe_apply(p, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
 def _moe_apply(p, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
     m = cfg.moe
     b, s, d = x.shape
-    act = act_fn(cfg.act)
     tokens = b * s
     from .base import largest_divisor_leq
     g_size = largest_divisor_leq(tokens, m.group_size)
@@ -93,22 +99,34 @@ def _moe_apply(p, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
 
     dispatch = shard_hint(dispatch, "batch", None, "experts", None)
     combine = shard_hint(combine, "batch", None, "experts", None)
-    xe = shard_hint(mma_einsum("gtec,gtd->gecd", dispatch, xt).astype(x.dtype),
-                    "batch", "experts", None, None)
+    xe = shard_hint(
+        tcec.einsum("gtec,gtd->gecd", dispatch, xt,
+                    site="moe_shared").astype(x.dtype),
+        "batch", "experts", None, None)
 
-    # Expert FFNs (E sharded on the model axis — EP).
-    gate = mma_einsum("gecd,edf->gecf", xe, p["w_gate"])
-    up = mma_einsum("gecd,edf->gecf", xe, p["w_up"])
-    h = (act(gate) * up).astype(x.dtype)
-    ye = shard_hint(mma_einsum("gecf,efd->gecd", h, p["w_down"]).astype(x.dtype),
-                     "batch", "experts", None, None)
+    # Expert FFNs (E sharded on the model axis — EP), tagged "ffn" so a
+    # policy_scope(ffn=...) reaches them exactly like a dense FFN.  The gate
+    # activation is a fused epilogue on the fp32 accumulator (same value as
+    # act(gate) applied after — no extra HBM round-trip).
+    gated = tcec.einsum("gecd,edf->gecf", xe, p["w_gate"], site="ffn",
+                        epilogue=tcec.Epilogue(activation=cfg.act))
+    up = tcec.einsum("gecd,edf->gecf", xe, p["w_up"], site="ffn")
+    h = (gated * up).astype(x.dtype)
+    ye = shard_hint(
+        tcec.einsum("gecf,efd->gecd", h, p["w_down"],
+                    site="ffn").astype(x.dtype),
+        "batch", "experts", None, None)
 
-    y = shard_hint(mma_einsum("gtec,gecd->gtd", combine, ye).astype(x.dtype),
-                   "batch", None, None)
+    y = shard_hint(
+        tcec.einsum("gtec,gecd->gtd", combine, ye,
+                    site="moe_shared").astype(x.dtype),
+        "batch", None, None)
     y = y.reshape(b, s, d)
 
     if m.n_shared_experts:
-        sh = act(dense(x, p["ws_gate"], "moe_shared")) \
+        # gate activation fused into the matmul epilogue, same as the
+        # routed experts and ffn_apply
+        sh = dense(x, p["ws_gate"], "moe_shared", activation=cfg.act) \
             * dense(x, p["ws_up"], "moe_shared")
         y = y + dense(sh.astype(x.dtype), p["ws_down"], "moe_shared")
     return y

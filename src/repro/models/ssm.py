@@ -8,6 +8,12 @@ This bounds activation memory at O(chunk) instead of O(seq) and gives the
 sub-quadratic long-context decode path (``long_500k``): decode is a single
 state update per token.
 
+Both the chunked recurrences AND the per-token decode contractions (the
+RWKV-style ``"bhd,bhde->bhe"`` recurrent term) run the ``"ssm"``-site policy
+through ``repro.tcec.einsum`` — previously decode used raw ``jnp.einsum``
+while the chunk path used ``mma_einsum``, so chunk-vs-decode numerics could
+diverge under a corrected policy.
+
 States (decode cache):
   mamba: {"h": (b, d_in, n), "conv": (b, k-1, d_in)}
   mlstm: {"C": (b, nh, dk, dv), "n": (b, nh, dk)}
@@ -20,8 +26,16 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import tcec
 from repro.configs.base import ArchConfig
-from .base import PSpec, dense, rms_norm, act_fn, shard_hint
+from .base import PSpec, dense, rms_norm, act_fn, mma_dtype, shard_hint
+
+
+def _ssm_einsum(eq, a, b):
+    """Every mLSTM/sLSTM recurrence contraction, chunked AND decode, runs
+    the "ssm"-site policy through the einsum frontend — so chunk-vs-decode
+    numerics agree per policy (a corrected scope corrects both)."""
+    return tcec.einsum(eq, a, b, site="ssm")
 
 
 # ---------------------------------------------------------------------------
@@ -189,7 +203,6 @@ def _mlstm_chunk(q, k, v, log_f, log_i, chunk, C0, n0):
 
     qs, ks, vs, lfs, lis = map(resh, (q * scale, k, v, log_f, log_i))
 
-    from .base import mma_einsum, mma_dtype
     # Intermediate tiles round to the matrix-unit dtype: bf16 on TPU (§Perf
     # H6 traffic discipline), fp32 on the CPU test backend — keeping the
     # chunked path's arithmetic aligned with the sequential decode recurrence
@@ -202,8 +215,8 @@ def _mlstm_chunk(q, k, v, log_f, log_i, chunk, C0, n0):
         clf = jnp.cumsum(lf, axis=1)                      # cumulative log f
         # inter-chunk: contribution of C_prev decayed to each t
         dec0 = jnp.exp(clf)[..., None]                    # (b, t, nh, 1)
-        y_inter = mma_einsum("bthd,bhde->bthe", qc, C_prev) * dec0
-        nrm_inter = mma_einsum("bthd,bhd->bth", qc, n_prev) * dec0[..., 0]
+        y_inter = _ssm_einsum("bthd,bhde->bthe", qc, C_prev) * dec0
+        nrm_inter = _ssm_einsum("bthd,bhd->bth", qc, n_prev) * dec0[..., 0]
         # intra-chunk: decay matrix from structural rule (foreach_ij)
         # D_ij = exp(clf_i - clf_j + li_j) for i >= j  (f_{j+1..i} * i_j)
         ti = clf[:, :, None, :]                           # (b, t_i, 1, nh)
@@ -213,9 +226,9 @@ def _mlstm_chunk(q, k, v, log_f, log_i, chunk, C0, n0):
         D = jnp.where(mask[None, :, :, None], jnp.exp(jnp.minimum(lij, 20.0)), 0.0)
         # score x decay tiles stay in the matrix-unit dtype (bf16 on the
         # MXU): fp32 (t, t) tiles double the dominant traffic (§Perf H6)
-        s_qk = mma_einsum("bihd,bjhd->bijh", qc, kc)
+        s_qk = _ssm_einsum("bihd,bjhd->bijh", qc, kc)
         sd = (s_qk * D).astype(tile_dt)
-        y_intra = mma_einsum("bijh,bjhd->bihd", sd, vc)
+        y_intra = _ssm_einsum("bijh,bjhd->bihd", sd, vc)
         # normalizer: q_t . n_t where n_t = sum_j decay_j i_j k_j (+ carried)
         nrm_intra = jnp.sum(sd.astype(jnp.float32), axis=2)
         y = y_inter + y_intra
@@ -225,7 +238,7 @@ def _mlstm_chunk(q, k, v, log_f, log_i, chunk, C0, n0):
         tot = clf[:, -1]                                  # (b, nh)
         decay_j = jnp.exp(tot[:, None] - clf + li)        # (b, t, nh)
         kd = (kc.astype(jnp.float32) * decay_j[..., None]).astype(tile_dt)
-        C_new = C_prev * jnp.exp(tot)[..., None, None] + mma_einsum(
+        C_new = C_prev * jnp.exp(tot)[..., None, None] + _ssm_einsum(
             "bthd,bthe->bhde", kd, vc)
         n_new = n_prev * jnp.exp(tot)[..., None] + jnp.sum(
             kd.astype(jnp.float32), axis=1)
@@ -269,8 +282,8 @@ def mlstm_apply(p, x: jnp.ndarray, cfg: ArchConfig,
         C = C_prev * f_ + i_ * k[:, 0][..., :, None] * v[:, 0][..., None, :]
         n = n_prev * f_[..., 0] + i_[..., 0] * k[:, 0]
         q0 = q[:, 0] / (dh ** 0.5)        # same q scaling as the chunked path
-        num = jnp.einsum("bhd,bhde->bhe", q0, C)
-        den = jnp.abs(jnp.einsum("bhd,bhd->bh", q0, n))
+        num = _ssm_einsum("bhd,bhde->bhe", q0, C)
+        den = jnp.abs(_ssm_einsum("bhd,bhd->bh", q0, n))
         y = (num / jnp.maximum(den, 1.0)[..., None])[:, None]
         new_state = {"C": C, "n": n, "conv": new_conv}
         y = y.reshape(b, 1, d_in)
@@ -335,7 +348,7 @@ def slstm_apply(p, x: jnp.ndarray, cfg: ArchConfig,
 
     def step(carry, pre_t):
         c, n, h, m = carry
-        pre = pre_t + jnp.einsum("bhd,hdk->bhk", h, r)    # recurrent term
+        pre = pre_t + _ssm_einsum("bhd,hdk->bhk", h, r)   # recurrent term
         z_, i_, f_, o_ = jnp.split(pre, 4, axis=-1)
         # stabilized exponential gating
         log_f = -jax.nn.softplus(-f_)

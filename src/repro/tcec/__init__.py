@@ -1,0 +1,37 @@
+"""``repro.tcec`` — one einsum frontend for every matrix-unit contraction.
+
+The paper's flexible-API layer as a single public entry point:
+
+    from repro import tcec
+
+    y = tcec.einsum("bsk,kn->bsn", x, w, site="ffn",
+                    epilogue=tcec.Epilogue(bias=b, activation="silu"))
+
+    u = tcec.triangular(256)                      # fragment-rule operand
+    c = tcec.einsum("rn,nm->rm", x, u, site="structured")
+
+A planner resolves the ``TcecPolicy`` from the active ``policy_scope``,
+picks the executor (vpu fp32 / XLA split twin / batched Pallas kernel) and
+runs one shared ``custom_vjp``, so a single policy flip covers dense,
+attention, MoE experts, SSM recurrences and the structured kernels — and
+corrected-policy gradients stay fp32-level on every path.
+
+The five legacy entries (``core.tcec.tc_matmul``, ``kernels.tcec_core.
+tcec_einsum``, ``models.base.mma_einsum``, ``models.attention._attn_einsum``,
+``kernels.ops.dense``) are deprecation shims over this module.
+"""
+from .epilogue import ACTIVATIONS, Epilogue
+from .frontend import (PlanRecord, einsum, matmul, mma_dtype, trace_plans,
+                       wide_weight_policy)
+from .operands import (FragmentOperand, banded, givens_operand,
+                       householder_operand, identity, triangular)
+from .planner import Plan, matmul_pattern, parse_equation, plan_einsum
+
+__all__ = [
+    "einsum", "matmul", "mma_dtype", "trace_plans", "PlanRecord",
+    "wide_weight_policy",
+    "Epilogue", "ACTIVATIONS",
+    "FragmentOperand", "triangular", "identity", "banded",
+    "householder_operand", "givens_operand",
+    "Plan", "parse_equation", "matmul_pattern", "plan_einsum",
+]

@@ -1,0 +1,77 @@
+"""Declarative epilogues — the ``store_with_operation`` analogue.
+
+An ``Epilogue`` describes what happens to the fp32 accumulator *before* it
+leaves the fast memory tier:
+
+    y = act(acc * scale + bias) (+ residual)  ->  out_dtype
+
+On the Pallas path the chain runs inside the kernel's store block (the
+accumulator is still in VMEM scratch); on the XLA path the ops are emitted
+right after the accumulate so XLA fuses them into the matmul consumer.
+Either way dense+bias+act (and attention PV + residual adds) stop
+round-tripping an fp32 tensor through HBM.
+
+``scale``/``activation``/``out_dtype`` are static (they parameterize the
+kernel); ``bias``/``residual`` are arrays and flow as differentiable inputs
+through the frontend's shared ``custom_vjp``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Epilogue", "ACTIVATIONS"]
+
+ACTIVATIONS = {
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "tanh": jnp.tanh,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Epilogue:
+    """Fused post-matmul chain: ``act(y * scale + bias) + residual``.
+
+    scale      — static Python float multiplier on the accumulator.
+    bias       — array broadcastable to the output (typically (n,)).
+    activation — name in ``ACTIVATIONS`` (applied to the fp32 value).
+    residual   — array of the output shape, added after the activation.
+    out_dtype  — final store dtype (default: the path's fp32 accumulator).
+    """
+    scale: float = 1.0
+    bias: Optional[jnp.ndarray] = None
+    activation: Optional[str] = None
+    residual: Optional[jnp.ndarray] = None
+    out_dtype: Optional[Any] = None
+
+    def __post_init__(self):
+        if self.activation is not None and self.activation not in ACTIVATIONS:
+            raise ValueError(
+                f"unknown epilogue activation {self.activation!r}; "
+                f"known: {sorted(ACTIVATIONS)}")
+        if not isinstance(self.scale, (int, float)):
+            raise TypeError(
+                "Epilogue.scale must be a static Python number (use bias/"
+                f"residual for array operands), got {type(self.scale).__name__}")
+
+    def out_dtype_str(self) -> Optional[str]:
+        if self.out_dtype is None:
+            return None
+        return jnp.dtype(self.out_dtype).name
+
+    def arrays(self) -> dict:
+        """The differentiable operands, as a (possibly empty) pytree."""
+        out = {}
+        if self.bias is not None:
+            out["bias"] = self.bias
+        if self.residual is not None:
+            out["residual"] = self.residual
+        return out
+
+
+NO_EPILOGUE = Epilogue()

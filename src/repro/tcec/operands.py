@@ -1,0 +1,167 @@
+"""Fragment-rule operands — the paper's ``foreach_ij`` as einsum inputs.
+
+A ``FragmentOperand`` wraps a structural rule ``rule(i, j) -> values`` plus a
+logical shape, and stands in for an array operand of ``repro.tcec.einsum``.
+The rule is never evaluated into a staged buffer by the frontend itself:
+
+  * on the XLA path the rule is evaluated *inside the traced computation*
+    (``broadcasted_iota`` + elementwise math), so XLA fuses the generation
+    into the split pipeline that consumes it — the WMMAe data flow;
+  * on the Pallas path (``policy.kernel == "pallas"``, rhs fragments) the
+    rule is evaluated *inside the kernel body* per (k, n) block, offset by
+    the grid position — the values live in VREGs, the operand never exists
+    in HBM or VMEM (paper Code 4/5).
+
+Rules receive int32 index arrays (broadcasted iota over the trailing two
+dims) and may close over arrays (Householder's ``v``, Givens' ``theta``) —
+such data-carrying rules run on the XLA path, where closures trace normally.
+Rules used in-kernel must close over static Python data only.
+
+Batched fragments: ``shape`` may carry leading batch dims; the rule's return
+value is broadcast to ``shape`` (one index-map evaluation amortized across
+the batch — the paper's Code-5 lesson).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "FragmentOperand", "triangular", "identity", "banded",
+    "householder_operand", "givens_operand",
+]
+
+Rule = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class FragmentOperand:
+    """A lazy einsum operand defined by a structural rule.
+
+    ``rule(i, j)``: i/j are int32 arrays of shape ``shape[-2:]``; the return
+    value must broadcast to ``shape``.  ``dtype`` is the dtype the built
+    operand reports (splitting/casting happens downstream per policy).
+    Hashable (rules hash by identity), so it can ride as a static argument
+    of the jitted Pallas launcher.  Not differentiable w.r.t. arrays the
+    rule closes over on the in-kernel path; on the XLA path closure arrays
+    receive exact cotangents through the split-schedule ``custom_vjp``.
+    """
+    rule: Rule
+    shape: Tuple[int, ...]
+    dtype: str = "float32"
+    name: str = "fragment"
+
+    def __post_init__(self):
+        if len(self.shape) < 2:
+            raise ValueError(
+                f"FragmentOperand needs a >=2-D shape, got {self.shape}")
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    def closes_over_arrays(self) -> bool:
+        """True if the rule captures array data (Householder's v, Givens'
+        theta).  Such rules cannot be generated inside a Pallas kernel body
+        (the kernel cannot capture array constants) — the planner routes
+        them to the XLA path, where closures trace normally."""
+        import numpy as np
+        for cell in getattr(self.rule, "__closure__", None) or ():
+            try:
+                v = cell.cell_contents
+            except ValueError:          # empty cell
+                continue
+            if isinstance(v, (jax.Array, np.ndarray)) or hasattr(v, "aval"):
+                return True
+        return False
+
+    def build(self) -> jnp.ndarray:
+        """Evaluate the rule in-trace (fusible; never a host-side buffer)."""
+        m, n = self.shape[-2:]
+        i = jax.lax.broadcasted_iota(jnp.int32, (m, n), 0)
+        j = jax.lax.broadcasted_iota(jnp.int32, (m, n), 1)
+        val = jnp.asarray(self.rule(i, j)).astype(jnp.dtype(self.dtype))
+        return jnp.broadcast_to(val, self.shape)
+
+
+# ---------------------------------------------------------------------------
+# Prebuilt structural rules (paper §4.1–4.3) as operands.
+# ---------------------------------------------------------------------------
+
+# The data-free constructors are cached: FragmentOperands hash by rule
+# identity (they ride as static arguments of the jitted Pallas launcher),
+# so returning the same operand for the same static inputs keeps the
+# compile cache warm instead of re-lowering per fresh lambda.
+
+@functools.lru_cache(maxsize=None)
+def triangular(n: int, upper: bool = True, strict: bool = False,
+               dtype="float32") -> FragmentOperand:
+    """U with u_ij = 1 iff i<=j (paper Eq. 3) — the scan/cumsum operand."""
+    if upper:
+        cmp = (lambda i, j: i < j) if strict else (lambda i, j: i <= j)
+    else:
+        cmp = (lambda i, j: i > j) if strict else (lambda i, j: i >= j)
+    return FragmentOperand(lambda i, j: cmp(i, j).astype(jnp.float32),
+                           (n, n), dtype, name="triangular")
+
+
+@functools.lru_cache(maxsize=None)
+def identity(n: int, dtype="float32") -> FragmentOperand:
+    return FragmentOperand(lambda i, j: (i == j).astype(jnp.float32),
+                           (n, n), dtype, name="identity")
+
+
+@functools.lru_cache(maxsize=None)
+def banded(n: int, k_low: int, k_up: int, dtype="float32") -> FragmentOperand:
+    """Band of ones: nonzero where -k_low <= j - i <= k_up."""
+    return FragmentOperand(
+        lambda i, j: ((j - i <= k_up) & (i - j <= k_low)).astype(jnp.float32),
+        (n, n), dtype, name="banded")
+
+
+def householder_operand(v: jnp.ndarray, dtype="float32") -> FragmentOperand:
+    """H = I - 2 v v^T from ``v`` (..., m) — the paper's Code 4/5 lambda.
+
+    The rule closes over ``v`` (data-carrying: XLA path), returning
+    (..., m, m); batched ``v`` shares one iota evaluation across the batch.
+    """
+    m = v.shape[-1]
+
+    def rule(i, j):
+        eye = (i == j).astype(jnp.float32)
+        if v.ndim == 1:
+            return eye - 2.0 * v.astype(jnp.float32)[i] * v.astype(jnp.float32)[j]
+        vf = v.astype(jnp.float32)
+        return eye - 2.0 * vf[..., :, None] * vf[..., None, :]
+
+    return FragmentOperand(rule, (*v.shape[:-1], m, m), dtype,
+                           name="householder")
+
+
+def givens_operand(n: int, gi: int, gj: int, theta: jnp.ndarray,
+                   dtype="float32") -> FragmentOperand:
+    """G(gi, gj, theta) built by fill + map-style element sets (paper §4.3).
+
+    ``theta`` scalar or (b,); compile-time (gi, gj) lets the masks fold
+    (the paper's "Embedded (i,j)" variant).
+    """
+    theta = jnp.asarray(theta)
+    batch = theta.shape
+
+    def rule(i, j):
+        c = jnp.cos(theta.astype(jnp.float32))
+        s = jnp.sin(theta.astype(jnp.float32))
+        if batch:
+            c, s = c[..., None, None], s[..., None, None]
+        g = (i == j).astype(jnp.float32)
+        g = jnp.where((i == gi) & (j == gi), c, g)
+        g = jnp.where((i == gj) & (j == gj), c, g)
+        g = jnp.where((i == gi) & (j == gj), s, g)
+        g = jnp.where((i == gj) & (j == gi), -s, g)
+        return g
+
+    return FragmentOperand(rule, (*batch, n, n), dtype, name="givens")

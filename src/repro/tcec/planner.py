@@ -1,0 +1,107 @@
+"""Backend planning for the einsum frontend.
+
+One small, inspectable decision: given the equation, operand shapes, the
+resolved ``TcecPolicy`` and the epilogue, pick which executor runs the
+contraction.
+
+  * ``"xla"``             — the split-schedule einsum (or vpu fp32 / native
+                            matrix-unit cast for uncorrected policies).
+                            Handles every equation.
+  * ``"pallas"``          — the batched Mosaic TCEC kernel (in-VREG splits,
+                            epilogue in the store block).  Requires
+                            ``policy.kernel == "pallas"``, an MXU backend,
+                            and a matmul-shaped equation (this absorbs the
+                            old ``kernels.ops._pallas_eligible``).
+  * ``"pallas_fragment"`` — same kernel with the rhs generated in-kernel
+                            from a ``FragmentOperand`` rule (paper Code 4/5:
+                            the operand never exists as a buffer).
+
+Matmul-shaped equations:
+
+  fold     ``L...k, kn -> L...n``   (leading dims folded into rows; this is
+                                     every ``dense`` call)
+  batched  ``bmk, bkn -> bmn``      (the batched-SGEMM regime)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+from repro.core.policy import TcecPolicy
+
+__all__ = ["parse_equation", "matmul_pattern", "plan_einsum", "Plan"]
+
+
+@functools.lru_cache(maxsize=None)
+def parse_equation(eq: str) -> Tuple[str, str, str]:
+    """Split a two-operand explicit einsum equation into (ia, ib, out)."""
+    eq = eq.replace(" ", "")
+    if "->" not in eq:
+        raise ValueError(
+            f"tcec.einsum needs an explicit output ('...->...'), got {eq!r}")
+    ins, out = eq.split("->")
+    parts = ins.split(",")
+    if len(parts) != 2:
+        raise ValueError(
+            f"tcec.einsum is a two-operand frontend, got {len(parts)} "
+            f"operands in {eq!r}")
+    ia, ib = parts
+    for labels, what in ((ia, "lhs"), (ib, "rhs"), (out, "output")):
+        if "." in labels:
+            raise ValueError(f"ellipsis is not supported ({eq!r}); spell "
+                             f"out the {what} labels")
+        if len(set(labels)) != len(labels):
+            raise ValueError(
+                f"repeated (diagonal) labels are not supported in the "
+                f"{what} of {eq!r}")
+    known = set(ia) | set(ib)
+    for c in out:
+        if c not in known:
+            raise ValueError(f"output label {c!r} of {eq!r} appears in "
+                             f"neither input")
+    return ia, ib, out
+
+
+@functools.lru_cache(maxsize=None)
+def matmul_pattern(ia: str, ib: str, out: str) -> Optional[str]:
+    """Classify the equation as a kernel-expressible matmul, if it is one."""
+    if len(ib) == 2 and len(ia) >= 2:
+        k, n = ib
+        if (ia[-1] == k and n not in ia and out == ia[:-1] + n):
+            return "fold"
+    if len(ia) == 3 and len(ib) == 3:
+        b, m, k = ia
+        if (ib[0] == b and ib[1] == k and ib[2] not in (b, m, k)
+                and out == b + m + ib[2]):
+            return "batched"
+    return None
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    backend: str                  # "xla" | "pallas" | "pallas_fragment"
+    pattern: Optional[str] = None  # "fold" | "batched" (pallas reshape)
+
+
+def plan_einsum(ia: str, ib: str, out: str, policy: TcecPolicy,
+                a_is_frag: bool, b_is_frag: bool, b_ndim: int,
+                bias_ok: bool, b_frag_in_kernel_ok: bool = True) -> Plan:
+    """Pick the executor.  Anything the kernel cannot express falls back to
+    the XLA path — same split arithmetic, no staged word buffers."""
+    if policy.kernel != "pallas" or policy.backend != "mxu":
+        return Plan("xla")
+    pattern = matmul_pattern(ia, ib, out)
+    if pattern is None or not bias_ok:
+        return Plan("xla")
+    if a_is_frag:
+        # lhs fragments build in-trace and fuse on the XLA path; the kernel
+        # generates rhs blocks only.
+        return Plan("xla")
+    if b_is_frag:
+        # In-kernel generation needs a 2-D fold-pattern rhs whose rule
+        # captures no array data (kernel bodies cannot close over arrays).
+        if pattern == "fold" and b_ndim == 2 and b_frag_in_kernel_ok:
+            return Plan("pallas_fragment", pattern)
+        return Plan("xla")
+    return Plan("pallas", pattern)

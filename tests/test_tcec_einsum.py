@@ -1,0 +1,423 @@
+"""The einsum frontend (``repro.tcec``): parity with the legacy entries,
+VJP parity through the planner, fragment operands vs the fp64 oracle,
+epilogue fusion, and single-scope site reach across the whole model zoo."""
+import warnings
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro import tcec
+from repro.core.context import policy_scope
+from repro.core.policy import TcecPolicy, get_policy, registered_policies
+from repro.core.tcec import _SCHEDULES, split_words
+
+from oracles import matmul_fp64, max_rel_err
+
+
+RNG = np.random.default_rng(0)
+
+
+def _arr(*shape):
+    return jnp.asarray(RNG.standard_normal(shape).astype(np.float32))
+
+
+def _legacy_strict(eq, a, b, pol):
+    """Independent reimplementation of the pre-frontend tcec_einsum
+    arithmetic (the parity reference: NOT routed through the frontend)."""
+    f32 = jnp.float32
+    if pol.backend == "vpu":
+        return jnp.einsum(eq, a.astype(f32), b.astype(f32),
+                          preferred_element_type=f32)
+    staged = pol.fragment_gen == "staged"
+    aw = split_words(a.astype(f32), pol.n_words, staged)
+    bw = split_words(b.astype(f32), pol.n_words, staged)
+    acc = None
+    for (i, j) in _SCHEDULES[pol.passes]:
+        t = jnp.einsum(eq, aw[i], bw[j], preferred_element_type=f32)
+        acc = t if acc is None else acc + t
+    return acc
+
+
+EQS = {
+    "dense": ("mk,kn->mn", (24, 40), (40, 16)),
+    "batched": ("bmk,bkn->bmn", (3, 16, 24), (3, 24, 8)),
+    "mla_absorbed": ("bqhn,lhn->bhl", (2, 1, 4, 8), (16, 4, 8)),
+}
+
+
+@pytest.mark.parametrize("name", registered_policies())
+@pytest.mark.parametrize("case", sorted(EQS))
+def test_frontend_strict_parity_every_policy(name, case):
+    """frontend(strict) == the legacy split-schedule arithmetic, for every
+    registered policy x (dense, batched, MLA absorbed) equation."""
+    pol = get_policy(name)
+    eq, sa, sb = EQS[case]
+    a, b = _arr(*sa), _arr(*sb)
+    got = tcec.einsum(eq, a, b, policy=pol, precision="strict")
+    ref = _legacy_strict(eq, a, b, pol)
+    if pol.kernel == "pallas" and case != "mla_absorbed":
+        # kernel path: same schedule, different k-accumulation blocking
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+    else:
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_frontend_native_plain_is_mma_contract():
+    """Default precision + plain policy == the old mma_einsum contract."""
+    from repro.tcec import mma_dtype
+    eq, sa, sb = EQS["batched"]
+    a, b = _arr(*sa), _arr(*sb)
+    got = tcec.einsum(eq, a, b, policy="bf16x1")
+    dt = mma_dtype()
+    ref = jnp.einsum(eq, a.astype(dt), b.astype(dt),
+                     preferred_element_type=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@pytest.mark.parametrize("policy", ["bf16x6", "bf16x6_pallas"])
+def test_vjp_parity_through_planner(policy):
+    """Corrected-policy grads stay fp32-level on both the XLA and the
+    Pallas(-interpret) planner paths."""
+    a, b = _arr(24, 40), _arr(40, 16)
+
+    def f(x):
+        return jnp.sum(jnp.sin(tcec.einsum("mk,kn->mn", x, b, policy=policy)))
+
+    g = jax.grad(f)(a)
+    g_ref = jax.grad(lambda x: jnp.sum(jnp.sin(x @ b)))(a)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_vjp_summed_out_label_and_quality_ladder():
+    """MLA's absorbed equation: grads flow through the broadcast backward,
+    and the corrected policy beats strict-plain by >10x."""
+    eq, sa, sb = EQS["mla_absorbed"]
+    a, b = _arr(*sa), _arr(*sb)
+
+    def gerr(**kw):
+        g = jax.grad(lambda x: jnp.sum(tcec.einsum(eq, x, b, **kw) ** 2))(a)
+        g_ref = jax.grad(lambda x: jnp.sum(
+            jnp.einsum(eq, x, b, preferred_element_type=jnp.float32) ** 2))(a)
+        return float(jnp.max(jnp.abs(g - g_ref)))
+
+    e1 = gerr(policy="bf16x1", precision="strict")
+    e6 = gerr(policy="bf16x6", precision="strict")
+    assert e6 < e1 * 0.1, (e1, e6)
+
+
+# ---------------------------------------------------------------------------
+# Fragment operands
+# ---------------------------------------------------------------------------
+
+def test_fragment_rhs_in_kernel_vs_fp64_oracle():
+    """Triangular fragment generated inside the Pallas kernel body under
+    bf16x6: <= 2^-20 rel err vs the fp64 oracle (paper's accuracy point)."""
+    a = _arr(48, 96)
+    u = tcec.triangular(96)
+    with tcec.trace_plans() as log:
+        y = tcec.einsum("mk,kn->mn", a, u, policy="bf16x6_pallas")
+    assert log[0].backend == "pallas_fragment"
+    ref = matmul_fp64(a, np.triu(np.ones((96, 96), np.float64)))
+    assert max_rel_err(y, np.asarray(ref)) <= 2.0 ** -20
+
+
+def test_fragment_lhs_householder_vs_fp64_oracle():
+    """Data-carrying Householder fragment (XLA path, fused generation)
+    under bf16x6: <= 2^-20 rel err vs fp64, and exact grads to v's consumer."""
+    v = _arr(4, 32)
+    v = v / jnp.linalg.norm(v, axis=-1, keepdims=True)
+    a = _arr(4, 32, 16)
+    h = tcec.householder_operand(v)
+    with tcec.trace_plans() as log:
+        y = tcec.einsum("bij,bjk->bik", h, a, policy="bf16x6")
+    assert log[0].backend == "xla"
+    v64 = np.asarray(v, np.float64)
+    h64 = np.eye(32)[None] - 2.0 * v64[:, :, None] * v64[:, None, :]
+    ref = h64 @ np.asarray(a, np.float64)
+    assert max_rel_err(y, ref) <= 2.0 ** -20
+    # gradient w.r.t. the array operand flows through the split schedule
+    g = jax.grad(lambda x: jnp.sum(
+        tcec.einsum("bij,bjk->bik", h, x, policy="bf16x6")))(a)
+    g_ref = jax.grad(lambda x: jnp.sum(
+        jnp.einsum("bij,bjk->bik", jnp.asarray(h64, jnp.float32), x)))(a)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_data_carrying_fragment_falls_back_to_xla_under_pallas_policy():
+    """Rules closing over arrays (Givens' theta, Householder's v) cannot be
+    generated inside a kernel body — the planner must route them to the XLA
+    path instead of crashing the Pallas launcher."""
+    x = _arr(8, 16)
+    g = tcec.givens_operand(16, 0, 1, jnp.float32(0.3))
+    assert g.closes_over_arrays()
+    with tcec.trace_plans() as log:
+        y = tcec.einsum("rn,nm->rm", x, g, policy="bf16x6_pallas")
+    assert log[0].backend == "xla"
+    c, s = np.cos(0.3), np.sin(0.3)
+    gm = np.eye(16, dtype=np.float64)
+    gm[0, 0] = gm[1, 1] = c
+    gm[0, 1], gm[1, 0] = s, -s
+    assert max_rel_err(y, np.asarray(x, np.float64) @ gm) <= 2.0 ** -20
+
+
+def test_tied_embeddings_logits_reach_frontend():
+    """The tied-embeddings LM head runs the "lm_head" site through the
+    frontend (it used to call tc_dot_general directly, skipping the shared
+    custom_vjp)."""
+    from repro.configs.base import ArchConfig, BlockSpec
+    from repro.models import init_params, prefill
+    cfg = ArchConfig(name="tied", family="dense", n_layers=1, d_model=32,
+                     n_heads=4, n_kv_heads=4, d_ff=64, vocab=64,
+                     pattern=(BlockSpec("attn", "dense"),),
+                     tie_embeddings=True, param_dtype="float32",
+                     remat="none")
+    p = init_params(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 8),
+                                          0, cfg.vocab)}
+    with policy_scope(lm_head="bf16x6"), tcec.trace_plans() as log:
+        prefill(p, batch, cfg)
+    recs = [r for r in log if r.site == "lm_head"]
+    assert recs and all(r.policy == get_policy("bf16x6") for r in recs)
+
+
+def test_fragment_never_materialized_by_frontend():
+    """The frontend hands the rule to the kernel launcher — no built (k, n)
+    buffer exists on the pallas_fragment path (the rule object itself is the
+    static kernel parameter)."""
+    u = tcec.triangular(256)
+    built = {"n": 0}
+    orig = u.build
+    spy = tcec.FragmentOperand(u.rule, u.shape, u.dtype, u.name)
+    object.__setattr__(
+        spy, "build",
+        lambda: (built.__setitem__("n", built["n"] + 1), orig())[1])
+    a = _arr(32, 256)
+    y = tcec.einsum("mk,kn->mn", a, spy, policy="bf16x6_pallas")
+    assert built["n"] == 0
+    assert y.shape == (32, 256)
+
+
+# ---------------------------------------------------------------------------
+# Epilogue fusion
+# ---------------------------------------------------------------------------
+
+def test_epilogue_xla_fused_matches_unfused_bitwise():
+    a, b = _arr(24, 40), _arr(40, 16)
+    bias, resid = _arr(16), _arr(24, 16)
+    ep = tcec.Epilogue(scale=0.5, bias=bias, activation="silu",
+                       residual=resid, out_dtype="bfloat16")
+    fused = tcec.einsum("mk,kn->mn", a, b, policy="bf16x6", epilogue=ep)
+    y0 = tcec.einsum("mk,kn->mn", a, b, policy="bf16x6")
+    unfused = (jax.nn.silu(y0 * 0.5 + bias) + resid).astype(jnp.bfloat16)
+    assert fused.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(fused, np.float32),
+                                  np.asarray(unfused, np.float32))
+
+
+def test_epilogue_pallas_fused_in_store_loop():
+    """Kernel-fused epilogue (store_with_operation analogue) matches the
+    unfused chain within accumulation-order tolerance, on batched shapes."""
+    a, b = _arr(3, 24, 40), _arr(3, 40, 16)
+    bias, resid = _arr(16), _arr(3, 24, 16)
+    ep = tcec.Epilogue(scale=2.0, bias=bias, activation="gelu",
+                       residual=resid)
+    with tcec.trace_plans() as log:
+        fused = tcec.einsum("bmk,bkn->bmn", a, b, policy="bf16x6_pallas",
+                            epilogue=ep)
+    assert log[0].backend == "pallas"
+    y0 = tcec.einsum("bmk,bkn->bmn", a, b, policy="bf16x6")
+    unfused = jax.nn.gelu(y0 * 2.0 + bias) + resid
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_epilogue_grads_bias_residual_activation():
+    a, b = _arr(24, 40), _arr(40, 16)
+    bias, resid = _arr(16), _arr(24, 16)
+
+    def loss(fe, x, bb, rr):
+        ep = tcec.Epilogue(bias=bb, activation="gelu", residual=rr)
+        if fe:
+            y = tcec.einsum("mk,kn->mn", x, b, policy="fp32_vpu", epilogue=ep)
+        else:
+            y = jax.nn.gelu(x @ b + bb) + rr
+        return jnp.sum(y ** 2)
+
+    g = jax.grad(lambda *a_: loss(True, *a_), argnums=(0, 1, 2))(a, bias, resid)
+    g_ref = jax.grad(lambda *a_: loss(False, *a_), argnums=(0, 1, 2))(a, bias, resid)
+    for got, ref in zip(g, g_ref):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Site reach: one scope flips every subsystem through the one frontend.
+# ---------------------------------------------------------------------------
+
+def _moe_cfg():
+    from repro.configs.base import ArchConfig, BlockSpec, MoeConfig
+    return ArchConfig(
+        name="tiny-reach", family="moe", n_layers=1, d_model=32, n_heads=4,
+        n_kv_heads=4, d_ff=64, vocab=128,
+        pattern=(BlockSpec("attn", "moe"),),
+        moe=MoeConfig(n_experts=4, top_k=2, d_ff_expert=64, group_size=64),
+        param_dtype="float32", remat="none")
+
+
+def test_single_scope_reaches_dense_attention_moe_ssm():
+    """policy_scope("bf16x6_pallas") reaches dense, attention, MoE experts
+    and the SSM recurrence through the single frontend (acceptance)."""
+    from repro.models import base as base_mod
+    from repro.models import attention as attn_mod
+    from repro.models import moe as moe_mod
+    from repro.models import ssm as ssm_mod
+    from repro.configs import get_config
+
+    pol = get_policy("bf16x6_pallas")
+    with policy_scope("bf16x6_pallas"), tcec.trace_plans() as log:
+        # dense ("ffn" site)
+        base_mod.dense(_arr(4, 32), _arr(32, 16), "ffn")
+        # attention decode ("attn" site, policy-split QK/PV einsums)
+        q = _arr(2, 1, 4, 8)
+        kc, vc = _arr(2, 6, 4, 8), _arr(2, 6, 4, 8)
+        attn_mod.decode_attention(q, kc, vc, jnp.asarray([3, 3]))
+        # MoE experts ("ffn") + dispatch/combine ("moe_shared")
+        cfg = _moe_cfg()
+        p = base_mod.initialize(jax.random.PRNGKey(0),
+                                moe_mod.moe_params(cfg))
+        moe_mod.moe_apply(p, _arr(2, 8, 32), cfg)
+        # mLSTM recurrence ("ssm"), chunked path
+        xc = get_config("xlstm-1.3b", reduced=True)
+        pm = base_mod.initialize(jax.random.PRNGKey(1),
+                                 ssm_mod.mlstm_params(xc))
+        ssm_mod.mlstm_apply(pm, _arr(1, 8, xc.d_model).astype(jnp.bfloat16),
+                            xc)
+
+    by_site = {}
+    for rec in log:
+        by_site.setdefault(rec.site, []).append(rec)
+    for site in ("ffn", "attn", "moe_shared", "ssm"):
+        assert site in by_site, (site, sorted(by_site))
+        assert all(r.policy == pol for r in by_site[site]), site
+    # the dense matmul actually took the kernel path
+    assert any(r.backend == "pallas" for r in by_site["ffn"])
+
+
+def test_moe_expert_ffn_site_regression():
+    """policy_scope(ffn=...) reaches the expert FFN matmuls (they used to
+    run raw mma_einsum with no site tag)."""
+    from repro.models.base import initialize
+    from repro.models import moe as moe_mod
+    cfg = _moe_cfg()
+    p = initialize(jax.random.PRNGKey(0), moe_mod.moe_params(cfg))
+    x = _arr(2, 8, 32)
+
+    def run(**scope):
+        with policy_scope("bf16x1", **scope):
+            return np.asarray(moe_mod.moe_apply(p, x, cfg))
+
+    with policy_scope(ffn="bf16x6"), tcec.trace_plans() as log:
+        moe_mod.moe_apply(p, x, cfg)
+    expert_recs = [r for r in log if r.site == "ffn"]
+    assert len(expert_recs) >= 3               # gate, up, down
+    assert all(r.policy == get_policy("bf16x6") for r in expert_recs)
+    # the flip is numerically visible (fp32 params: bit-different arithmetic)
+    assert np.any(run(ffn="bf16x6") != run(ffn="bf16x1"))
+
+
+def test_ssm_chunk_vs_decode_consistent_under_corrected_policy():
+    """mLSTM chunked prefill == sequential decode under a corrected "ssm"
+    policy (they used to run different arithmetic: mma vs raw jnp.einsum)."""
+    from repro.models.base import initialize
+    from repro.models import ssm as ssm_mod
+    from repro.configs import get_config
+    cfg = get_config("xlstm-1.3b", reduced=True)
+    p = initialize(jax.random.PRNGKey(0), ssm_mod.mlstm_params(cfg))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model),
+                          jnp.float32).astype(jnp.bfloat16)
+    d_in = int(cfg.xlstm.proj_factor_mlstm * cfg.d_model)
+    nh = cfg.n_heads
+    dh = d_in // nh
+
+    with policy_scope(ssm="bf16x6"), tcec.trace_plans() as log:
+        y_full, _ = ssm_mod.mlstm_apply(p, x, cfg)
+        state = {"C": jnp.zeros((2, nh, dh, dh), jnp.float32),
+                 "n": jnp.zeros((2, nh, dh), jnp.float32),
+                 "conv": jnp.zeros((2, cfg.xlstm.conv_kernel - 1, d_in),
+                                   x.dtype)}
+        outs = []
+        for t in range(8):
+            y_t, state = ssm_mod.mlstm_apply(p, x[:, t:t + 1], cfg,
+                                             state=state)
+            outs.append(y_t)
+    y_dec = jnp.concatenate(outs, axis=1)
+    ssm_recs = [r for r in log if r.site == "ssm"]
+    assert ssm_recs and all(r.policy == get_policy("bf16x6")
+                            for r in ssm_recs)
+    np.testing.assert_allclose(np.asarray(y_dec, np.float32),
+                               np.asarray(y_full, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims: warn, and agree with the frontend.
+# ---------------------------------------------------------------------------
+
+def test_legacy_entries_warn_and_forward():
+    a, b = _arr(8, 16), _arr(16, 4)
+
+    from repro.core.tcec import tc_matmul
+    with pytest.warns(DeprecationWarning, match="tc_matmul"):
+        y = tc_matmul(a, b, "bf16x6")
+    np.testing.assert_array_equal(
+        np.asarray(y), np.asarray(tcec.matmul(a, b, policy="bf16x6",
+                                              precision="strict")))
+
+    from repro.kernels.tcec_core import tcec_einsum
+    with pytest.warns(DeprecationWarning, match="tcec_einsum"):
+        y = tcec_einsum("mk,kn->mn", a, b, get_policy("bf16x3"))
+    np.testing.assert_array_equal(
+        np.asarray(y), np.asarray(tcec.einsum("mk,kn->mn", a, b,
+                                              policy="bf16x3",
+                                              precision="strict")))
+
+    from repro.models.base import mma_einsum
+    with pytest.warns(DeprecationWarning, match="mma_einsum"):
+        y = mma_einsum("mk,kn->mn", a, b)
+    np.testing.assert_array_equal(
+        np.asarray(y), np.asarray(tcec.einsum("mk,kn->mn", a, b,
+                                              policy="bf16x1")))
+
+    from repro.models.attention import _attn_einsum
+    with pytest.warns(DeprecationWarning, match="_attn_einsum"):
+        y = _attn_einsum("mk,kn->mn", a, b, get_policy("bf16x6"))
+    np.testing.assert_array_equal(
+        np.asarray(y), np.asarray(tcec.einsum("mk,kn->mn", a, b,
+                                              policy="bf16x6")))
+
+    from repro.kernels import ops
+    with pytest.warns(DeprecationWarning, match="ops.dense"):
+        y = ops.dense(a, b, "bf16x6")
+    np.testing.assert_array_equal(
+        np.asarray(y), np.asarray(tcec.matmul(a, b, policy="bf16x6",
+                                              precision="strict")))
+
+
+def test_frontend_rejects_bad_equations():
+    a, b = _arr(4, 4), _arr(4, 4)
+    with pytest.raises(ValueError, match="explicit output"):
+        tcec.einsum("mk,kn", a, b)
+    with pytest.raises(ValueError, match="two-operand"):
+        tcec.einsum("a,b,c->abc", a, b)
+    with pytest.raises(ValueError, match="repeated"):
+        tcec.einsum("mm,mn->mn", a, b)
+    with pytest.raises(ValueError, match="size mismatch"):
+        tcec.einsum("mk,kn->mn", a, _arr(5, 4))
+    with pytest.raises(ValueError, match="residual shape"):
+        tcec.einsum("mk,kn->mn", a, b,
+                    epilogue=tcec.Epilogue(residual=_arr(3, 3)))
