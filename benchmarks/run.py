@@ -12,6 +12,8 @@
   §4.4 policies -> policy_sweep    (every registered policy via policy_scope)
   §API (Code 4/5) -> einsum_frontend (fused-epilogue + fragment-operand
                    walltime vs the staged/unfused twins, saved-bytes claim)
+  §Serving      -> serving_throughput (paged vs dense decode: tok/s and
+                   cache-bytes-touched per step across policies)
   §Roofline     -> roofline        (cluster table from dry-run artifacts)
 
 Every row prints as ``name,value,derived`` where timing rows use us_per_call
@@ -26,7 +28,7 @@ def main() -> None:
     from benchmarks import (bf_table, ai_curves, householder, givens,
                             tcec_accuracy, tcec_throughput,
                             attention_throughput, policy_sweep,
-                            einsum_frontend, roofline)
+                            einsum_frontend, serving_throughput, roofline)
     modules = [
         ("bf_table", bf_table),
         ("ai_curves", ai_curves),
@@ -37,6 +39,7 @@ def main() -> None:
         ("attention_throughput", attention_throughput),
         ("policy_sweep", policy_sweep),
         ("einsum_frontend", einsum_frontend),
+        ("serving_throughput", serving_throughput),
         ("roofline", roofline),
     ]
     failures = 0

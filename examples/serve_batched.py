@@ -14,6 +14,16 @@ interpret-mode — slow — on CPU, so pair it with a small --gen when trying
 it on a laptop).  ``--attn-policy`` pins just the ``"attn"`` site, e.g.
 
     --policy bf16x1 --attn-policy bf16x6     # fp32-accurate attention only
+
+``--paged`` serves a *mixed-length* request stream through the
+continuous-batching engine (``repro.serving``) instead of one dense
+fixed-shape batch: each prompt is trimmed to a different length, requests
+are multiplexed onto ``--max-concurrency`` decode slots, and KV lives in
+``--page-size``-token pages so decode touches only allocated cache.  The
+same policy flags reach paged decode (the paged attention kernel/twin run
+the identical split schedule):
+
+    --paged --max-concurrency 4 --page-size 16 --attn-policy bf16x6
 """
 import argparse
 import dataclasses
@@ -51,8 +61,16 @@ def main():
     ap.add_argument("--attn-policy", default=None,
                     choices=registered_policies(),
                     help="policy for the \"attn\" site only (QK^T/PV in "
-                         "flash/chunked/decode attention); overrides "
+                         "flash/chunked/decode/paged attention); overrides "
                          "--policy at that site")
+    ap.add_argument("--paged", action="store_true",
+                    help="continuous-batching engine over paged KV caches "
+                         "with a mixed-length request stream")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--max-concurrency", type=int, default=4)
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunk long prompts to this many tokens per "
+                         "engine step (paged mode)")
     args = ap.parse_args()
     if args.kernel and not args.policy:
         ap.error("--kernel requires --policy (the kernel override applies "
@@ -87,6 +105,25 @@ def main():
     import contextlib
     scope = (policy_scope(pol, **overrides)
              if pol is not None or overrides else contextlib.nullcontext())
+    if args.paged:
+        from repro.launch.serve import generate_paged
+        # mixed-length stream: the whole point of continuous batching
+        rs = np.random.default_rng(0)
+        lens = rs.integers(max(1, args.prompt_len // 3),
+                           args.prompt_len + 1, args.batch)
+        prompts = [list(np.asarray(tokens[i, :lens[i]]))
+                   for i in range(args.batch)]
+        with mesh, activation_sharding(mesh), scope:
+            out, tps = generate_paged(
+                cfg, params, prompts, args.gen, page_size=args.page_size,
+                max_concurrency=args.max_concurrency,
+                prefill_chunk=args.prefill_chunk)
+        print(f"served {len(out)} requests (prompt lens "
+              f"{[int(x) for x in lens]}) at "
+              f"{tps:.1f} tok/s on {args.max_concurrency} slots, "
+              f"{args.page_size}-token pages")
+        print("first stream:", out[0][:16])
+        return
     with mesh, activation_sharding(mesh), scope:
         gen, tps = generate(cfg, params, tokens, max_len, args.gen,
                             batch_extras=extras)

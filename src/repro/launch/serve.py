@@ -1,17 +1,26 @@
-"""Batched serving launcher: prefill + decode loop with KV caches.
+"""Batched serving launcher: prefill + decode with dense OR paged KV caches.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
         --batch 4 --prompt-len 16 --gen 32
 
-Demonstrates the production serving path on any mesh: sharded params,
-prefill emits caches, decode_step consumes/updates them in place
-(donated buffers).
+Dense mode demonstrates the classic serving path on any mesh: sharded
+params, prefill emits caches, decode_step consumes/updates them in place
+(donated buffers).  ``--paged`` switches to the continuous-batching engine
+(``repro.serving.PagedServingEngine``): KV lives in fixed-size pages of a
+shared pool addressed through per-request block tables, so decode stages
+only *allocated* cache instead of ``batch x max_len`` dense buffers —
+``--page-size`` sets the page granularity (16–64 tokens is the sweet spot:
+small enough that a short request wastes < 1 page of slack, large enough
+that the gather's DMA blocks stay MXU/VMEM-aligned) and
+``--max-concurrency`` the number of decode slots requests are multiplexed
+onto.
 
 The ``--policy`` / ``--site-policy`` flags reach every TCEC site including
-attention: ``--site-policy attn=bf16x6`` runs fp32-accurate QK^T/PV in
-prefill AND decode (one split schedule on both paths), and
-``--policy bf16x6_pallas`` additionally routes prefill attention through
-the fused flash Pallas kernel.
+attention on BOTH paths: ``--site-policy attn=bf16x6`` runs fp32-accurate
+QK^T/PV in prefill AND (paged or dense) decode — one split schedule
+everywhere — and ``--policy bf16x6_pallas`` additionally routes prefill
+attention through the fused flash kernel and paged decode through the
+fused paged-attention kernel (block-table gathers inside the kernel body).
 """
 from __future__ import annotations
 
@@ -29,19 +38,51 @@ from repro.launch import add_policy_args, policy_scope_from_args
 from repro.launch.mesh import make_host_mesh
 from repro.models import init_params, prefill, decode_step, init_decode_caches
 from repro.models.base import activation_sharding
+from repro.models.model import decode_cache_axes
 from repro.parallel import sharding as shd
 
 
-def write_prefill_caches(caches, prefill_caches):
-    """Insert prompt-length prefill caches into max-length decode caches."""
-    def write(dst, src):
-        if (dst.ndim >= 3 and src.shape != dst.shape
-                and src.shape[:2] == dst.shape[:2]
-                and src.shape[2] <= dst.shape[2]):
+def write_prefill_caches(caches, prefill_caches, cfg=None, axes=None):
+    """Insert prompt-length prefill caches into max-length decode caches.
+
+    The sequence axis of every cache leaf is *explicit*: ``axes`` is a tree
+    of logical-axis-name tuples matching the cache tree (derived from the
+    config via ``model.decode_cache_axes`` when ``cfg`` is given), and the
+    write targets the axis labeled ``"seq"``.  Leaves without a sequence
+    axis (recurrent states) must match shapes exactly — a mismatch raises
+    instead of silently passing the wrong-shaped cache through, which is
+    what the old ndim/prefix-matching heuristic did when a cache's feature
+    dim collided with the prompt length (e.g. an MLA latent cache with
+    ``kv_lora_rank == prompt_len``).
+    """
+    if axes is None:
+        if cfg is None:
+            raise TypeError("write_prefill_caches needs cfg (to derive each "
+                            "leaf's seq axis) or an explicit axes tree")
+        axes = decode_cache_axes(cfg)
+
+    def write(dst, src, ax):
+        ax = tuple(ax)
+        if "seq" in ax:
+            axis = ax.index("seq")
+            if src.shape[axis] > dst.shape[axis]:
+                raise ValueError(
+                    f"prefill cache seq length {src.shape[axis]} exceeds "
+                    f"decode cache capacity {dst.shape[axis]} (axes {ax})")
             return jax.lax.dynamic_update_slice_in_dim(
-                dst, src.astype(dst.dtype), 0, axis=2)
+                dst, src.astype(dst.dtype), 0, axis=axis)
+        if src.shape != dst.shape:
+            raise ValueError(
+                f"cache leaf without a seq axis must match shapes exactly: "
+                f"prefill {src.shape} vs decode {dst.shape} (axes {ax})")
         return src.astype(dst.dtype)
-    return jax.tree.map(write, caches, prefill_caches)
+
+    def rec(dst, src, ax):
+        if isinstance(dst, dict):
+            return {k: rec(dst[k], src[k], ax[k]) for k in dst}
+        return write(dst, src, ax)
+
+    return rec(caches, prefill_caches, axes)
 
 
 def generate(cfg, params, tokens, max_len, gen_steps, batch_extras=None,
@@ -53,7 +94,7 @@ def generate(cfg, params, tokens, max_len, gen_steps, batch_extras=None,
     logits, pf_caches = jax.jit(
         lambda p, bt: prefill(p, bt, cfg))(params, batch)
     caches = init_decode_caches(cfg, b, max_len)
-    caches = write_prefill_caches(caches, pf_caches)
+    caches = write_prefill_caches(caches, pf_caches, cfg)
 
     step_fn = jax.jit(
         lambda p, t, c, i: decode_step(p, t, c, i, cfg),
@@ -77,6 +118,27 @@ def generate(cfg, params, tokens, max_len, gen_steps, batch_extras=None,
     return jnp.concatenate(out, axis=1), b * gen_steps / dt
 
 
+def generate_paged(cfg, params, prompts, gen_steps, *, page_size=16,
+                   max_concurrency=4, prefill_chunk=None):
+    """Continuous-batching generation over paged caches.
+
+    ``prompts`` is a list of token lists (mixed lengths welcome — that is
+    the point).  Returns ({rid: tokens}, tokens/sec)."""
+    from repro.serving import PagedServingEngine
+    max_seq = max(len(p) for p in prompts) + gen_steps + 1
+    eng = PagedServingEngine(cfg, params, page_size=page_size,
+                             max_concurrency=max_concurrency,
+                             max_seq_len=max_seq,
+                             prefill_chunk=prefill_chunk)
+    for pr in prompts:
+        eng.submit(pr, gen_steps)
+    t0 = time.time()
+    out = eng.run()
+    dt = time.time() - t0
+    n_tok = sum(len(v) for v in out.values())
+    return out, n_tok / dt
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=list(ARCH_IDS), default="qwen2-0.5b")
@@ -85,6 +147,18 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--paged", action="store_true",
+                    help="serve through the paged KV cache + continuous-"
+                         "batching engine (repro.serving) instead of dense "
+                         "per-request max_len caches")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (paged mode)")
+    ap.add_argument("--max-concurrency", type=int, default=4,
+                    help="decode slots the paged engine multiplexes "
+                         "requests onto")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunk long prefills to this many tokens per "
+                         "engine step (paged mode, attention archs)")
     add_policy_args(ap)
     args = ap.parse_args(argv)
 
@@ -99,6 +173,24 @@ def main(argv=None):
 
     tokens = jax.random.randint(rng, (args.batch, args.prompt_len), 0,
                                 cfg.vocab, dtype=jnp.int32)
+    if args.paged:
+        # mixed-length stream: trim each prompt to a different length
+        rs = np.random.default_rng(args.seed)
+        lens = rs.integers(max(1, args.prompt_len // 2), args.prompt_len + 1,
+                           args.batch)
+        prompts = [list(np.asarray(tokens[i, :lens[i]])) for i in
+                   range(args.batch)]
+        with policy_scope_from_args(args), mesh, activation_sharding(mesh):
+            out, tps = generate_paged(
+                cfg, params, prompts, args.gen, page_size=args.page_size,
+                max_concurrency=args.max_concurrency,
+                prefill_chunk=args.prefill_chunk)
+        print(f"generated {sum(len(v) for v in out.values())} tokens over "
+              f"{len(out)} requests at {tps:.1f} tok/s (paged, "
+              f"page={args.page_size}, slots={args.max_concurrency})")
+        print("sample:", out[0][:16])
+        return out
+
     extras = {k: jnp.asarray(v) for k, v in make_frontend_inputs(
         cfg, args.batch, 0, args.seed).items()}
     max_len = args.prompt_len + (cfg.vision_tokens or 0) + args.gen + 1

@@ -4,5 +4,5 @@ policies throughout."""
 from .model import (
     param_specs, abstract_params, init_params, logical_axes, param_count,
     loss_fn, prefill, decode_step, decode_cache_specs, init_decode_caches,
-    backbone,
+    backbone, decode_step_paged, paged_cache_specs, init_paged_decode_caches,
 )

@@ -259,6 +259,36 @@ def _causal_pair_attention(q, k, v, q_chunk, kv_chunk, scale, pol):
     return out if not _plain(pol) else out.astype(q.dtype)
 
 
+def mla_absorbed_attention(q_c: jnp.ndarray, q_rope: jnp.ndarray,
+                           c_cache: jnp.ndarray, r_cache: jnp.ndarray,
+                           valid: jnp.ndarray, scale: float,
+                           policy: TcecPolicy | str | None = None
+                           ) -> jnp.ndarray:
+    """The MLA absorbed-decode attention core: ``softmax((q_c c^T + q_r r^T)
+    * scale) c`` over the *compressed* latent cache.
+
+    ONE implementation shared by contiguous decode (``mla_apply``) and the
+    paged XLA twin (``repro.serving.paged_attention``), so paged-vs-
+    contiguous parity is exact per policy by construction.  ``q_c (b, sq,
+    h, lora)``, ``q_rope (b, sq, h, rope)``; ``c_cache (b, S, lora)``,
+    ``r_cache (b, S, rope)``; ``valid`` broadcastable to ``(b, sq, S)``.
+    Fully-masked rows emit zeros.  Returns ``o_c (b, sq, h, lora)`` —
+    the caller applies ``W_uv``.
+    """
+    pol = resolve_policy(policy, "attn")
+    s_nope = tcec.einsum("bqhl,bsl->bqhs", q_c, c_cache,
+                         site="attn", policy=pol)
+    s_rope = tcec.einsum("bqhr,bsr->bqhs", q_rope, r_cache,
+                         site="attn", policy=pol)
+    scores = (s_nope + s_rope) * scale
+    scores = jnp.where(valid[:, :, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # rows with no valid cache position degenerate to uniform — emit zeros
+    probs = jnp.where(jnp.any(valid, -1)[:, :, None, None], probs, 0.0)
+    return tcec.einsum("bqhs,bsl->bqhl", probs, c_cache,
+                       site="attn", policy=pol)
+
+
 def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
                      cache_index: jnp.ndarray,
                      policy: TcecPolicy | str | None = None) -> jnp.ndarray:
@@ -319,11 +349,19 @@ def gqa_apply(p, x: jnp.ndarray, cfg: ArchConfig, positions: jnp.ndarray,
               kv_source: Optional[jnp.ndarray] = None,
               is_cross: bool = False,
               emit_kv: bool = False,
-              kv_len: Optional[int] = None) -> Tuple[jnp.ndarray, Optional[Dict]]:
+              kv_len: Optional[int] = None,
+              block_table: Optional[jnp.ndarray] = None,
+              seq_lens: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray, Optional[Dict]]:
     """GQA attention. cache given -> decode (x is (b, 1, d)), returns updated
     cache.  is_cross: cross-attention (kv from kv_source at prefill, from the
     precomputed cache at decode; no rope).  kv_len masks right-padded
-    kv_source positions; fully-masked query rows attend to nothing (zeros)."""
+    kv_source positions; fully-masked query rows attend to nothing (zeros).
+
+    A *paged* cache (``{"k_pages", "v_pages"}`` page pools, see
+    ``repro.serving``) decodes through the block table: the new K/V are
+    appended at each request's ``seq_lens`` position and attention gathers
+    pages via ``paged_decode_attention`` (s == 1) or the chunked-prefill
+    path (s > 1), at the same ``"attn"``-site policy as the dense path."""
     b, s, d = x.shape
     h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
     pol = "attn"
@@ -352,6 +390,25 @@ def gqa_apply(p, x: jnp.ndarray, cfg: ArchConfig, positions: jnp.ndarray,
     cos, sin = rope_cos_sin(positions, hd, cfg.rope_theta)
     q = apply_rope(q, cos, sin)
     k = apply_rope(k, cos, sin)
+
+    if cache is not None and "k_pages" in cache:
+        # paged decode / chunked prefill: append to the page pools, gather
+        # through the block table (lazy import: serving depends on models)
+        from repro.serving import paged_cache as _pc
+        from repro.serving import paged_attention as _pa
+        k_pages = _pc.append_pages(cache["k_pages"], k, block_table, seq_lens)
+        v_pages = _pc.append_pages(cache["v_pages"], v, block_table, seq_lens)
+        if s == 1:
+            o = _pa.paged_decode_attention(
+                q[:, 0], k_pages, v_pages, block_table,
+                seq_lens.astype(jnp.int32) + 1)[:, None]
+        else:
+            row_pos = seq_lens[:, None].astype(jnp.int32) \
+                + jnp.arange(s, dtype=jnp.int32)[None]
+            o = _pa.paged_prefill_attention(q, k_pages, v_pages,
+                                            block_table, row_pos)
+        y = dense(o.reshape(b, s, h * hd), p["wo"], pol)
+        return y.astype(x.dtype), {"k_pages": k_pages, "v_pages": v_pages}
 
     if cache is not None:
         # decode: insert k/v at cache_index, attend against full cache
@@ -412,7 +469,9 @@ def _mla_q(p, x, cfg):
 def mla_apply(p, x: jnp.ndarray, cfg: ArchConfig, positions: jnp.ndarray,
               cache: Optional[Dict] = None,
               cache_index: Optional[jnp.ndarray] = None,
-              causal: bool = True, kv_source=None) -> Tuple[jnp.ndarray, Optional[Dict]]:
+              causal: bool = True, kv_source=None,
+              block_table: Optional[jnp.ndarray] = None,
+              seq_lens: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray, Optional[Dict]]:
     m = cfg.mla
     b, s, d = x.shape
     h = cfg.n_heads
@@ -432,6 +491,36 @@ def mla_apply(p, x: jnp.ndarray, cfg: ArchConfig, positions: jnp.ndarray,
     w_uk = wkv_b[..., :nope]                              # (lora, h, nope)
     w_uv = wkv_b[..., nope:]                              # (lora, h, vd)
 
+    scale = 1.0 / ((nope + rope_d) ** 0.5)
+
+    if cache is not None and "c_pages" in cache:
+        # --- paged absorbed decode: latent cache lives in page pools ---
+        from repro.serving import paged_cache as _pc
+        from repro.serving import paged_attention as _pa
+        c_pages = _pc.append_pages(cache["c_pages"], c_kv, block_table,
+                                   seq_lens)
+        r_pages = _pc.append_pages(cache["r_pages"], k_rope, block_table,
+                                   seq_lens)
+        q_c = tcec.einsum("bqhn,lhn->bqhl", q_nope, w_uk,
+                          site="attn", policy=apol)
+        if s == 1:
+            o_c = _pa.paged_mla_decode_attention(
+                q_c[:, 0], q_rope[:, 0], c_pages, r_pages, block_table,
+                seq_lens.astype(jnp.int32) + 1, scale=scale,
+                policy=apol)[:, None]
+        else:                                   # chunked prefill
+            row_pos = seq_lens[:, None].astype(jnp.int32) \
+                + jnp.arange(s, dtype=jnp.int32)[None]
+            c = _pc.gather_pages(c_pages, block_table)
+            r = _pc.gather_pages(r_pages, block_table)
+            valid = jnp.arange(c.shape[1], dtype=jnp.int32)[None, None] \
+                <= row_pos[..., None]
+            o_c = mla_absorbed_attention(q_c, q_rope, c, r, valid, scale,
+                                         apol)
+        o = tcec.einsum("bqhl,lhv->bqhv", o_c, w_uv, site="attn", policy=apol)
+        y = dense(o.reshape(b, s, h * vd).astype(x.dtype), p["wo"], pol)
+        return y.astype(x.dtype), {"c_pages": c_pages, "r_pages": r_pages}
+
     if cache is not None:
         # --- absorbed decode: never re-expand K/V from the latent cache ---
         c_cache = jax.lax.dynamic_update_slice_in_dim(
@@ -439,19 +528,17 @@ def mla_apply(p, x: jnp.ndarray, cfg: ArchConfig, positions: jnp.ndarray,
         r_cache = jax.lax.dynamic_update_slice_in_dim(
             cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), cache_index, axis=1)
         S = c_cache.shape[1]
-        # absorb W_uk into q: q_c (b, h, lora) — the whole absorbed chain
-        # runs the attn-site split schedule so decode matches prefill
-        q_c = tcec.einsum("bqhn,lhn->bhl", q_nope, w_uk, site="attn", policy=apol)
-        s_nope = tcec.einsum("bhl,bsl->bhs", q_c, c_cache, site="attn", policy=apol)
-        s_rope = tcec.einsum("bqhr,bsr->bhs", q_rope, r_cache, site="attn", policy=apol)
-        scores = (s_nope + s_rope) / ((nope + rope_d) ** 0.5)
-        valid = jnp.arange(S, dtype=jnp.int32)[None] <= cache_index
-        scores = jnp.where(valid[:, None], scores, NEG_INF)
-        probs = jax.nn.softmax(scores, axis=-1)
+        # absorb W_uk into q: q_c (b, 1, h, lora) — the whole absorbed chain
+        # runs the attn-site split schedule (the shared core) so decode
+        # matches prefill AND the paged twin bit-for-bit per policy
+        q_c = tcec.einsum("bqhn,lhn->bqhl", q_nope, w_uk,
+                          site="attn", policy=apol)
         # emit zeros for rows with no valid cache position (cache_index < 0)
-        probs = jnp.where(jnp.any(valid, -1)[:, None, None], probs, 0.0)
-        o_c = tcec.einsum("bhs,bsl->bhl", probs, c_cache, site="attn", policy=apol)
-        o = tcec.einsum("bhl,lhv->bhv", o_c, w_uv, site="attn", policy=apol)
+        valid = (jnp.arange(S, dtype=jnp.int32)[None, None]
+                 <= cache_index)                 # (1, 1, S) or (b, 1, S)
+        o_c = mla_absorbed_attention(q_c, q_rope, c_cache, r_cache, valid,
+                                     scale, apol)
+        o = tcec.einsum("bqhl,lhv->bqhv", o_c, w_uv, site="attn", policy=apol)
         y = dense(o.reshape(b, 1, h * vd).astype(x.dtype), p["wo"], pol)
         return y.astype(x.dtype), {"c_kv": c_cache, "k_rope": r_cache}
 

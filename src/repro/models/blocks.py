@@ -72,7 +72,10 @@ def block_apply(p, x: jnp.ndarray, cfg: ArchConfig, spec: BlockSpec,
                 cache_index=None,
                 causal: bool = True,
                 enc_out: Optional[jnp.ndarray] = None,
-                emit_cache: bool = False) -> Tuple[jnp.ndarray, Optional[Dict]]:
+                emit_cache: bool = False,
+                block_table=None,
+                seq_lens=None,
+                active=None) -> Tuple[jnp.ndarray, Optional[Dict]]:
     x = shard_hint(x, "batch", None, None)
     h = rms_norm(x, p["norm1"], cfg.norm_eps)
     _, apply_fn = _MIXERS[spec.mixer]
@@ -80,15 +83,27 @@ def block_apply(p, x: jnp.ndarray, cfg: ArchConfig, spec: BlockSpec,
         mixer_cache = cache.get("mixer") if cache else None
         y, new_mixer = apply_fn(p["mixer"], h, cfg, positions,
                                 cache=mixer_cache, cache_index=cache_index,
-                                causal=causal, emit_kv=emit_cache)
+                                causal=causal, emit_kv=emit_cache,
+                                block_table=block_table, seq_lens=seq_lens)
     elif spec.mixer == "mla":
         mixer_cache = cache.get("mixer") if cache else None
         y, new_mixer = apply_fn(p["mixer"], h, cfg, positions,
                                 cache=mixer_cache, cache_index=cache_index,
-                                causal=causal)
+                                causal=causal,
+                                block_table=block_table, seq_lens=seq_lens)
     else:
         mixer_cache = cache.get("mixer") if cache else None
         y, new_mixer = apply_fn(p["mixer"], h, cfg, state=mixer_cache)
+        if active is not None and mixer_cache is not None \
+                and new_mixer is not None:
+            # continuous batching: recurrent state is accumulating (unlike
+            # the positional, overwrite-idempotent KV append), so slots not
+            # decoding this tick must keep their old state — a ghost step
+            # would consume their pending token twice
+            new_mixer = jax.tree.map(
+                lambda n, o: jnp.where(
+                    active.reshape((-1,) + (1,) * (n.ndim - 1)), n, o),
+                new_mixer, mixer_cache)
     x = x + y
 
     new_cache: Optional[Dict] = {"mixer": new_mixer} if new_mixer is not None else None
@@ -157,6 +172,33 @@ def block_cache_spec(cfg: ArchConfig, spec: BlockSpec, b: int, S: int,
             "v": jax.ShapeDtypeStruct((b, cross_len, kvh, hd), dt),
         }
     return out or None
+
+
+def block_paged_cache_spec(cfg: ArchConfig, spec: BlockSpec, slots: int,
+                           num_pages: int, page_size: int) -> Optional[Dict]:
+    """Paged decode-cache layout for one block (``repro.serving``).
+
+    Sequence-shaped attention caches become shared page pools ``(num_pages,
+    page_size, *tail)`` addressed through per-request block tables; the
+    recurrent mixers' O(1) states keep their dense per-slot layout
+    ``(slots, ...)`` (there is nothing sequence-shaped to page)."""
+    kvh, hd = cfg.n_kv_heads, cfg.head_dim_
+    dt = jnp.dtype(cfg.param_dtype)
+    if spec.mixer == "attn":
+        return {"mixer": {
+            "k_pages": jax.ShapeDtypeStruct((num_pages, page_size, kvh, hd), dt),
+            "v_pages": jax.ShapeDtypeStruct((num_pages, page_size, kvh, hd), dt),
+        }}
+    if spec.mixer == "mla":
+        m = cfg.mla
+        return {"mixer": {
+            "c_pages": jax.ShapeDtypeStruct(
+                (num_pages, page_size, m.kv_lora_rank), dt),
+            "r_pages": jax.ShapeDtypeStruct(
+                (num_pages, page_size, m.qk_rope_head_dim), dt),
+        }}
+    # recurrent mixers: per-slot dense state, identical to the batch layout
+    return block_cache_spec(cfg, spec, slots, 0)
 
 
 def block_cache_axes(cfg: ArchConfig, spec: BlockSpec,

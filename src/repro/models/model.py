@@ -104,7 +104,8 @@ def _remat(fn, cfg: ArchConfig):
 
 def _run_blocks(blocks, x, cfg: ArchConfig, positions, causal=True,
                 enc_out=None, caches=None, cache_index=None,
-                emit_cache=False, use_remat=False):
+                emit_cache=False, use_remat=False,
+                block_table=None, seq_lens=None, active=None):
     """Scan over pattern groups.  Returns (x, new_caches_or_None)."""
 
     def group_body(x, gparams, gcaches):
@@ -115,7 +116,9 @@ def _run_blocks(blocks, x, cfg: ArchConfig, positions, causal=True,
             x, nc = block_apply(gparams[key], x, cfg, spec, positions,
                                 cache=cache_i, cache_index=cache_index,
                                 causal=causal, enc_out=enc_out,
-                                emit_cache=emit_cache)
+                                emit_cache=emit_cache,
+                                block_table=block_table, seq_lens=seq_lens,
+                                active=active)
             if nc is not None:
                 new_caches[key] = nc
         return x, new_caches
@@ -275,6 +278,40 @@ def decode_step(params, token: jnp.ndarray, caches: Any,
     return logits, new_caches
 
 
+def decode_step_paged(params, tokens: jnp.ndarray, caches: Any,
+                      block_table: jnp.ndarray, seq_lens: jnp.ndarray,
+                      cfg: ArchConfig,
+                      active: Optional[jnp.ndarray] = None
+                      ) -> Tuple[jnp.ndarray, Any]:
+    """One continuous-batching step against *paged* caches.
+
+    ``tokens (b, s)`` int32 — ``s == 1`` is the decode step, ``s > 1`` a
+    chunked-prefill step (the chunk attends causally to each request's
+    cache prefix; recurrent mixers only support ``s == 1``).
+    ``block_table (b, npages)`` maps each slot's logical pages to physical
+    pages of the shared pools; ``seq_lens (b,)`` is each slot's current
+    cache length (the new tokens are appended there).  Per-slot rope
+    positions follow ``seq_lens`` — slots at different depths coexist in
+    one batch.  ``active (b,)`` bool marks the slots actually decoding this
+    tick: idle lanes' paged KV writes are absorbed/overwritten harmlessly,
+    but *recurrent* per-slot states are accumulating, so inactive slots
+    keep their old state.  Returns (last-position logits ``(b, v)``,
+    updated caches).
+    """
+    b, s = tokens.shape
+    with policy_defaults(cfg.site_policies()):
+        x = _embed_tokens(params, tokens, cfg)
+        positions = seq_lens[:, None].astype(jnp.int32) \
+            + jnp.arange(s, dtype=jnp.int32)[None]
+        x, new_caches = _run_blocks(params["blocks"], x, cfg, positions,
+                                    causal=True, caches=caches,
+                                    block_table=block_table,
+                                    seq_lens=seq_lens, active=active)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = _logits(params, x[:, -1:], cfg)[:, 0]
+    return logits, new_caches
+
+
 def decode_cache_specs(cfg: ArchConfig, b: int, max_len: int) -> Any:
     """Abstract cache pytree for serve_step lowering (stacked over groups)."""
     cross_len = cfg.encoder_len if cfg.encoder_layers else 0
@@ -292,6 +329,33 @@ def init_decode_caches(cfg: ArchConfig, b: int, max_len: int):
     """Concrete zero caches (for real decoding in examples/tests)."""
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
                         decode_cache_specs(cfg, b, max_len))
+
+
+def paged_cache_specs(cfg: ArchConfig, slots: int, num_pages: int,
+                      page_size: int) -> Any:
+    """Abstract *paged* cache pytree (stacked over groups): attention KV /
+    MLA latent caches as shared page pools, recurrent states per-slot.
+    Encoder-decoder and vision frontends are not paged (no decode-time
+    growth to page)."""
+    if cfg.encoder_layers or cfg.vision_tokens:
+        raise NotImplementedError(
+            "paged serving covers decoder-only architectures")
+    from .blocks import block_paged_cache_spec
+    group = {}
+    for i, spec in enumerate(cfg.pattern):
+        c = block_paged_cache_spec(cfg, spec, slots, num_pages, page_size)
+        if c is not None:
+            group[f"pos{i}"] = c
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((cfg.n_groups,) + s.shape, s.dtype),
+        group)
+
+
+def init_paged_decode_caches(cfg: ArchConfig, slots: int, num_pages: int,
+                             page_size: int):
+    """Concrete zero paged caches (pools + per-slot states)."""
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        paged_cache_specs(cfg, slots, num_pages, page_size))
 
 
 def decode_cache_axes(cfg: ArchConfig) -> Any:

@@ -128,7 +128,10 @@ def _moe_apply(p, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
         # routed experts and ffn_apply
         sh = dense(x, p["ws_gate"], "moe_shared", activation=cfg.act) \
             * dense(x, p["ws_up"], "moe_shared")
-        y = y + dense(sh.astype(x.dtype), p["ws_down"], "moe_shared")
+        # cast like the routed path: corrected/vpu policies emit fp32 from
+        # dense, which would upcast the block's residual carry
+        y = y + dense(sh.astype(x.dtype), p["ws_down"],
+                      "moe_shared").astype(x.dtype)
     return y
 
 

@@ -1,0 +1,32 @@
+"""Continuous-batching serving subsystem: paged KV caches + scheduler.
+
+The paper's footprint discipline applied to decode: a dense ``(b, max_len,
+kvh, hd)`` cache stages ``max_len`` positions per request whether or not
+they hold tokens — the serving analogue of a staged fragment buffer.  The
+paged cache stages only *allocated* pages (``repro.serving.paged_cache``),
+the paged decode attention gathers them through a per-request block table
+inside the kernel body (``repro.serving.paged_attention``; Pallas kernel +
+XLA twin, both running the shared TCEC split schedule so ``policy_scope``
+reaches paged decode exactly like prefill), and a pure-Python
+continuous-batching scheduler (``repro.serving.scheduler``) admits, chunks
+and evicts requests against a page allocator.  ``PagedServingEngine``
+(``repro.serving.engine``) glues the three to the model zoo.
+"""
+from .paged_cache import (append_pages, gather_pages, init_pool,
+                          pages_needed, NULL_PAGE)
+from .paged_attention import (paged_decode_attention,
+                              paged_decode_attention_pallas,
+                              paged_decode_attention_xla,
+                              paged_mla_decode_attention,
+                              paged_prefill_attention)
+from .scheduler import PageAllocator, Request, Scheduler, StepPlan
+from .engine import PagedServingEngine
+
+__all__ = [
+    "append_pages", "gather_pages", "init_pool", "pages_needed", "NULL_PAGE",
+    "paged_decode_attention", "paged_decode_attention_pallas",
+    "paged_decode_attention_xla", "paged_mla_decode_attention",
+    "paged_prefill_attention",
+    "PageAllocator", "Request", "Scheduler", "StepPlan",
+    "PagedServingEngine",
+]

@@ -1,0 +1,185 @@
+"""``PagedServingEngine`` — the executor gluing the pure-Python scheduler
+to the model zoo's paged decode path.
+
+One engine ``step()`` executes one scheduler tick:
+
+  1. evictions: finished requests' slots are detached (their pages were
+     freed by the scheduler; the stale pool contents are unreachable once
+     no block table points at them — nothing is zeroed),
+  2. admissions: the new request's block-table row is installed,
+  3. prefill: either one ``model.prefill`` call per request (single-shot,
+     exact ``generate()`` numerics) with the resulting caches scattered
+     into its pages, or — with ``prefill_chunk`` set — one prompt chunk
+     through the paged chunked-prefill path,
+  4. decode: ONE batched ``decode_step_paged`` over every slot.
+
+Slots not decoding this tick ride the batched step as ghost lanes.  Their
+safety rests on two invariants, not on the scratch page alone: (a) *free*
+slots point their whole block-table row at ``NULL_PAGE``, so their writes
+land on the scratch page; (b) admitted-but-still-prefilling (and
+just-prefilled) slots write into their *own* pages at exactly
+``seq_lens[slot]`` — the position the next prefill chunk or real decode
+step overwrites before anything reads it.  Both depend on step ordering
+(prefill chunks run before the batched decode) — do not reorder.  KV
+appends are positional and overwrite-idempotent, which is why this works;
+*recurrent* per-slot state is accumulating, so the batched step carries an
+active-slot mask and inactive slots keep their old state.
+
+Greedy decoding only (argmax) — the deterministic contract the golden
+token-stream tests pin.  Policies reach the engine through the ambient
+``policy_scope`` exactly like the dense serve path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import (decode_step_paged, init_paged_decode_caches,
+                          prefill)
+from .paged_cache import NULL_PAGE, pages_needed, write_prefill_prefix
+from .scheduler import Request, Scheduler, StepPlan
+
+__all__ = ["PagedServingEngine"]
+
+_SEQ_MIXERS = ("attn", "mla")
+
+
+class PagedServingEngine:
+    """Continuous-batching serving over paged KV caches.
+
+    ``max_seq_len`` bounds prompt + generation per request (it sizes the
+    block table); ``num_pages`` defaults to full residency (every slot can
+    hold a ``max_seq_len`` sequence) — pass something smaller to exercise
+    admission back-pressure.  ``prefill_chunk`` enables chunked prefill
+    (attention/MLA-mixer architectures only: recurrent mixers have no
+    multi-token decode step).
+    """
+
+    def __init__(self, cfg: ArchConfig, params, *, page_size: int = 16,
+                 max_concurrency: int = 4, max_seq_len: int = 256,
+                 num_pages: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
+                 eos_id: Optional[int] = None):
+        if cfg.encoder_layers or cfg.vision_tokens:
+            raise NotImplementedError(
+                "paged serving covers decoder-only architectures")
+        if prefill_chunk is not None and any(
+                spec.mixer not in _SEQ_MIXERS for spec in cfg.pattern):
+            raise NotImplementedError(
+                "chunked prefill needs attention/MLA mixers only "
+                f"(pattern has {[s.mixer for s in cfg.pattern]})")
+        self.cfg = cfg
+        self.params = params
+        self.page_size = page_size
+        self.eos_id = eos_id
+        self.npages_per_seq = pages_needed(max_seq_len, page_size)
+        if num_pages is None:
+            num_pages = 1 + max_concurrency * self.npages_per_seq
+        self.scheduler = Scheduler(num_pages, page_size, max_concurrency,
+                                   self.npages_per_seq,
+                                   prefill_chunk=prefill_chunk)
+        self.caches = init_paged_decode_caches(cfg, max_concurrency,
+                                               num_pages, page_size)
+        self.block_table = np.full((max_concurrency, self.npages_per_seq),
+                                   NULL_PAGE, np.int32)
+        self.seq_lens = np.zeros((max_concurrency,), np.int32)
+        self._last_tok = np.zeros((max_concurrency,), np.int32)
+        self._next_rid = 0
+
+        self._decode_fn = jax.jit(
+            lambda p, t, c, bt, sl, act: decode_step_paged(
+                p, t, c, bt, sl, cfg, active=act),
+            donate_argnums=(2,))
+        self._prefill_fn = jax.jit(functools.partial(prefill, cfg=cfg))
+        self._write_fn = jax.jit(write_prefill_prefix, donate_argnums=(0,))
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, prompt: Sequence[int], max_new_tokens: int,
+               rid: Optional[int] = None) -> int:
+        if rid is None:
+            rid = self._next_rid
+        self._next_rid = max(self._next_rid, rid + 1)
+        self.scheduler.submit(Request(rid=rid, prompt=list(prompt),
+                                      max_new_tokens=max_new_tokens,
+                                      eos_id=self.eos_id))
+        return rid
+
+    # -- one tick -----------------------------------------------------------
+
+    def step(self) -> StepPlan:
+        sched = self.scheduler
+        plan = sched.step()
+        for rid, slot in plan.evict:
+            self.block_table[slot] = NULL_PAGE
+            self.seq_lens[slot] = 0
+        for rid, slot in plan.admit:
+            row = sched.block_row(rid)
+            self.block_table[slot] = NULL_PAGE
+            self.block_table[slot, :len(row)] = row
+            self.seq_lens[slot] = 0
+
+        for chunk in plan.prefill:
+            st = sched.active[chunk.rid]
+            tokens = list(st.req.prompt[chunk.start:chunk.end])
+            if sched.prefill_chunk is None:
+                # single-shot: the standard prefill (same numerics as the
+                # dense serve path), scattered into this request's pages
+                logits, pf = self._prefill_fn(
+                    self.params, {"tokens": jnp.asarray([tokens], jnp.int32)})
+                self.caches = self._write_fn(
+                    self.caches, pf,
+                    jnp.asarray(self.block_table[chunk.slot]),
+                    jnp.int32(chunk.slot))
+            else:
+                # chunked: the chunk rides the paged multi-token step
+                logits, self.caches = self._decode_fn(
+                    self.params, jnp.asarray([tokens], jnp.int32),
+                    self.caches,
+                    jnp.asarray(self.block_table[chunk.slot][None]),
+                    jnp.asarray(self.seq_lens[chunk.slot][None]), None)
+            self.seq_lens[chunk.slot] = chunk.end
+            if chunk.last:
+                # only the final chunk's logits are consumed (one host sync)
+                tok = int(jnp.argmax(logits[0]))
+                sched.record_prefill(chunk.rid, chunk.end, first_token=tok)
+                self._last_tok[chunk.slot] = tok
+            else:
+                sched.record_prefill(chunk.rid, chunk.end)
+
+        if plan.decode:
+            toks = jnp.asarray(self._last_tok[:, None], jnp.int32)
+            active = np.zeros((len(self.seq_lens),), bool)
+            for _, slot in plan.decode:
+                active[slot] = True
+            logits, self.caches = self._decode_fn(
+                self.params, toks, self.caches,
+                jnp.asarray(self.block_table), jnp.asarray(self.seq_lens),
+                jnp.asarray(active))
+            next_tok = np.asarray(jnp.argmax(logits, axis=-1))
+            for rid, slot in plan.decode:
+                self.seq_lens[slot] += 1
+                tok = int(next_tok[slot])
+                sched.record_decode(rid, tok)
+                self._last_tok[slot] = tok
+        return plan
+
+    def run(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
+        """Drive the step loop until every submitted request completed.
+        Returns ``{rid: emitted tokens}``."""
+        steps = 0
+        while not self.scheduler.done:
+            plan = self.step()
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError(f"engine did not drain in {max_steps} steps")
+            if plan.idle and not self.scheduler.done:
+                raise RuntimeError(
+                    "scheduler idle with work pending (page/slot starvation: "
+                    "a queued request can never be admitted)")
+        return dict(self.scheduler.completed)

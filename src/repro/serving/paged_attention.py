@@ -1,0 +1,307 @@
+"""Paged decode attention — block-table gathers inside the kernel body,
+QK^T/PV on the shared TCEC split schedule.
+
+Decode attention is the extreme memory-bound case of the paper's thesis:
+per generated token the kernel streams the whole KV cache once and does two
+rank-1-ish contractions, so the win comes from *not staging* dead cache.
+The Pallas kernel therefore never materializes the gathered cache: the
+block table rides as a scalar-prefetch operand and the kv ``BlockSpec``
+index map resolves ``block_table[b, j]`` per grid step, DMA-ing exactly the
+pages a request owns.  Softmax runs online with ``(m, l, acc)`` scratch
+carried across the page axis, and the length mask is generated from its
+structural rule (``col < seq_len`` iota comparison) — the same
+``foreach_ij`` discipline as the flash kernel.
+
+Both contractions run ``tcec_core.policy_dot``: the policy resolved from
+the ``"attn"`` site selects fp32-VPU, plain bf16, or the bf16x3/bf16x6
+split schedules, identically to prefill.  The XLA twin gathers the pages
+(``gather_pages``) and calls the *same contiguous implementations*
+(``models.attention.decode_attention`` / ``mla_absorbed_attention``), so
+paged-vs-contiguous parity is exact by construction per policy.
+
+GQA decode and MLA absorbed decode share one kernel: MLA is the
+``kvh == 1`` instance whose score is the sum of a latent (``c_kv``) and a
+rope (``k_rope``) contraction — the kernel takes an optional second
+(q2, k2) operand pair added into the score before the online softmax.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.context import resolve_policy
+from repro.core.policy import TcecPolicy
+from repro.kernels.tcec_core import policy_dot, dot_params
+from repro import tcec
+from .paged_cache import gather_pages
+
+__all__ = [
+    "paged_decode_attention", "paged_decode_attention_pallas",
+    "paged_decode_attention_xla", "paged_mla_decode_attention",
+    "paged_prefill_attention",
+]
+
+NEG_INF = -1e30
+
+# q (rep, d) x k (page, d) -> s (rep, page): contract d on both.
+_QK_DN = (((1,), (1,)), ((), ()))
+# p (rep, page) x v (page, dv) -> o (rep, dv).
+_PV_DN = (((1,), (0,)), ((), ()))
+
+
+def _corrected(pol: TcecPolicy) -> bool:
+    return pol.error_correction or pol.backend == "vpu"
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel
+# ---------------------------------------------------------------------------
+
+def _paged_kernel(bt_ref, sl_ref, q_ref, k_ref, v_ref, *rest,
+                  page, npages, scale, dot_kw, has_rope):
+    if has_rope:
+        q2_ref, k2_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
+    bi = pl.program_id(0)
+    ji = pl.program_id(2)
+
+    @pl.when(ji == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # (rep, d)
+    k = k_ref[0, :, 0].astype(jnp.float32)           # (page, d)
+    v = v_ref[0, :, 0].astype(jnp.float32)           # (page, dv)
+
+    # QK^T at policy-selected precision (split words live in VREGs).
+    s = policy_dot(q, k, _QK_DN, **dot_kw)
+    if has_rope:
+        q2 = q2_ref[0, 0].astype(jnp.float32)        # (rep, d2)
+        k2 = k2_ref[0, :, 0].astype(jnp.float32)     # (page, d2)
+        s = s + policy_dot(q2, k2, _QK_DN, **dot_kw)
+    s = s * scale
+
+    # Structural-rule length mask: col = absolute kv position of this page.
+    cols = ji * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(cols < sl_ref[bi], s, NEG_INF)
+
+    m_prev = m_ref[...]                              # (rep, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    # Rows with no valid column yet (m_new == NEG_INF) must contribute
+    # nothing: exp(s - m_new) would be 1 at every masked position.
+    p = jnp.where(m_new > 0.5 * NEG_INF, jnp.exp(s - m_new), 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + policy_dot(p, v, _PV_DN, **dot_kw)
+    m_ref[...] = m_new
+
+    @pl.when(ji == npages - 1)
+    def _done():
+        l = l_ref[...]
+        # Fully-masked rows (seq_len == 0) emit exact zeros, not 0/0.
+        o_ref[0, 0] = jnp.where(
+            l > 0.0, acc_ref[...] / jnp.where(l > 0.0, l, 1.0), 0.0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("policy", "scale", "interpret"))
+def _paged_pallas(q, k_pages, v_pages, q2, k2_pages, block_table, seq_lens,
+                  policy: TcecPolicy, scale: float, interpret: bool):
+    b, kvh, rep, d = q.shape
+    page = k_pages.shape[1]
+    dv = v_pages.shape[-1]
+    npages = block_table.shape[1]
+    has_rope = q2 is not None
+
+    # kv heads ride the grid (GQA: h = kvh * rep, no repeated-head copies);
+    # the page axis is innermost and 'arbitrary' so (m, l, acc) scratch
+    # carries across a request's pages.
+    def kv_map(b_, g, j, bt, sl):
+        del sl
+        return (bt[b_, j], 0, g, 0)
+
+    def q_map(b_, g, j, bt, sl):
+        del j, bt, sl
+        return (b_, g, 0, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, rep, d), q_map),
+        pl.BlockSpec((1, page, 1, d), kv_map),
+        pl.BlockSpec((1, page, 1, dv), kv_map),
+    ]
+    operands = [q, k_pages, v_pages]
+    if has_rope:
+        d2 = q2.shape[-1]
+        in_specs += [
+            pl.BlockSpec((1, 1, rep, d2), q_map),
+            pl.BlockSpec((1, page, 1, d2), kv_map),
+        ]
+        operands += [q2, k2_pages]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kvh, npages),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, rep, dv), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, dv), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_kernel, page=page, npages=npages,
+                          scale=scale, dot_kw=dot_params(policy),
+                          has_rope=has_rope),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, rep, dv), jnp.float32),
+        compiler_params=_compiler_params(),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), seq_lens.astype(jnp.int32), *operands)
+
+
+def _compiler_params():
+    from repro.kernels.tcec_core import compiler_params
+    return compiler_params(("parallel", "parallel", "arbitrary"))
+
+
+def paged_decode_attention_pallas(q, k_pages, v_pages, block_table, seq_lens,
+                                  *, scale: Optional[float] = None,
+                                  policy: TcecPolicy | str | None = None,
+                                  interpret: Optional[bool] = None,
+                                  q2=None, k2_pages=None) -> jnp.ndarray:
+    """Fused paged decode attention (one query token per request).
+
+    q ``(b, h, d)``; ``k_pages (P, page, kvh, d)``; ``v_pages (P, page,
+    kvh, dv)``; ``block_table (b, npages)``; ``seq_lens (b,)`` — request
+    ``i`` attends to its first ``seq_lens[i]`` logical positions; a zero
+    length emits zeros.  ``(q2, k2_pages)`` is the optional second score
+    operand pair (MLA's rope term, added before the online softmax).
+    Returns ``(b, h, dv)`` fp32 for corrected/vpu policies, ``q.dtype``
+    for the plain bf16 policy (the framework-wide dtype contract).
+    """
+    pol = resolve_policy(policy, "attn")
+    b, h, d = q.shape
+    kvh = k_pages.shape[2]
+    if h % kvh:
+        raise ValueError(f"q heads {h} not a multiple of kv heads {kvh}")
+    rep = h // kvh
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    qh = q.reshape(b, kvh, rep, d)
+    q2h = None if q2 is None else q2.reshape(b, kvh, rep, q2.shape[-1])
+    out = _paged_pallas(qh, k_pages, v_pages, q2h, k2_pages,
+                        block_table, seq_lens, pol, float(scale),
+                        bool(interpret))
+    out = out.reshape(b, h, v_pages.shape[-1])
+    return out if _corrected(pol) else out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# XLA twin + dispatch
+# ---------------------------------------------------------------------------
+
+def paged_decode_attention_xla(q, k_pages, v_pages, block_table, seq_lens,
+                               *, policy: TcecPolicy | str | None = None
+                               ) -> jnp.ndarray:
+    """XLA twin: gather the block table's pages and run the *contiguous*
+    ``decode_attention`` on the virtual cache — identical arithmetic to the
+    dense decode path by construction (parity is exact per policy)."""
+    from repro.models.attention import decode_attention
+    pol = resolve_policy(policy, "attn")
+    kv = gather_pages(k_pages, block_table)      # (b, Sv, kvh, d)
+    vv = gather_pages(v_pages, block_table)
+    o = decode_attention(q[:, None], kv, vv,
+                         seq_lens.astype(jnp.int32) - 1, policy=pol)
+    return o[:, 0]
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_table, seq_lens,
+                           *, policy: TcecPolicy | str | None = None,
+                           interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Policy-dispatching paged decode attention (GQA/MHA).
+
+    Resolves the ``"attn"`` site from the active ``policy_scope``: a policy
+    with ``kernel == "pallas"`` runs the fused Mosaic kernel (native on
+    TPU, interpret elsewhere), anything else the gather-based XLA twin.
+    """
+    pol = resolve_policy(policy, "attn")
+    if pol.kernel == "pallas" and pol.backend == "mxu":
+        return paged_decode_attention_pallas(
+            q, k_pages, v_pages, block_table, seq_lens, policy=pol,
+            interpret=interpret)
+    return paged_decode_attention_xla(q, k_pages, v_pages, block_table,
+                                      seq_lens, policy=pol)
+
+
+def paged_mla_decode_attention(q_c, q_rope, c_pages, r_pages, block_table,
+                               seq_lens, *, scale: float,
+                               policy: TcecPolicy | str | None = None,
+                               interpret: Optional[bool] = None
+                               ) -> jnp.ndarray:
+    """Paged MLA absorbed decode: ``softmax(q_c c^T + q_r r^T) c``.
+
+    ``q_c (b, h, lora)``, ``q_rope (b, h, rope)``; ``c_pages (P, page,
+    lora)``, ``r_pages (P, page, rope)`` hold the *compressed* latent cache
+    (never re-expanded — the absorbed matmul-chain restructuring).  Returns
+    ``o_c (b, h, lora)``; the caller applies ``W_uv``.  The Pallas path is
+    the GQA kernel at ``kvh == 1`` with the rope term as the second score
+    operand; the XLA twin calls the same ``mla_absorbed_attention`` core the
+    contiguous decode path runs, so parity is exact per policy.
+    """
+    pol = resolve_policy(policy, "attn")
+    if pol.kernel == "pallas" and pol.backend == "mxu":
+        return paged_decode_attention_pallas(
+            q_c, c_pages[:, :, None], c_pages[:, :, None], block_table,
+            seq_lens, scale=scale, policy=pol, interpret=interpret,
+            q2=q_rope, k2_pages=r_pages[:, :, None])
+    from repro.models.attention import mla_absorbed_attention
+    c = gather_pages(c_pages, block_table)       # (b, Sv, lora)
+    r = gather_pages(r_pages, block_table)
+    sv = c.shape[1]
+    valid = jnp.arange(sv, dtype=jnp.int32)[None, None] \
+        < seq_lens.astype(jnp.int32)[:, None, None]       # (b, 1, Sv)
+    o = mla_absorbed_attention(q_c[:, None], q_rope[:, None], c, r, valid,
+                               scale, pol)
+    return o[:, 0]
+
+
+def paged_prefill_attention(q, k_pages, v_pages, block_table, row_pos,
+                            *, policy: TcecPolicy | str | None = None
+                            ) -> jnp.ndarray:
+    """Chunked-prefill attention against a paged cache (XLA).
+
+    ``q (b, s, h, d)`` is a prompt chunk whose tokens sit at absolute
+    positions ``row_pos (b, s)``; their K/V must already be appended to the
+    pools.  Each row attends causally to every cache position ``<= row_pos``
+    (prefix + intra-chunk causal in one mask).  Returns ``(b, s, h, dv)``.
+    """
+    pol = resolve_policy(policy, "attn")
+    b, sq, h, d = q.shape
+    kv = gather_pages(k_pages, block_table)      # (b, Sv, kvh, d)
+    vv = gather_pages(v_pages, block_table)
+    kvh = kv.shape[2]
+    rep = h // kvh
+    sv = kv.shape[1]
+    scale = 1.0 / (d ** 0.5)
+    qh = q.reshape(b, sq, kvh, rep, d)
+    s = tcec.einsum("bqgrd,bsgd->bgrqs", qh, kv, site="attn",
+                    policy=pol) * scale
+    valid = jnp.arange(sv, dtype=jnp.int32)[None, None] \
+        <= row_pos.astype(jnp.int32)[..., None]           # (b, sq, Sv)
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.any(valid, -1)[:, None, None, :, None], p, 0.0)
+    o = tcec.einsum("bgrqs,bsgd->bgrqd", p, vv, site="attn", policy=pol)
+    o = o.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, vv.shape[-1])
+    return o if _corrected(pol) else o.astype(q.dtype)

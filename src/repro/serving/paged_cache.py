@@ -1,0 +1,121 @@
+"""Paged KV-cache primitives: fixed-size pages in a shared pool, addressed
+through per-request block tables.
+
+A dense decode cache leaf is ``(b, S, *tail)`` with the sequence on axis 1
+(the layout contract of ``models/attention.py``).  Its paged twin drops the
+batch/sequence axes for a shared pool ``(num_pages, page_size, *tail)``;
+a request owns an ordered list of physical page ids (its *block table*
+row), and logical position ``t`` of request ``i`` lives at
+``pool[block_table[i, t // page_size], t % page_size]``.
+
+Everything here is a pure function on arrays (jit-friendly); ownership and
+free-list bookkeeping are the scheduler's job (``repro.serving.scheduler``).
+Physical page ``NULL_PAGE`` (= 0) is reserved as a scratch page: inactive
+block-table slots point at it, so speculative writes from idle decode lanes
+land somewhere harmless instead of corrupting live pages.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+#: Reserved scratch page.  The allocator never hands it out; block-table
+#: entries of unallocated/finished slots point here.
+NULL_PAGE = 0
+
+
+def pages_needed(n_tokens: int, page_size: int) -> int:
+    """Pages required to hold ``n_tokens`` positions."""
+    return -(-n_tokens // page_size)
+
+
+def init_pool(num_pages: int, page_size: int, tail: Tuple[int, ...],
+              dtype) -> jnp.ndarray:
+    """Zero page pool ``(num_pages, page_size, *tail)``."""
+    if num_pages < 2:
+        raise ValueError(
+            f"num_pages must be >= 2 (page {NULL_PAGE} is the reserved "
+            f"scratch page), got {num_pages}")
+    return jnp.zeros((num_pages, page_size) + tuple(tail), dtype)
+
+
+def append_pages(pool: jnp.ndarray, new: jnp.ndarray,
+                 block_table: jnp.ndarray,
+                 seq_lens: jnp.ndarray) -> jnp.ndarray:
+    """Write ``new (b, s, *tail)`` at logical positions ``seq_lens[i] ..
+    seq_lens[i] + s`` of each request into the pool.
+
+    ``block_table (b, npages)`` int32 maps logical page -> physical page;
+    ``seq_lens (b,)`` int32 is each request's current length (the append
+    offset).  Returns the updated pool.  Requests whose row should not
+    grow (idle slots) must point at ``NULL_PAGE`` so their write is
+    absorbed by the scratch page.
+    """
+    b, s = new.shape[0], new.shape[1]
+    page_size = pool.shape[1]
+    pos = seq_lens[:, None].astype(jnp.int32) + jnp.arange(s, dtype=jnp.int32)
+    rows = jnp.arange(b, dtype=jnp.int32)[:, None]
+    phys = block_table[rows, pos // page_size]          # (b, s) physical page
+    off = pos % page_size
+    return pool.at[phys, off].set(new.astype(pool.dtype))
+
+
+def append_prefix_pages(pool: jnp.ndarray, prefix: jnp.ndarray,
+                        block_row: jnp.ndarray,
+                        stacked: bool = False) -> jnp.ndarray:
+    """Scatter one request's whole prefix into the pool starting at logical
+    position 0.
+
+    ``block_row (npages,)`` is the request's block-table row.  With
+    ``stacked=False`` the pool is ``(P, page, *tail)`` and the prefix
+    ``(s, *tail)``; with ``stacked=True`` both carry a leading layer-group
+    axis — pool ``(g, P, page, *tail)``, prefix ``(g, s, *tail)`` (the
+    layout ``model.init_paged_decode_caches`` produces).
+    """
+    s = prefix.shape[1] if stacked else prefix.shape[0]
+    page_size = pool.shape[2] if stacked else pool.shape[1]
+    pos = jnp.arange(s, dtype=jnp.int32)
+    phys = block_row[pos // page_size]
+    off = pos % page_size
+    if stacked:
+        return pool.at[:, phys, off].set(prefix.astype(pool.dtype))
+    return pool.at[phys, off].set(prefix.astype(pool.dtype))
+
+
+#: Dense cache leaf -> paged pool leaf (the cache layout contract of
+#: ``models/attention.py`` / ``models/blocks.py``).
+PAGED_KEYS = {"k": "k_pages", "v": "v_pages",
+              "c_kv": "c_pages", "k_rope": "r_pages"}
+
+
+def write_prefill_prefix(paged_caches, prefill_caches, block_row, slot):
+    """Scatter one request's batch-1 ``prefill`` cache tree into the paged
+    tree: sequence-shaped leaves go to that request's pages (``block_row``),
+    recurrent-state leaves to its decode slot row.  Trees are the
+    group-stacked layouts of ``model.init_paged_decode_caches`` /
+    ``model.prefill``."""
+    def rec(pg, dn):
+        out = {}
+        for key, val in dn.items():
+            if isinstance(val, dict):
+                out[key] = rec(pg[key], val)
+            elif PAGED_KEYS.get(key) in pg:
+                pk = PAGED_KEYS[key]
+                out[pk] = append_prefix_pages(pg[pk], val[:, 0], block_row,
+                                              stacked=True)
+            else:
+                out[key] = pg[key].at[:, slot].set(
+                    val[:, 0].astype(pg[key].dtype))
+        return out
+    return rec(paged_caches, prefill_caches)
+
+
+def gather_pages(pool: jnp.ndarray, block_table: jnp.ndarray) -> jnp.ndarray:
+    """Materialize the virtual contiguous cache ``(b, npages * page_size,
+    *tail)`` a block table describes (the XLA-twin path; the Pallas kernel
+    performs the same gather through its index map without materializing)."""
+    b, npages = block_table.shape
+    page_size = pool.shape[1]
+    out = pool[block_table]                      # (b, npages, page, *tail)
+    return out.reshape((b, npages * page_size) + pool.shape[2:])

@@ -1,0 +1,239 @@
+"""Continuous-batching scheduler — a pure-Python, deterministic step loop.
+
+No jax imports: the scheduler is a state machine over requests, decode
+slots and a page allocator, so its invariants (no page leaked, no page
+double-allocated, FIFO admission) are unit/property-testable without a
+model.  Each ``step()`` returns a :class:`StepPlan` describing exactly what
+the executor (``repro.serving.engine``) should run this tick:
+
+  * ``admit``    — requests newly assigned a slot (pages already reserved),
+  * ``prefill``  — one prompt chunk per admitted-but-unprefilled request
+                   (long prompts are chunked across consecutive steps),
+  * ``decode``   — the slots holding requests in the decode phase,
+  * ``evict``    — requests that finished last tick (their pages are freed
+                   *before* new admissions, so the freed pages are
+                   immediately reusable).
+
+Admission is FIFO and all-or-nothing: a request is admitted only when a
+free slot exists *and* the allocator can reserve every page the request
+can ever touch (``ceil((prompt + max_new_tokens) / page_size)``) — no
+mid-flight OOM, no preemption, deterministic order.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .paged_cache import NULL_PAGE, pages_needed
+
+__all__ = ["Request", "PageAllocator", "Scheduler", "StepPlan"]
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.  ``prompt`` is the token list; generation
+    stops after ``max_new_tokens`` (or on ``eos_id`` if given)."""
+    rid: int
+    prompt: Sequence[int]
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+
+    def __post_init__(self):
+        if len(self.prompt) < 1:
+            raise ValueError(f"request {self.rid}: empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError(f"request {self.rid}: max_new_tokens must be "
+                             f">= 1, got {self.max_new_tokens}")
+
+    @property
+    def max_len(self) -> int:
+        return len(self.prompt) + self.max_new_tokens
+
+
+class PageAllocator:
+    """Free-list allocator over physical pages ``1 .. num_pages - 1``
+    (page ``NULL_PAGE`` is the reserved scratch page, never handed out)."""
+
+    def __init__(self, num_pages: int):
+        if num_pages < 2:
+            raise ValueError(f"need >= 2 pages (one is the reserved scratch "
+                             f"page), got {num_pages}")
+        self.num_pages = num_pages
+        self._free = list(range(num_pages - 1, NULL_PAGE, -1))  # pop() -> 1 first
+        self._owned: Dict[int, List[int]] = {}
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def owned(self, rid: int) -> List[int]:
+        return list(self._owned.get(rid, ()))
+
+    def alloc(self, rid: int, n: int) -> Optional[List[int]]:
+        """Reserve ``n`` pages for ``rid`` — all or nothing."""
+        if rid in self._owned:
+            raise ValueError(f"request {rid} already holds pages")
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._owned[rid] = pages
+        return list(pages)
+
+    def free(self, rid: int) -> None:
+        """Return every page ``rid`` holds to the free list."""
+        pages = self._owned.pop(rid, None)
+        if pages is None:
+            raise KeyError(f"request {rid} holds no pages")
+        self._free.extend(pages)
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefillChunk:
+    rid: int
+    slot: int
+    start: int          # first prompt position of this chunk
+    end: int            # one past the last prompt position
+    last: bool          # True when this chunk completes the prefill
+
+
+@dataclasses.dataclass(frozen=True)
+class StepPlan:
+    admit: Tuple[Tuple[int, int], ...]        # (rid, slot)
+    prefill: Tuple[PrefillChunk, ...]
+    decode: Tuple[Tuple[int, int], ...]       # (rid, slot), decode-phase
+    evict: Tuple[Tuple[int, int], ...]        # (rid, slot) freed this step
+
+    @property
+    def idle(self) -> bool:
+        return not (self.admit or self.prefill or self.decode)
+
+
+@dataclasses.dataclass
+class _Active:
+    req: Request
+    slot: int
+    block_row: List[int]        # physical pages, logical order
+    prefilled: int = 0          # prompt tokens already in the cache
+    generated: int = 0          # tokens emitted so far
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    finished: bool = False
+
+
+class Scheduler:
+    """Continuous-batching control loop over ``max_concurrency`` slots."""
+
+    def __init__(self, num_pages: int, page_size: int, max_concurrency: int,
+                 max_pages_per_seq: int,
+                 prefill_chunk: Optional[int] = None):
+        if page_size < 1 or max_concurrency < 1 or max_pages_per_seq < 1:
+            raise ValueError("page_size, max_concurrency and "
+                             "max_pages_per_seq must all be >= 1")
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
+        self.page_size = page_size
+        self.max_concurrency = max_concurrency
+        self.max_pages_per_seq = max_pages_per_seq
+        self.prefill_chunk = prefill_chunk
+        self.allocator = PageAllocator(num_pages)
+        self.queue: List[Request] = []
+        self.active: Dict[int, _Active] = {}          # rid -> state
+        self._slots: List[Optional[int]] = [None] * max_concurrency
+        self._finished_last_step: List[Tuple[int, int]] = []
+        self.completed: Dict[int, List[int]] = {}     # rid -> emitted tokens
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        if (req.rid in self.active or req.rid in self.completed
+                or any(q.rid == req.rid for q in self.queue)):
+            raise ValueError(f"request id {req.rid} already submitted")
+        if pages_needed(req.max_len, self.page_size) > self.max_pages_per_seq:
+            raise ValueError(
+                f"request {req.rid}: needs "
+                f"{pages_needed(req.max_len, self.page_size)} pages, block "
+                f"table holds {self.max_pages_per_seq}")
+        self.queue.append(req)
+
+    # -- the step loop ------------------------------------------------------
+
+    def step(self) -> StepPlan:
+        """Advance the control loop one tick and say what to execute."""
+        evict = tuple(self._finished_last_step)
+        self._finished_last_step = []
+        for rid, slot in evict:
+            self.allocator.free(rid)
+            self._slots[slot] = None
+            del self.active[rid]
+
+        admit: List[Tuple[int, int]] = []
+        while self.queue:
+            req = self.queue[0]
+            slot = next((i for i, r in enumerate(self._slots) if r is None),
+                        None)
+            if slot is None:
+                break
+            pages = self.allocator.alloc(
+                req.rid, pages_needed(req.max_len, self.page_size))
+            if pages is None:       # head-of-line blocks: deterministic FIFO
+                break
+            self.queue.pop(0)
+            self._slots[slot] = req.rid
+            self.active[req.rid] = _Active(req=req, slot=slot,
+                                           block_row=pages)
+            admit.append((req.rid, slot))
+
+        prefill: List[PrefillChunk] = []
+        decode: List[Tuple[int, int]] = []
+        for rid in list(self.active):
+            st = self.active[rid]
+            n = len(st.req.prompt)
+            if st.prefilled < n:
+                chunk = self.prefill_chunk or n
+                end = min(st.prefilled + chunk, n)
+                prefill.append(PrefillChunk(
+                    rid=rid, slot=st.slot, start=st.prefilled, end=end,
+                    last=end == n))
+            elif not st.finished:
+                decode.append((rid, st.slot))
+        return StepPlan(admit=tuple(admit), prefill=tuple(prefill),
+                        decode=tuple(decode), evict=evict)
+
+    # -- executor feedback --------------------------------------------------
+
+    def record_prefill(self, rid: int, end: int,
+                       first_token: Optional[int] = None) -> None:
+        """The executor prefilled ``prompt[.. end]``; the final chunk also
+        emits the first generated token."""
+        st = self.active[rid]
+        st.prefilled = end
+        if first_token is not None:
+            if end != len(st.req.prompt):
+                raise ValueError(f"request {rid}: first token emitted before "
+                                 f"the prefill completed")
+            self._emit(st, first_token)
+
+    def record_decode(self, rid: int, token: int) -> None:
+        """The executor decoded one token for ``rid``."""
+        self._emit(self.active[rid], token)
+
+    def _emit(self, st: _Active, token: int) -> None:
+        st.tokens.append(token)
+        st.generated += 1
+        eos = st.req.eos_id is not None and token == st.req.eos_id
+        if st.generated >= st.req.max_new_tokens or eos:
+            st.finished = True
+            self.completed[st.req.rid] = list(st.tokens)
+            self._finished_last_step.append((st.req.rid, st.slot))
+
+    # -- views for the executor --------------------------------------------
+
+    def block_row(self, rid: int) -> List[int]:
+        return list(self.active[rid].block_row)
+
+    @property
+    def n_active(self) -> int:
+        return len(self.active)
+
+    @property
+    def done(self) -> bool:
+        return not self.queue and not self.active

@@ -103,7 +103,7 @@ def test_prefill_decode_consistency(arch):
 
     from repro.launch.serve import write_prefill_caches
     caches = init_decode_caches(cfg, B, S + off)
-    caches = write_prefill_caches(caches, pf_caches)
+    caches = write_prefill_caches(caches, pf_caches, cfg)
     for i in range(half, min(half + 3, S)):
         logits_d, caches = decode_step(
             params, tokens[:, i:i + 1], caches, jnp.int32(off + i), cfg)

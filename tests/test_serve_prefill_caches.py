@@ -1,0 +1,126 @@
+"""Regression tests for ``launch.serve.write_prefill_caches``: the seq axis
+of every cache leaf is now *explicit* (derived from ``decode_cache_axes``),
+replacing the old ndim/shape-prefix heuristic that guessed the write axis —
+and silently passed wrong-shaped leaves through whenever its prefix match
+failed (e.g. an MLA latent cache whose ``kv_lora_rank`` collides with the
+prompt length makes the heuristic's shape tests ambiguous)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, BlockSpec, MlaConfig
+from repro.launch.serve import write_prefill_caches
+from repro.models import (init_params, prefill, decode_step,
+                          init_decode_caches)
+from repro.models.model import backbone, _logits, decode_cache_axes
+
+
+def _mla_collision_cfg(prompt_len):
+    """MLA config whose latent dim EQUALS the prompt length — the shapes
+    the old heuristic could confuse for one another."""
+    return ArchConfig(
+        name="mla-collide", family="dense", n_layers=2, d_model=32,
+        n_heads=4, n_kv_heads=4, d_ff=64, vocab=128,
+        pattern=(BlockSpec("mla", "dense"),),
+        mla=MlaConfig(kv_lora_rank=prompt_len, q_lora_rank=0,
+                      qk_nope_head_dim=8, qk_rope_head_dim=4,
+                      v_head_dim=8),
+        remat="none")
+
+
+def test_mla_latent_dim_collides_with_prompt_len():
+    """Prefill caches land on the *seq* axis (not the latent axis) and
+    teacher-forced decode reproduces the direct-forward logits, with
+    kv_lora_rank == prompt_len."""
+    P = 8                                   # prompt length == kv_lora_rank
+    cfg = _mla_collision_cfg(P)
+    rng = jax.random.PRNGKey(0)
+    params = init_params(rng, cfg)
+    tokens = jax.random.randint(rng, (2, 2 * P), 0, cfg.vocab)
+
+    h, _, _ = backbone(params, {"tokens": tokens}, cfg, use_remat=False)
+    direct = _logits(params, h, cfg)
+
+    logits_p, pf = prefill(params, {"tokens": tokens[:, :P]}, cfg)
+    caches = init_decode_caches(cfg, 2, 2 * P)
+    caches = write_prefill_caches(caches, pf, cfg)
+
+    # content check: the c_kv leaf is (groups, b, S, lora) — the prompt
+    # prefix occupies seq positions [0, P), NOT a slice of the latent axis
+    c_kv = caches["pos0"]["mixer"]["c_kv"]
+    src = pf["pos0"]["mixer"]["c_kv"]
+    np.testing.assert_array_equal(np.asarray(c_kv[:, :, :P]),
+                                  np.asarray(src))
+    assert float(jnp.abs(c_kv[:, :, P:]).max()) == 0.0
+
+    for i in range(P, P + 3):
+        logits_d, caches = decode_step(params, tokens[:, i:i + 1], caches,
+                                       jnp.int32(i), cfg)
+        np.testing.assert_allclose(np.asarray(logits_d),
+                                   np.asarray(direct[:, i]),
+                                   rtol=6e-2, atol=6e-2, err_msg=str(i))
+
+
+def test_seq_axis_taken_from_axes_tree_not_guessed():
+    """Unstacked MLA-shaped leaves with latent == prompt length: the write
+    must target the axis labeled 'seq' whatever the surrounding shape —
+    the exact ambiguity (b, p, lora) with p == lora that defeats prefix
+    matching."""
+    b, p, S = 2, 6, 16
+    lora = p                                     # the collision
+    dst = {"c_kv": jnp.zeros((b, S, lora))}
+    src = {"c_kv": jnp.asarray(
+        np.random.default_rng(0).standard_normal((b, p, lora)),
+        jnp.float32)}
+    out = write_prefill_caches(dst, src,
+                               axes={"c_kv": ("batch", "seq", None)})
+    np.testing.assert_array_equal(np.asarray(out["c_kv"][:, :p]),
+                                  np.asarray(src["c_kv"]))
+    assert float(jnp.abs(out["c_kv"][:, p:]).max()) == 0.0
+
+
+def test_overlong_prefill_raises():
+    dst = {"k": jnp.zeros((1, 4, 2, 8))}
+    src = {"k": jnp.ones((1, 9, 2, 8))}
+    with pytest.raises(ValueError, match="exceeds"):
+        write_prefill_caches(dst, src,
+                             axes={"k": ("batch", "seq", "kv", None)})
+
+
+def test_stateful_leaf_shape_mismatch_raises_instead_of_passing_through():
+    """The old heuristic returned mismatched non-seq leaves unchanged
+    (silently wrong-shaped decode caches); now it is an error."""
+    dst = {"h": jnp.zeros((1, 8, 16))}
+    src = {"h": jnp.zeros((1, 6, 16))}
+    with pytest.raises(ValueError, match="match shapes exactly"):
+        write_prefill_caches(dst, src, axes={"h": ("batch", "mlp", None)})
+
+
+def test_needs_cfg_or_axes():
+    with pytest.raises(TypeError):
+        write_prefill_caches({}, {})
+
+
+def test_axes_tree_matches_cache_tree_for_all_archs():
+    """decode_cache_axes mirrors decode_cache_specs leaf-for-leaf, so every
+    arch's cache tree has an explicit seq axis where one exists."""
+    from repro.configs import get_config, ARCH_IDS
+    from repro.models import decode_cache_specs
+    for arch in ARCH_IDS:
+        cfg = get_config(arch, reduced=True)
+        specs = decode_cache_specs(cfg, 1, 8)
+        axes = decode_cache_axes(cfg)
+
+        def keys(t):
+            out = []
+
+            def rec(node, pre):
+                if isinstance(node, dict):
+                    for k, v in node.items():
+                        rec(v, pre + (k,))
+                else:
+                    out.append(pre)
+            rec(t, ())
+            return sorted(out)
+        assert keys(specs) == keys(axes), arch

@@ -1,0 +1,340 @@
+"""Paged-vs-contiguous decode attention parity: the paged XLA twin must
+match the dense decode path *exactly* per policy (it runs the same code on
+the gathered pages), the Pallas kernel must stay within each policy's fp64
+oracle bound, and one ``policy_scope("bf16x6_pallas")`` must flip paged
+decode onto the fused kernel (site-reach acceptance)."""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro import tcec
+from repro.configs.base import ArchConfig, BlockSpec, MlaConfig
+from repro.core.context import policy_scope
+from repro.core.policy import get_policy
+from repro.models import (init_params, prefill, decode_step,
+                          init_decode_caches, decode_step_paged,
+                          init_paged_decode_caches)
+from repro.models.attention import decode_attention, mla_absorbed_attention
+from repro.serving import (append_pages, gather_pages, pages_needed,
+                           paged_decode_attention_pallas,
+                           paged_decode_attention_xla,
+                           paged_mla_decode_attention,
+                           paged_prefill_attention, NULL_PAGE)
+from repro.serving.paged_cache import write_prefill_prefix
+
+from oracles import attention_fp64, max_rel_err
+
+POLICIES = ["fp32_vpu", "bf16x1", "bf16x3", "bf16x6"]
+# max-rel-err ceilings vs the fp64 oracle (well-conditioned N(0,1) inputs),
+# same ladder as tests/test_attention_policies.py.
+TOL = {"fp32_vpu": 4e-6, "bf16x1": 5e-2, "bf16x3": 5e-4, "bf16x6": 4e-6}
+
+B, PAGE, NPAGES, POOL = 2, 8, 3, 11
+SV = PAGE * NPAGES
+# nothing divides: request 0 ends mid-page, request 1 is shorter than two
+# pages, and SV > both.
+SEQ_LENS = np.asarray([21, 9], np.int32)
+
+
+def _paged_case(rng, kvh, d, dv=None, tail3=False):
+    """Random pool + a block table whose gather is a contiguous cache."""
+    dv = dv or d
+    tail = (d,) if tail3 else (kvh, d)
+    tailv = (dv,) if tail3 else (kvh, dv)
+    k_pages = rng.standard_normal((POOL, PAGE) + tail).astype(np.float32)
+    v_pages = rng.standard_normal((POOL, PAGE) + tailv).astype(np.float32)
+    bt = np.asarray([[3, 7, 1], [5, 2, 4]], np.int32)
+    return jnp.asarray(k_pages), jnp.asarray(v_pages), jnp.asarray(bt)
+
+
+# ---------------------------------------------------------------------------
+# cache ops
+# ---------------------------------------------------------------------------
+
+def test_append_gather_roundtrip_across_page_boundary():
+    rng = np.random.default_rng(0)
+    pool = jnp.zeros((POOL, PAGE, 2, 4), jnp.float32)
+    bt = jnp.asarray([[1, 2, 3], [4, 5, 6]], np.int32)
+    # request 0 appends 5 tokens starting at 6 -> spans pages 1 and 2
+    new = jnp.asarray(rng.standard_normal((2, 5, 2, 4)).astype(np.float32))
+    pool = append_pages(pool, new, bt, jnp.asarray([6, 0], np.int32))
+    got = gather_pages(pool, bt)
+    np.testing.assert_array_equal(np.asarray(got[0, 6:11]), np.asarray(new[0]))
+    np.testing.assert_array_equal(np.asarray(got[1, 0:5]), np.asarray(new[1]))
+    # untouched positions stay zero
+    assert float(jnp.abs(got[0, :6]).max()) == 0.0
+
+
+def test_idle_slot_append_lands_on_null_page():
+    pool = jnp.zeros((POOL, PAGE, 1, 2), jnp.float32)
+    bt = jnp.asarray([[NULL_PAGE, NULL_PAGE, NULL_PAGE], [1, 2, 3]], np.int32)
+    new = jnp.ones((2, 1, 1, 2), jnp.float32)
+    pool = append_pages(pool, new, bt, jnp.asarray([0, 0], np.int32))
+    # the idle slot's write was absorbed by page 0; page 1 holds slot 1's
+    np.testing.assert_array_equal(np.asarray(pool[1, 0]),
+                                  np.ones((1, 2), np.float32))
+    assert float(jnp.abs(pool[2:]).max()) == 0.0
+    assert pages_needed(17, 8) == 3
+
+
+# ---------------------------------------------------------------------------
+# GQA decode parity: twin exact vs contiguous, kernel vs fp64 oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("h,kvh,d", [(4, 4, 16), (4, 2, 16)])
+def test_paged_twin_matches_contiguous_decode_exactly(policy, h, kvh, d):
+    """The XLA twin gathers pages and runs the SAME decode_attention the
+    dense path runs — parity is exact (bitwise for fp32_vpu and the split
+    policies alike), GQA and MHA, non-dividing lengths."""
+    rng = np.random.default_rng(h * 10 + kvh)
+    q = jnp.asarray(rng.standard_normal((B, h, d)).astype(np.float32))
+    k_pages, v_pages, bt = _paged_case(rng, kvh, d)
+    sl = jnp.asarray(SEQ_LENS)
+    out = paged_decode_attention_xla(q, k_pages, v_pages, bt, sl,
+                                     policy=policy)
+    k_dense = gather_pages(k_pages, bt)       # contiguous twin of the pages
+    v_dense = gather_pages(v_pages, bt)
+    ref = decode_attention(q[:, None], k_dense, v_dense, sl - 1,
+                           policy=policy)[:, 0]
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("h,kvh,d", [(4, 4, 16), (8, 2, 16)])
+def test_paged_kernel_and_twin_vs_fp64_oracle(policy, h, kvh, d):
+    """Kernel (interpret mode) AND XLA twin stay inside each policy's
+    accuracy band vs the fp64 oracle, per request length."""
+    rng = np.random.default_rng(h + kvh + 7)
+    q = jnp.asarray(rng.standard_normal((B, h, d)).astype(np.float32))
+    k_pages, v_pages, bt = _paged_case(rng, kvh, d)
+    sl = jnp.asarray(SEQ_LENS)
+    out_k = np.asarray(paged_decode_attention_pallas(
+        q, k_pages, v_pages, bt, sl, policy=policy, interpret=True))
+    out_t = np.asarray(paged_decode_attention_xla(
+        q, k_pages, v_pages, bt, sl, policy=policy))
+    kd = np.asarray(gather_pages(k_pages, bt)).transpose(0, 2, 1, 3)
+    vd = np.asarray(gather_pages(v_pages, bt)).transpose(0, 2, 1, 3)
+    for i in range(B):
+        ref = attention_fp64(np.asarray(q)[i:i + 1, :, None], kd[i:i + 1],
+                             vd[i:i + 1], causal=False,
+                             kv_len=int(SEQ_LENS[i]))[:, :, 0]
+        assert max_rel_err(out_k[i:i + 1], ref) < TOL[policy], (policy, i)
+        assert max_rel_err(out_t[i:i + 1], ref) < TOL[policy], (policy, i)
+
+
+@pytest.mark.parametrize("policy", ["bf16x1", "bf16x6"])
+def test_paged_kernel_matches_twin(policy):
+    """Kernel and twin share one split schedule: bf16x6 agrees to fp32
+    roundoff (online vs plain softmax accumulation order only)."""
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.standard_normal((B, 4, 16)).astype(np.float32))
+    k_pages, v_pages, bt = _paged_case(rng, 2, 16)
+    sl = jnp.asarray(SEQ_LENS)
+    out_k = np.asarray(paged_decode_attention_pallas(
+        q, k_pages, v_pages, bt, sl, policy=policy, interpret=True),
+        np.float32)
+    out_t = np.asarray(paged_decode_attention_xla(
+        q, k_pages, v_pages, bt, sl, policy=policy), np.float32)
+    tol = 2e-2 if policy == "bf16x1" else 1e-5
+    np.testing.assert_allclose(out_k, out_t, rtol=tol, atol=tol)
+
+
+def test_zero_length_request_emits_zeros():
+    rng = np.random.default_rng(5)
+    q = jnp.asarray(rng.standard_normal((B, 4, 16)).astype(np.float32))
+    k_pages, v_pages, bt = _paged_case(rng, 2, 16)
+    sl = jnp.asarray([0, 9], np.int32)
+    for out in (
+            paged_decode_attention_xla(q, k_pages, v_pages, bt, sl),
+            paged_decode_attention_pallas(q, k_pages, v_pages, bt, sl,
+                                          interpret=True)):
+        assert float(jnp.abs(out[0]).max()) == 0.0
+        assert float(jnp.abs(out[1]).max()) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# MLA absorbed decode parity
+# ---------------------------------------------------------------------------
+
+def _mla_case(rng, h=4, lora=16, rope=8):
+    q_c = rng.standard_normal((B, h, lora)).astype(np.float32)
+    q_r = rng.standard_normal((B, h, rope)).astype(np.float32)
+    c_pages = rng.standard_normal((POOL, PAGE, lora)).astype(np.float32)
+    r_pages = rng.standard_normal((POOL, PAGE, rope)).astype(np.float32)
+    bt = np.asarray([[3, 7, 1], [5, 2, 4]], np.int32)
+    scale = 1.0 / np.sqrt(lora + rope)
+    return (*map(jnp.asarray, (q_c, q_r, c_pages, r_pages, bt)), scale)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_paged_mla_twin_matches_contiguous_exactly(policy):
+    """Paged MLA decode calls the same ``mla_absorbed_attention`` core as
+    the contiguous absorbed path — exact per policy."""
+    rng = np.random.default_rng(11)
+    q_c, q_r, c_pages, r_pages, bt, scale = _mla_case(rng)
+    sl = jnp.asarray(SEQ_LENS)
+    out = paged_mla_decode_attention(q_c, q_r, c_pages, r_pages, bt, sl,
+                                     scale=scale, policy=policy)
+    c = gather_pages(c_pages, bt)
+    r = gather_pages(r_pages, bt)
+    valid = jnp.arange(SV, dtype=jnp.int32)[None, None] < sl[:, None, None]
+    ref = mla_absorbed_attention(q_c[:, None], q_r[:, None], c, r, valid,
+                                 scale, policy)[:, 0]
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_paged_mla_kernel_vs_fp64_oracle(policy):
+    """The MLA instance of the kernel (kvh == 1, rope second operand) stays
+    inside the policy band vs an independent fp64 reference."""
+    if get_policy(policy).backend == "vpu":
+        kpol = get_policy(policy)          # vpu never dispatches to pallas
+    else:
+        kpol = dataclasses.replace(get_policy(policy), kernel="pallas")
+    rng = np.random.default_rng(13)
+    q_c, q_r, c_pages, r_pages, bt, scale = _mla_case(rng)
+    sl = jnp.asarray(SEQ_LENS)
+    out = np.asarray(paged_mla_decode_attention(
+        q_c, q_r, c_pages, r_pages, bt, sl, scale=scale, policy=kpol,
+        interpret=True), np.float32)
+    c = np.asarray(gather_pages(c_pages, bt), np.float64)
+    r = np.asarray(gather_pages(r_pages, bt), np.float64)
+    qc64 = np.asarray(q_c, np.float64)
+    qr64 = np.asarray(q_r, np.float64)
+    for i in range(B):
+        n = int(SEQ_LENS[i])
+        s = (qc64[i] @ c[i, :n].T + qr64[i] @ r[i, :n].T) * scale
+        p = np.exp(s - s.max(-1, keepdims=True))
+        p /= p.sum(-1, keepdims=True)
+        ref = p @ c[i, :n]
+        assert max_rel_err(out[i], ref) < TOL[policy], (policy, i)
+
+
+# ---------------------------------------------------------------------------
+# chunked-prefill attention
+# ---------------------------------------------------------------------------
+
+def test_paged_prefill_attention_matches_causal_oracle():
+    """A chunk's rows attend to the cache prefix + themselves causally —
+    check against the fp64 oracle on the equivalent full causal problem."""
+    rng = np.random.default_rng(17)
+    h, kvh, d, chunk = 4, 2, 16, 6
+    prefix = np.asarray([10, 3], np.int32)
+    k_pages, v_pages, bt = _paged_case(rng, kvh, d)
+    # overwrite pages so the virtual cache equals a known contiguous k/v
+    kd = np.asarray(gather_pages(k_pages, bt))
+    vd = np.asarray(gather_pages(v_pages, bt))
+    q = jnp.asarray(rng.standard_normal((B, chunk, h, d)).astype(np.float32))
+    row_pos = jnp.asarray(prefix)[:, None] + jnp.arange(chunk)[None]
+    out = np.asarray(paged_prefill_attention(
+        q, k_pages, v_pages, bt, row_pos, policy="fp32_vpu"))
+    for i in range(B):
+        n = int(prefix[i]) + chunk
+        # fp64 reference: row t attends cols <= prefix + t
+        q64 = np.asarray(q, np.float64)[i]                # (chunk, h, d)
+        k64 = np.repeat(kd[i, :n].astype(np.float64), h // kvh, 1)
+        v64 = np.repeat(vd[i, :n].astype(np.float64), h // kvh, 1)
+        s = np.einsum("qhd,shd->hqs", q64, k64) / np.sqrt(d)
+        mask = np.arange(n)[None] <= (int(prefix[i]) + np.arange(chunk))[:, None]
+        s = np.where(mask[None], s, -np.inf)
+        p = np.exp(s - s.max(-1, keepdims=True))
+        p /= p.sum(-1, keepdims=True)
+        o = np.einsum("hqs,shd->qhd", p, v64)
+        assert max_rel_err(out[i], o) < TOL["fp32_vpu"], i
+
+
+# ---------------------------------------------------------------------------
+# model-level: paged decode_step vs dense decode_step
+# ---------------------------------------------------------------------------
+
+def _tiny_cfg(mixer):
+    mla = MlaConfig(kv_lora_rank=16, q_lora_rank=0, qk_nope_head_dim=8,
+                    qk_rope_head_dim=4, v_head_dim=8) if mixer == "mla" \
+        else None
+    return ArchConfig(
+        name=f"tiny-{mixer}", family="dense", n_layers=2, d_model=32,
+        n_heads=4, n_kv_heads=2 if mixer == "attn" else 4, d_ff=64,
+        vocab=128, pattern=(BlockSpec(mixer, "dense"),), mla=mla,
+        remat="none")
+
+
+@pytest.mark.parametrize("mixer", ["attn", "mla"])
+@pytest.mark.parametrize("policy", ["fp32_vpu", "bf16x6"])
+def test_model_paged_decode_matches_dense_decode(mixer, policy):
+    """decode_step_paged reproduces decode_step logits through a whole
+    model: exactly under fp32_vpu, to fp32 roundoff under bf16x6."""
+    cfg = _tiny_cfg(mixer)
+    rng = jax.random.PRNGKey(0)
+    params = init_params(rng, cfg)
+    prompt = jax.random.randint(rng, (1, 11), 0, cfg.vocab)
+    page, slots = 8, 2
+    with policy_scope(policy):
+        logits_p, pf = prefill(params, {"tokens": prompt}, cfg)
+        # dense decode
+        from repro.launch.serve import write_prefill_caches
+        dense = write_prefill_caches(init_decode_caches(cfg, 1, 24), pf, cfg)
+        # paged decode: same prefill scattered into pages
+        pools = init_paged_decode_caches(cfg, slots, 9, page)
+        row = jnp.asarray([2, 5, 7], np.int32)
+        pools = write_prefill_prefix(pools, pf, row, jnp.int32(0))
+        bt = jnp.full((slots, 3), NULL_PAGE, jnp.int32).at[0].set(row)
+        tok_d = jnp.argmax(logits_p, -1)[:, None].astype(jnp.int32)
+        tok_p = jnp.zeros((slots, 1), jnp.int32).at[0].set(tok_d[0])
+        seq = jnp.zeros((slots,), jnp.int32).at[0].set(11)
+        for i in range(3):
+            ld, dense = decode_step(params, tok_d, dense, jnp.int32(11 + i),
+                                    cfg)
+            lp, pools = decode_step_paged(params, tok_p, pools, bt, seq, cfg)
+            if policy == "fp32_vpu":
+                np.testing.assert_array_equal(np.asarray(ld[0]),
+                                              np.asarray(lp[0]))
+            else:
+                np.testing.assert_allclose(np.asarray(ld[0]),
+                                           np.asarray(lp[0]),
+                                           rtol=1e-4, atol=1e-4)
+            tok_d = jnp.argmax(ld, -1)[:, None].astype(jnp.int32)
+            tok_p = tok_p.at[0].set(tok_d[0])
+            seq = seq.at[0].add(1)
+
+
+# ---------------------------------------------------------------------------
+# site-reach acceptance: one scope flips paged decode onto the kernel
+# ---------------------------------------------------------------------------
+
+def test_policy_scope_pallas_reaches_paged_decode(monkeypatch):
+    """Acceptance: ``policy_scope("bf16x6_pallas")`` (a) resolves at the
+    attn site of paged decode — proven by trace_plans records — and
+    (b) dispatches the fused paged kernel — proven by a spy on the kernel
+    entry — and (c) changes the numerics vs the plain policy."""
+    cfg = _tiny_cfg("attn")
+    rng = jax.random.PRNGKey(1)
+    params = init_params(rng, cfg)
+    pools = init_paged_decode_caches(cfg, 2, 9, 8)
+    bt = jnp.asarray([[1, 2, 3], [4, 5, 6]], np.int32)
+    seq = jnp.asarray([5, 3], np.int32)
+    tok = jnp.asarray([[7], [9]], np.int32)
+
+    from repro.serving import paged_attention as pa
+    calls = []
+    real = pa.paged_decode_attention_pallas
+
+    def spy(*a, **kw):
+        calls.append(kw.get("policy"))
+        return real(*a, **kw)
+
+    monkeypatch.setattr(pa, "paged_decode_attention_pallas", spy)
+    pol = get_policy("bf16x6_pallas")
+    with policy_scope("bf16x6_pallas"), tcec.trace_plans() as log:
+        l6, _ = decode_step_paged(params, tok, pools, bt, seq, cfg)
+    attn_recs = [r for r in log if r.site == "attn"]
+    assert attn_recs and all(r.policy == pol for r in attn_recs)
+    # the layer stack is scanned over groups: one trace per pattern position
+    assert len(calls) == len(cfg.pattern) and all(p == pol for p in calls)
+
+    with policy_scope("bf16x1"):
+        l1, _ = decode_step_paged(params, tok, pools, bt, seq, cfg)
+    assert np.any(np.asarray(l6) != np.asarray(l1))

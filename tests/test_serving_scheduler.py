@@ -1,0 +1,348 @@
+"""Continuous-batching scheduler invariants (hypothesis property tests over
+random admit/evict streams — no page leaked or double-allocated) and the
+golden contract: every request's emitted token stream equals the
+single-request dense ``generate()`` output, greedy, bit-for-bit."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.serving import PageAllocator, Request, Scheduler
+from repro.serving.paged_cache import NULL_PAGE, pages_needed
+
+try:        # property tests need hypothesis; the rest of the file does not
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                        # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+    def given(*a, **k):
+        return lambda f: pytest.mark.skip("hypothesis not installed")(f)
+
+    def settings(*a, **k):
+        return lambda f: f
+
+    class _StStub:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+    st = _StStub()
+
+
+# ---------------------------------------------------------------------------
+# allocator
+# ---------------------------------------------------------------------------
+
+def test_allocator_basics():
+    al = PageAllocator(6)                     # pages 1..5 usable
+    assert al.n_free == 5
+    a = al.alloc(0, 3)
+    assert len(a) == 3 and NULL_PAGE not in a
+    assert al.alloc(1, 3) is None             # only 2 left: all-or-nothing
+    b = al.alloc(1, 2)
+    assert set(a).isdisjoint(b)
+    al.free(0)
+    assert al.n_free == 3
+    with pytest.raises(KeyError):
+        al.free(0)
+    with pytest.raises(ValueError):
+        al.alloc(1, 1)                        # rid 1 still holds pages
+
+
+def test_request_validation():
+    with pytest.raises(ValueError):
+        Request(rid=0, prompt=[], max_new_tokens=3)
+    with pytest.raises(ValueError):
+        Request(rid=0, prompt=[1], max_new_tokens=0)
+    s = Scheduler(num_pages=4, page_size=4, max_concurrency=1,
+                  max_pages_per_seq=2)
+    with pytest.raises(ValueError):           # needs 3 pages, table holds 2
+        s.submit(Request(rid=0, prompt=[1] * 8, max_new_tokens=2))
+
+
+def test_duplicate_rid_rejected_in_every_phase():
+    s = Scheduler(num_pages=8, page_size=4, max_concurrency=1,
+                  max_pages_per_seq=4)
+    s.submit(Request(rid=0, prompt=[1, 2], max_new_tokens=1))
+    with pytest.raises(ValueError, match="already submitted"):   # queued
+        s.submit(Request(rid=0, prompt=[3], max_new_tokens=1))
+    plan = s.step()
+    assert plan.prefill
+    with pytest.raises(ValueError, match="already submitted"):   # active
+        s.submit(Request(rid=0, prompt=[3], max_new_tokens=1))
+    s.record_prefill(0, 2, first_token=5)
+    s.step()
+    assert s.done
+    with pytest.raises(ValueError, match="already submitted"):   # completed
+        s.submit(Request(rid=0, prompt=[3], max_new_tokens=1))
+
+
+# ---------------------------------------------------------------------------
+# property: page accounting across random admit/evict streams
+# ---------------------------------------------------------------------------
+
+def _check_invariants(sched: Scheduler, num_pages: int):
+    al = sched.allocator
+    owned = [al.owned(rid) for rid in sched.active]
+    flat = [p for pages in owned for p in pages]
+    # no double allocation, the null page is never handed out
+    assert len(flat) == len(set(flat))
+    assert NULL_PAGE not in flat
+    # free list + owned pages partition 1..num_pages-1 (no leak, no alias)
+    assert sorted(flat + al._free) == list(range(1, num_pages))
+    assert len(sched.active) <= sched.max_concurrency
+
+
+def _drive_random_stream(draw_int, draw_bool, num_pages, page_size, slots,
+                         chunk, max_pages_per_seq):
+    """Shared driver: random admit/evict stream against a fake executor
+    (synthetic tokens), checking the page-accounting invariants after every
+    tick.  ``draw_int(lo, hi)`` / ``draw_bool()`` supply the randomness —
+    hypothesis's ``data.draw`` in the property test, ``numpy.random`` in
+    the seed-sweep smoke test."""
+    sched = Scheduler(num_pages=num_pages, page_size=page_size,
+                      max_concurrency=slots,
+                      max_pages_per_seq=max_pages_per_seq,
+                      prefill_chunk=chunk)
+    n_requests = draw_int(1, 8)
+    submitted = 0
+    rejected = 0
+    for step in range(200):
+        # random late arrivals interleaved with the step loop
+        while submitted + rejected < n_requests and draw_bool():
+            rid = submitted + rejected
+            req = Request(rid=rid, prompt=[1] * draw_int(1, 6),
+                          max_new_tokens=draw_int(1, 4))
+            need = pages_needed(req.max_len, page_size)
+            if need > sched.max_pages_per_seq or need >= num_pages:
+                rejected += 1     # can never fit: would starve the queue
+            else:
+                sched.submit(req)
+                submitted += 1
+        plan = sched.step()
+        for c in plan.prefill:
+            sched.record_prefill(c.rid, c.end,
+                                 first_token=7 if c.last else None)
+        for rid, slot in plan.decode:
+            sched.record_decode(rid, 7)
+        _check_invariants(sched, num_pages)
+        if sched.done and submitted + rejected == n_requests:
+            break
+    assert sched.done, "stream did not drain"
+    # every admitted request completed; all pages returned
+    assert len(sched.completed) == submitted
+    for toks in sched.completed.values():
+        assert len(toks) >= 1
+    assert sched.allocator.n_free == num_pages - 1
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    data=st.data(),
+    num_pages=st.integers(3, 12),
+    page_size=st.integers(1, 5),
+    slots=st.integers(1, 3),
+    chunk=st.one_of(st.none(), st.integers(1, 4)),
+)
+def test_scheduler_never_leaks_or_double_allocates(data, num_pages,
+                                                   page_size, slots, chunk):
+    """Property form: hypothesis drives the admit/evict stream."""
+    _drive_random_stream(
+        lambda lo, hi: data.draw(st.integers(lo, hi)),
+        lambda: data.draw(st.booleans()),
+        num_pages, page_size, slots, chunk,
+        max_pages_per_seq=data.draw(st.integers(1, 4)))
+
+
+def test_scheduler_invariants_seed_sweep():
+    """The same driver over a deterministic seed sweep — keeps the
+    invariant coverage alive even where hypothesis is unavailable."""
+    for seed in range(25):
+        rng = np.random.default_rng(seed)
+        _drive_random_stream(
+            lambda lo, hi: int(rng.integers(lo, hi + 1)),
+            lambda: bool(rng.integers(0, 2)),
+            num_pages=int(rng.integers(3, 13)),
+            page_size=int(rng.integers(1, 6)),
+            slots=int(rng.integers(1, 4)),
+            chunk=None if rng.integers(0, 2) else int(rng.integers(1, 5)),
+            max_pages_per_seq=int(rng.integers(1, 5)))
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.data())
+def test_scheduler_fifo_admission_and_eos(data):
+    """Admission is FIFO; eos_id cuts a stream short; pages still freed."""
+    sched = Scheduler(num_pages=20, page_size=2, max_concurrency=2,
+                      max_pages_per_seq=8)
+    lens = [data.draw(st.integers(1, 4)) for _ in range(4)]
+    for rid, n in enumerate(lens):
+        sched.submit(Request(rid=rid, prompt=[1] * n, max_new_tokens=6,
+                             eos_id=99))
+    admitted_order = []
+    for _ in range(100):
+        plan = sched.step()
+        admitted_order.extend(rid for rid, _ in plan.admit)
+        for c in plan.prefill:
+            sched.record_prefill(c.rid, c.end,
+                                 first_token=1 if c.last else None)
+        for rid, slot in plan.decode:
+            # request 1 hits eos on its second token
+            tok = 99 if rid == 1 else 2
+            sched.record_decode(rid, tok)
+        if sched.done:
+            break
+    assert admitted_order == sorted(admitted_order)
+    assert sched.completed[1][-1] == 99 and len(sched.completed[1]) == 2
+    assert all(len(sched.completed[r]) == 6 for r in (0, 2, 3))
+    assert sched.allocator.n_free == 19
+
+
+# ---------------------------------------------------------------------------
+# golden: engine token streams == single-request generate()
+# ---------------------------------------------------------------------------
+
+def _tiny_cfg():
+    from repro.configs.base import ArchConfig, BlockSpec
+    return ArchConfig(
+        name="tiny-serve", family="dense", n_layers=2, d_model=32,
+        n_heads=4, n_kv_heads=2, d_ff=64, vocab=128,
+        pattern=(BlockSpec("attn", "dense"),), qkv_bias=True,
+        tie_embeddings=True, remat="none")
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    from repro.models import init_params
+    cfg = _tiny_cfg()
+    return cfg, init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _golden(cfg, params, prompt, gen):
+    from repro.launch.serve import generate
+    out, _ = generate(cfg, params, jnp.asarray([prompt], jnp.int32),
+                      len(prompt) + gen + 1, gen)
+    return [int(t) for t in np.asarray(out[0])]
+
+
+@pytest.mark.parametrize("prefill_chunk", [None, 4])
+def test_engine_token_streams_match_single_request_generate(tiny_model,
+                                                            prefill_chunk):
+    """Continuous batching must not change any request's greedy stream:
+    under fp32_vpu the paged path is bitwise-identical to the dense path,
+    so the streams match exactly — single-shot AND chunked prefill."""
+    from repro.core.context import policy_scope
+    from repro.serving import PagedServingEngine
+    cfg, params = tiny_model
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(0, cfg.vocab, n)) for n in (5, 11, 3, 7)]
+    gens = [4, 3, 6, 2]
+    with policy_scope("fp32_vpu"):
+        eng = PagedServingEngine(cfg, params, page_size=4, max_concurrency=2,
+                                 max_seq_len=20, prefill_chunk=prefill_chunk)
+        rids = [eng.submit(p, g) for p, g in zip(prompts, gens)]
+        out = eng.run()
+        assert sorted(out) == sorted(rids)
+        for rid, prompt, gen in zip(rids, prompts, gens):
+            assert out[rid] == _golden(cfg, params, prompt, gen), rid
+
+
+def test_engine_golden_under_page_backpressure(tiny_model):
+    """Tight page budget forces queueing/late admission; every emitted
+    stream still equals its single-request golden (randomized lengths over
+    a deterministic seed)."""
+    from repro.core.context import policy_scope
+    from repro.serving import PagedServingEngine
+    cfg, params = tiny_model
+    rng = np.random.default_rng(7)
+    prompts = [list(rng.integers(0, cfg.vocab, int(rng.integers(1, 10))))
+               for _ in range(4)]
+    gens = [int(rng.integers(1, 6)) for _ in range(4)]
+    with policy_scope("fp32_vpu"):
+        eng = PagedServingEngine(
+            cfg, params, page_size=4, max_concurrency=2, max_seq_len=16,
+            num_pages=1 + 2 * 4)              # tight: forces queueing
+        for p, g in zip(prompts, gens):
+            eng.submit(p, g)
+        out = eng.run()
+    for rid, (p, g) in enumerate(zip(prompts, gens)):
+        assert out[rid] == _golden(cfg, params, p, g), rid
+
+
+def test_engine_hybrid_golden_recurrent_state_isolation():
+    """Hybrid (attn + mamba) golden equality: recurrent per-slot state is
+    ACCUMULATING, so a slot admitted while others decode must not be
+    advanced by the batched step it idles through — regression for the
+    ghost-decode state corruption (active-slot mask in decode_step_paged)."""
+    from repro.configs.base import ArchConfig, BlockSpec, SsmConfig
+    from repro.core.context import policy_scope
+    from repro.models import init_params
+    from repro.serving import PagedServingEngine
+    cfg = ArchConfig(
+        name="tiny-hybrid", family="hybrid", n_layers=2, d_model=32,
+        n_heads=4, n_kv_heads=2, d_ff=64, vocab=128,
+        pattern=(BlockSpec("mamba", "dense"), BlockSpec("attn", "dense")),
+        ssm=SsmConfig(d_state=8, d_conv=4, expand=2, chunk=16),
+        remat="none")
+    params = init_params(jax.random.PRNGKey(3), cfg)
+    rng = np.random.default_rng(3)
+    # staggered lengths on 2 slots: admissions happen while others decode
+    prompts = [list(rng.integers(0, cfg.vocab, n)) for n in (6, 9, 4)]
+    gens = [5, 2, 4]
+    with policy_scope("fp32_vpu"):
+        eng = PagedServingEngine(cfg, params, page_size=4,
+                                 max_concurrency=2, max_seq_len=16)
+        for p, g in zip(prompts, gens):
+            eng.submit(p, g)
+        out = eng.run()
+        for rid, (p, g) in enumerate(zip(prompts, gens)):
+            assert out[rid] == _golden(cfg, params, p, g), rid
+
+
+def test_engine_rejects_unsupported_configs():
+    from repro.configs import get_config
+    from repro.serving import PagedServingEngine
+    from repro.models import init_params
+    cfg = get_config("whisper-small", reduced=True)
+    with pytest.raises(NotImplementedError):
+        PagedServingEngine(cfg, None)
+    xcfg = get_config("xlstm-1.3b", reduced=True)
+    with pytest.raises(NotImplementedError):
+        PagedServingEngine(xcfg, init_params(jax.random.PRNGKey(0), xcfg),
+                           prefill_chunk=4)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end mixed-stream sweep (slow tier)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,policy", [
+    ("qwen2-0.5b", "bf16x1"),
+    ("qwen2-0.5b", "bf16x6"),
+    ("deepseek-v2-236b", "fp32_vpu"),        # MLA latent pages
+    ("jamba-1.5-large-398b", "bf16x1"),      # hybrid: paged attn + slot SSM
+])
+def test_e2e_mixed_stream_sweep(arch, policy):
+    """Mixed-length streams across archs/policies drain, produce finite
+    streams of the right lengths, and leak no pages."""
+    from repro.configs import get_config
+    from repro.core.context import policy_scope
+    from repro.models import init_params
+    from repro.serving import PagedServingEngine
+    cfg = get_config(arch, reduced=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+    prompts = [list(rng.integers(0, cfg.vocab, n)) for n in (9, 4, 14, 6, 2)]
+    gens = [3, 5, 2, 4, 6]
+    with policy_scope(policy):
+        eng = PagedServingEngine(cfg, params, page_size=8,
+                                 max_concurrency=2, max_seq_len=24)
+        for p, g in zip(prompts, gens):
+            eng.submit(p, g)
+        out = eng.run()
+    assert sorted(out) == list(range(len(prompts)))
+    for rid, g in enumerate(gens):
+        assert len(out[rid]) == g
+        assert all(0 <= t < cfg.vocab for t in out[rid])
+    assert eng.scheduler.allocator.n_free == \
+        eng.scheduler.allocator.num_pages - 1
