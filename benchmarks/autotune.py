@@ -1,0 +1,58 @@
+"""Autotuner benchmark: plan search output + predicted-vs-measured.
+
+For a small matmul sweep this reports, per (shape, policy):
+
+  * the tuner's analytic plan (block, variant) and its predicted time from
+    the ``core.roofline`` model (the *target chip* — v5e unless REPRO_CHIP
+    says otherwise);
+  * the measured walltime of the XLA strict-split executor on the *host*
+    backend (the only thing measurable off-TPU; on a real TPU the measured
+    column comes from the same kernels the plan selects).
+
+Plus the attention and paged-serving plan picks for one representative
+geometry each, so a CSV diff catches plan churn when the cost model moves.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import tcec, tune
+
+SHAPES = ((256, 256, 256), (512, 512, 512), (1024, 1024, 1024),
+          (64, 2048, 520))
+POLICIES = ("bf16x3", "bf16x6")
+
+
+def _measure_xla_us(m, n, k, policy, repeats=3):
+    a = jax.random.normal(jax.random.PRNGKey(0), (m, k), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (k, n), jnp.float32)
+    fn = jax.jit(lambda x, y: tcec.matmul(x, y, policy=policy,
+                                          precision="strict"))
+    jax.block_until_ready(fn(a, b))
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(a, b))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def run():
+    rows = []
+    for (m, n, k) in SHAPES:
+        for pol in POLICIES:
+            plan = tune.matmul_plan(m, n, k, policy=pol, site="bench")
+            tag = f"m{m}n{n}k{k}_{pol}"
+            bm, bn, bk = plan.block
+            rows.append((f"plan_{tag}_block", f"{bm}x{bn}x{bk}"))
+            rows.append((f"plan_{tag}_variant", plan.variant))
+            rows.append((f"predicted_{tag}_us", plan.predicted_us))
+            rows.append((f"measured_xla_{tag}_us", _measure_xla_us(m, n, k, pol)))
+    ap = tune.attention_plan(1024, 1024, 128, 128, policy="bf16x6", b=4, h=8)
+    rows.append(("plan_attn_s1024_d128_bf16x6_blocks",
+                 f"{ap.block_q}x{ap.block_kv}"))
+    pp = tune.paged_plan(256, 2, 64, 64, policy="bf16x6")
+    rows.append(("plan_paged_s256_page_size", pp.page_size))
+    rows.append(("plan_paged_s256_pages_per_step", pp.pages_per_step))
+    return rows

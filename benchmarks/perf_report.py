@@ -1,5 +1,16 @@
-"""Render the §Roofline table (post-optimization sweep + baseline deltas)
-into EXPERIMENTS.md at the <!-- ROOFLINE_TABLE --> marker."""
+"""Performance report.
+
+Always prints the autotuner's predicted-vs-measured table: for each
+(shape, policy) the ``repro.tune`` analytic plan, its predicted time on the
+target chip's roofline model, and the measured strict-split walltime on the
+host backend (on-TPU the measured column times the planned kernel itself).
+When a ``--json`` artifact from ``benchmarks/run.py`` is supplied, measured
+values come from it instead of being re-timed.
+
+Additionally (when dry-run artifacts exist) renders the §Roofline table
+into EXPERIMENTS.md at the <!-- ROOFLINE_TABLE --> marker.
+"""
+import argparse
 import json
 from pathlib import Path
 
@@ -69,18 +80,69 @@ def build_table() -> str:
     return "\n".join(lines)
 
 
-def main():
-    md = (ROOT / "EXPERIMENTS.md").read_text()
-    table = MARK + "\n" + build_table()
-    if MARK in md:
-        pre = md.split(MARK)[0]
-        post = md.split(MARK)[-1]
-        # replace everything from marker to the next section header
-        rest = post.split("\n## ", 1)
-        tail = ("\n## " + rest[1]) if len(rest) > 1 else ""
-        md = pre + table + "\n" + tail
-    (ROOT / "EXPERIMENTS.md").write_text(md)
-    print("EXPERIMENTS.md roofline table updated")
+def build_tune_table(results_json=None) -> str:
+    """Predicted-vs-measured table from the autotuner's analytic scores.
+
+    Measured values come from a ``benchmarks/run.py --json`` artifact when
+    one is given (``measured_xla_*`` records), else are re-timed in-process.
+    The ratio column is the model-vs-host gap — a constant-ish ratio means
+    the model *ranks* correctly even where its absolute scale (the target
+    chip, not this host) does not apply.
+    """
+    from benchmarks import autotune
+    from repro import tune
+    from repro.core.roofline import active_chip
+
+    measured = {}
+    if results_json:
+        for r in json.loads(Path(results_json).read_text()):
+            if r["bench"] == "autotune" and \
+                    r["name"].startswith("measured_xla_"):
+                measured[r["name"]] = r["value"]
+
+    chip = active_chip()
+    lines = [
+        f"Autotuner predicted (target: {chip.name}) vs measured "
+        f"(host backend) — strict-split matmul:",
+        "",
+        "| shape m,n,k | policy | plan block | variant | predicted_us "
+        "| measured_us | meas/pred |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for (m, n, k) in autotune.SHAPES:
+        for pol in autotune.POLICIES:
+            plan = tune.matmul_plan(m, n, k, policy=pol, site="bench")
+            key = f"measured_xla_m{m}n{n}k{k}_{pol}_us"
+            meas = measured.get(key)
+            if meas is None:
+                meas = autotune._measure_xla_us(m, n, k, pol)
+            bm, bn, bk = plan.block
+            lines.append(
+                f"| {m},{n},{k} | {pol} | {bm}x{bn}x{bk} | {plan.variant} "
+                f"| {plan.predicted_us:.2f} | {meas:.2f} "
+                f"| {meas / max(plan.predicted_us, 1e-9):.1f} |")
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--results", default=None, metavar="RUN_JSON",
+                    help="benchmarks/run.py --json artifact for measured "
+                         "values (default: re-time in-process)")
+    args = ap.parse_args(argv)
+    print(build_tune_table(args.results))
+    if CUR.is_dir() and (ROOT / "EXPERIMENTS.md").is_file():
+        md = (ROOT / "EXPERIMENTS.md").read_text()
+        table = MARK + "\n" + build_table()
+        if MARK in md:
+            pre = md.split(MARK)[0]
+            post = md.split(MARK)[-1]
+            # replace everything from marker to the next section header
+            rest = post.split("\n## ", 1)
+            tail = ("\n## " + rest[1]) if len(rest) > 1 else ""
+            md = pre + table + "\n" + tail
+        (ROOT / "EXPERIMENTS.md").write_text(md)
+        print("\nEXPERIMENTS.md roofline table updated")
 
 
 if __name__ == "__main__":

@@ -15,20 +15,53 @@
   §Serving      -> serving_throughput (paged vs dense decode: tok/s and
                    cache-bytes-touched per step across policies)
   §Roofline     -> roofline        (cluster table from dry-run artifacts)
+  §Autotune     -> autotune        (repro.tune plan picks + predicted vs
+                   measured walltime)
 
 Every row prints as ``name,value,derived`` where timing rows use us_per_call
-and analysis rows carry the derived quantity.
+and analysis rows carry the derived quantity.  ``--json out.json``
+additionally writes machine-readable records
+``{"bench", "name", "shape", "policy", "metric", "value"}`` (shape/policy
+parsed best-effort from the row key; null when a row has neither).
 """
+import argparse
+import json
+import re
 import sys
 import time
 import traceback
 
+_SHAPE_RE = re.compile(r"(?:m(\d+)n(\d+)k(\d+))|(?:_s(\d+)(?:_|$))|"
+                       r"(?:b(\d+)_s(\d+))")
+_POLICY_RE = re.compile(r"(bf16x\d(?:_(?:pallas|staged))?|fp32_vpu)")
 
-def main() -> None:
+
+def _row_record(bench: str, key: str, metric: str, value):
+    shape = policy = None
+    m = _SHAPE_RE.search(key)
+    if m:
+        groups = [g for g in m.groups() if g is not None]
+        shape = "x".join(groups)
+    p = _POLICY_RE.search(key)
+    if p:
+        policy = p.group(1)
+    return {"bench": bench, "name": key, "shape": shape, "policy": policy,
+            "metric": metric, "value": value}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", metavar="OUT", default=None,
+                    help="also write machine-readable results to this path")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module names to run (default: all)")
+    args = ap.parse_args(argv)
+
     from benchmarks import (bf_table, ai_curves, householder, givens,
                             tcec_accuracy, tcec_throughput,
                             attention_throughput, policy_sweep,
-                            einsum_frontend, serving_throughput, roofline)
+                            einsum_frontend, serving_throughput, roofline,
+                            autotune)
     modules = [
         ("bf_table", bf_table),
         ("ai_curves", ai_curves),
@@ -41,8 +74,13 @@ def main() -> None:
         ("einsum_frontend", einsum_frontend),
         ("serving_throughput", serving_throughput),
         ("roofline", roofline),
+        ("autotune", autotune),
     ]
+    if args.only:
+        keep = set(args.only.split(","))
+        modules = [(n, m) for n, m in modules if n in keep]
     failures = 0
+    records = []
     print("name,us_per_call,derived")
     for name, mod in modules:
         t0 = time.perf_counter()
@@ -51,15 +89,30 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001
             traceback.print_exc()
             print(f"{name},ERROR,{type(e).__name__}")
+            records.append(_row_record(name, "ERROR", "error",
+                                       type(e).__name__))
             failures += 1
             continue
         dt_us = (time.perf_counter() - t0) * 1e6
         print(f"{name}.total,{dt_us:.1f},")
+        records.append(_row_record(name, "total", "us_per_call", dt_us))
         for key, val in rows:
             if key.endswith("_us"):
                 print(f"{name}.{key},{val:.2f},")
+                records.append(_row_record(name, key, "us_per_call",
+                                           float(val)))
             else:
-                print(f"{name}.{key},,{val:.6g}")
+                try:
+                    shown = f"{val:.6g}"
+                except (TypeError, ValueError):
+                    shown = str(val)
+                print(f"{name}.{key},,{shown}")
+                records.append(_row_record(name, key, "derived", val))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"# wrote {len(records)} records to {args.json}",
+              file=sys.stderr)
     if failures:
         sys.exit(1)
 

@@ -15,7 +15,8 @@ Two levels:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+import os
+from typing import Dict, Optional, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,6 +47,176 @@ V100_SXM2 = ChipSpec(
 )
 
 CHIPS = {c.name: c for c in (TPU_V5E, A100_SXM4, V100_SXM2)}
+
+
+def active_chip() -> ChipSpec:
+    """The chip the analytic models target.
+
+    ``REPRO_CHIP`` selects any registered ``ChipSpec`` by name; the default
+    is the v5e (the repo's reference part), which keeps every derived
+    constant — block caps, roofline bounds, tuner scores — identical on the
+    CPU test backend and on the real TPU.
+    """
+    name = os.environ.get("REPRO_CHIP")
+    if not name:
+        return TPU_V5E
+    try:
+        return CHIPS[name]
+    except KeyError:
+        raise KeyError(f"REPRO_CHIP={name!r} is not a registered chip; "
+                       f"known: {sorted(CHIPS)}") from None
+
+
+# ---------------------------------------------------------------------------
+# Kernel-block-level model: footprints, caps and predicted times for the
+# Pallas TCEC matmul family.  This is the single source of truth consumed by
+# ``kernels.tcec_matmul.default_blocks`` and the ``repro.tune`` plan search —
+# the paper's square-blocking AI(n) generalized to arbitrary (bm, bn, bk)
+# tiles and the fused / staged / double-buffered-staged variants.
+# ---------------------------------------------------------------------------
+
+#: Slice of the staging tier one matmul's working set may claim.  Mosaic
+#: keeps semaphores, spill slots and the co-resident epilogue operands
+#: (bias/residual streams, attention scratch) in the same tier, so the
+#: matmul cannot own it all; 1/64 is calibrated so the v5e reproduces the
+#: empirically-good (128, 128, 512) caps that were previously hardcoded.
+STAGING_BUDGET_FRACTION = 1.0 / 64.0
+
+#: Mosaic double-buffers every BlockSpec-pipelined input stream.
+PIPELINE_FACTOR = 2
+
+# MXU/VREG alignment: sublane multiple for rows, lane multiple for cols.
+SUBLANE = 8
+LANE = 128
+
+MATMUL_VARIANTS = ("fused", "staged", "staged_db", "vpu")
+
+
+def staging_budget_bytes(chip: ChipSpec = None) -> int:
+    """Staging-tier bytes one kernel's per-step working set may use."""
+    chip = chip or active_chip()
+    return int(chip.staging_kib * 1024 * STAGING_BUDGET_FRACTION)
+
+
+def matmul_tile_footprint(bm: int, bn: int, bk: int, n_words: int,
+                          variant: str = "fused") -> int:
+    """Staging-tier bytes of one grid step's working set (paper Fig. 6).
+
+    ``fused`` (WMMAe / on-the-fly) and ``vpu`` stream the fp32 source blocks
+    (double-buffered by Mosaic) and keep the split words in VREGs; ``staged``
+    (WMMA-API baseline) streams ``n_words`` bf16 word buffers per input
+    instead; ``staged_db`` holds the word buffers in an explicit two-slot
+    scratch (its own double buffering — inputs live in HBM/ANY, so Mosaic
+    adds no pipeline copies on top).  All variants keep a (bm, bn) fp32
+    accumulator resident across the k loop.
+    """
+    if variant not in MATMUL_VARIANTS:
+        raise ValueError(f"unknown variant {variant!r}; one of "
+                         f"{MATMUL_VARIANTS}")
+    in_elems = bm * bk + bk * bn
+    if variant in ("fused", "vpu"):
+        in_bytes = PIPELINE_FACTOR * 4 * in_elems
+    elif variant == "staged":
+        in_bytes = PIPELINE_FACTOR * (2 * n_words) * in_elems
+    else:  # staged_db: two explicit slots of all word buffers
+        in_bytes = 2 * (2 * n_words) * in_elems
+    return in_bytes + 4 * bm * bn
+
+
+def derive_block_caps(chip: ChipSpec = None,
+                      n_words: int = 3) -> Tuple[int, int, int]:
+    """(bm_cap, bn_cap, bk_cap) tile caps derived from the chip.
+
+    bm/bn: the paper's B/F crossover — the smallest square blocking whose
+    AI(n) = n/5 reaches the staging-vs-matrix ratio (beyond it the MXU, not
+    the staging tier, is the bound), rounded up to the lane width.  bk: the
+    largest power-of-two multiple of the lane width whose worst-case
+    (``staged``, ``n_words`` words, Mosaic-pipelined) footprint at
+    (bm_cap, bn_cap, bk) fits the staging budget.  On the v5e this yields
+    (128, 128, 512) — the previously hardcoded defaults, now derived.
+    """
+    chip = chip or active_chip()
+    # AI needed to leave the staging-bandwidth roof: flops/byte.
+    ai_star = chip.matrix_tflops * 1000.0 / chip.staging_gbps
+    n_star = max(1, int(-(-5 * ai_star // 1)))        # AI(n) = n/5 crossover
+    cap_mn = max(LANE, -(-n_star // LANE) * LANE)
+    budget = staging_budget_bytes(chip)
+    bk_cap = LANE
+    while True:
+        nxt = bk_cap * 2
+        if matmul_tile_footprint(cap_mn, cap_mn, nxt, n_words,
+                                 "staged") > budget:
+            break
+        bk_cap = nxt
+    return cap_mn, cap_mn, bk_cap
+
+
+def _pad_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+#: Fixed per-grid-step and per-launch overheads (seconds).  Small enough
+#: never to dominate a realistic tile, large enough to break ties away from
+#: degenerate many-step plans.  Purely analytic constants — deterministic
+#: across processes by construction.
+GRID_STEP_OVERHEAD_S = 2e-8
+LAUNCH_OVERHEAD_S = 2e-6
+
+
+def predict_matmul_time(m: int, n: int, k: int, *, batch: int = 1,
+                        block: Tuple[int, int, int], variant: str = "fused",
+                        passes: int = 6, n_words: int = 3,
+                        rhs_batched: bool = True,
+                        chip: ChipSpec = None) -> float:
+    """Roofline-predicted seconds for the batched TCEC matmul.
+
+    Three terms over the *padded* problem (padding waste is how oversized
+    tiles lose on small dims):
+
+      * matrix-unit time — ``passes`` MXU passes per logical matmul
+        (``vpu``: one fp32 pass on the vector unit);
+      * HBM time — A re-streamed per n-tile, B per m-tile, C written once
+        (staged variants move ``n_words`` bf16 words per input element and
+        pay one extra pass to materialize them);
+      * staging time — bytes through the staging tier per the variant's
+        data flow (paper §4.4: fused reads the fp32 source once; staged
+        writes and reads back every split word).
+
+    ``staged`` serializes the word round-trip against the MXU passes
+    (t_mxu + t_stage); ``fused``/``staged_db``/``vpu`` overlap copy with
+    compute (max of terms) — the double-buffered variant's whole point.
+    """
+    chip = chip or active_chip()
+    bm, bn, bk = block
+    mp, np_, kp = _pad_up(m, bm), _pad_up(n, bn), _pad_up(k, bk)
+    flops = 2.0 * batch * mp * np_ * kp
+    if variant == "vpu":
+        t_mxu = flops / (chip.vector_tflops * 1e12)
+    else:
+        t_mxu = flops * passes / (chip.matrix_tflops * 1e12)
+
+    in_bytes_elem = 4.0 if variant in ("fused", "vpu") else 2.0 * n_words
+    b_batch = batch if rhs_batched else 1
+    hbm = (batch * mp * kp * in_bytes_elem * (np_ // bn)
+           + b_batch * kp * np_ * in_bytes_elem * (mp // bm)
+           + batch * mp * np_ * 4.0)
+    if variant in ("staged", "staged_db"):
+        # Host-side split materialization: read fp32 source, write the words.
+        hbm += (batch * mp * kp + b_batch * kp * np_) * (4.0 + 2.0 * n_words)
+    t_hbm = hbm / (chip.hbm_gbps * 1e9)
+
+    stage_in_elem = 4.0 if variant in ("fused", "vpu") else 2.0 * (2 * n_words)
+    stage = (batch * mp * kp * stage_in_elem * (np_ // bn)
+             + b_batch * kp * np_ * stage_in_elem * (mp // bm)
+             # fp32 accumulator read+write per k step of every output tile
+             + batch * mp * np_ * 8.0 * (kp // bk))
+    t_stage = stage / (chip.staging_gbps * 1e9)
+
+    steps = batch * (mp // bm) * (np_ // bn) * (kp // bk)
+    t_over = LAUNCH_OVERHEAD_S + steps * GRID_STEP_OVERHEAD_S
+    if variant == "staged":
+        return max(t_hbm, t_mxu + t_stage) + t_over
+    return max(t_hbm, t_mxu, t_stage) + t_over
 
 
 def mma_arithmetic_intensity(n: int, in_bytes: int = 2, acc_bytes: int = 4,

@@ -56,8 +56,9 @@ from .tcec_core import compiler_params as _shared_compiler_params
 from .tcec_core import round_up as _round_up
 
 __all__ = [
-    "tcec_matmul_pallas", "tcec_matmul_staged", "tcec_matmul_pallas_grad",
-    "tcec_matmul_fused", "default_blocks", "pad_amounts",
+    "tcec_matmul_pallas", "tcec_matmul_staged", "tcec_matmul_staged_db",
+    "tcec_matmul_pallas_grad", "tcec_matmul_fused", "tcec_matmul_auto",
+    "default_blocks", "pad_amounts",
 ]
 
 
@@ -112,15 +113,21 @@ def _staged_kernel(*refs, n_words, schedule, nk):
         o_ref[0] = acc_ref[...]
 
 
-def default_blocks(m: int, n: int, k: int) -> Tuple[int, int, int]:
-    """MXU-aligned (multiple-of-128 where possible) VMEM-fitting blocks.
+def default_blocks(m: int, n: int, k: int, chip=None) -> Tuple[int, int, int]:
+    """MXU-aligned, staging-capacity-derived default blocks.
 
-    Dims smaller than a full tile get a sublane-aligned block; dims that
-    don't divide the chosen block are zero-padded by the host wrapper.
+    The per-axis caps come from the active backend's ``ChipSpec`` via
+    ``core.roofline.derive_block_caps`` — the B/F crossover for bm/bn and
+    the staging budget for bk (the v5e derivation reproduces the previously
+    hardcoded (128, 128, 512)).  Dims smaller than a full tile get a
+    sublane-aligned block; dims that don't divide the chosen block are
+    zero-padded by the host wrapper.
     """
-    bm = min(_round_up(m, 8), 128)
-    bn = min(_round_up(n, 128), 128)
-    bk = min(_round_up(k, 128), 512)
+    from repro.core.roofline import LANE, SUBLANE, derive_block_caps
+    bm_cap, bn_cap, bk_cap = derive_block_caps(chip)
+    bm = min(_round_up(m, SUBLANE), bm_cap)
+    bn = min(_round_up(n, LANE), bn_cap)
+    bk = min(_round_up(k, LANE), bk_cap)
     return bm, bn, bk
 
 
@@ -283,6 +290,142 @@ def _tcec_matmul_staged(a: jnp.ndarray, b: jnp.ndarray,
     )(*aw, *bw)
     out = out[:, :m, :n]
     return out if a.ndim == 3 else out[0]
+
+
+# ---------------------------------------------------------------------------
+# Double-buffered staged variant: the WMMA-API data flow with software
+# pipelining.  Mosaic double-buffers BlockSpec inputs automatically; here the
+# split-word tiles are fetched with *explicit* async copies into a two-slot
+# VMEM scratch so the next k-block's DMA overlaps the current MXU passes.
+# Footprint: 2 slots x 2w bf16 word tiles (no fp32 source resident), i.e.
+# 2*(2w)*(bm*bk + bk*bn) bytes vs Mosaic-staged 2*(4w)* — the tuner's third
+# point on the staging-footprint/overlap trade-off curve.
+# ---------------------------------------------------------------------------
+
+def _staged_db_kernel(*refs, n_words, schedule, nk, bm, bn, bk, rhs_batched):
+    """Grid: (b, m/bm, n/bn); the k loop lives inside with 2-slot DMA."""
+    a_refs = refs[:n_words]
+    b_refs = refs[n_words:2 * n_words]
+    o_ref = refs[2 * n_words]
+    scratch = refs[2 * n_words + 1:]
+    a_scr = scratch[:n_words]
+    b_scr = scratch[n_words:2 * n_words]
+    a_sem, b_sem = scratch[2 * n_words], scratch[2 * n_words + 1]
+    bi, i, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    def a_copy(w, kk, slot):
+        return pltpu.make_async_copy(
+            a_refs[w].at[bi, pl.ds(i * bm, bm), pl.ds(kk * bk, bk)],
+            a_scr[w].at[slot], a_sem.at[w, slot])
+
+    def b_copy(w, kk, slot):
+        src = (b_refs[w].at[bi, pl.ds(kk * bk, bk), pl.ds(j * bn, bn)]
+               if rhs_batched else
+               b_refs[w].at[pl.ds(kk * bk, bk), pl.ds(j * bn, bn)])
+        return pltpu.make_async_copy(src, b_scr[w].at[slot],
+                                     b_sem.at[w, slot])
+
+    # Warm-up: fill slot 0 for k-block 0.
+    for w in range(n_words):
+        a_copy(w, 0, 0).start()
+        b_copy(w, 0, 0).start()
+
+    def step(kk, acc):
+        slot = jax.lax.rem(kk, 2)
+
+        @pl.when(kk + 1 < nk)
+        def _prefetch():
+            for w in range(n_words):
+                a_copy(w, kk + 1, 1 - slot).start()
+                b_copy(w, kk + 1, 1 - slot).start()
+
+        for w in range(n_words):
+            a_copy(w, kk, slot).wait()
+            b_copy(w, kk, slot).wait()
+        aw = [a_scr[w][slot] for w in range(n_words)]
+        bw = [b_scr[w][slot] for w in range(n_words)]
+        return acc + _mma_passes(aw, bw, schedule)
+
+    acc = jax.lax.fori_loop(0, nk, step, jnp.zeros((bm, bn), jnp.float32))
+    o_ref[0] = acc
+
+
+def tcec_matmul_staged_db(a: jnp.ndarray, b: jnp.ndarray,
+                          policy: TcecPolicy | str | None = None,
+                          block: Tuple[int, int, int] | None = None,
+                          interpret: bool = False) -> jnp.ndarray:
+    """Double-buffered staged matmul: split words in HBM, two-slot explicit
+    DMA so the next k-tile's copy overlaps the current MXU passes.  Same
+    shapes, policies and (bitwise) results as ``tcec_matmul_staged``."""
+    return _tcec_matmul_staged_db(a, b, resolve_policy(policy), block,
+                                  interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("policy", "block", "interpret"))
+def _tcec_matmul_staged_db(a: jnp.ndarray, b: jnp.ndarray,
+                           policy: TcecPolicy,
+                           block: Tuple[int, int, int] | None = None,
+                           interpret: bool = False) -> jnp.ndarray:
+    pol = policy
+    if pol.backend == "vpu":
+        raise ValueError(
+            "tcec_matmul_staged_db stages bf16 split words by construction; "
+            "a vpu (plain-fp32) policy has no staged data flow — use "
+            "tcec_matmul_pallas, which honors backend=\"vpu\" exactly")
+    nb, m, n, k = _check_shapes(a, b)
+    bm, bn, bk = block or default_blocks(m, n, k)
+    mp, np_, kp = pad_amounts(m, n, k, (bm, bn, bk))
+    a = _pad_last2(a.astype(jnp.float32), mp, kp)
+    b = _pad_last2(b.astype(jnp.float32), kp, np_)
+    nk = kp // bk
+    grid = (nb, mp // bm, np_ // bn)
+    aw = split_words(a if a.ndim == 3 else a[None], pol.n_words, staged=True)
+    bw = split_words(b, pol.n_words, staged=True)
+    w_dt = aw[0].dtype
+    kernel = functools.partial(
+        _staged_db_kernel, n_words=pol.n_words,
+        schedule=_SCHEDULES[pol.passes], nk=nk, bm=bm, bn=bn, bk=bk,
+        rhs_batched=b.ndim == 3)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        # Word arrays stay in ANY (HBM on hardware); the kernel pulls tiles
+        # itself, so Mosaic must not also stage them.
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)] * (2 * pol.n_words),
+        out_specs=pl.BlockSpec((1, bm, bn), lambda bi, i, j: (bi, i, j)),
+        out_shape=jax.ShapeDtypeStruct((nb, mp, np_), jnp.float32),
+        scratch_shapes=(
+            [pltpu.VMEM((2, bm, bk), w_dt) for _ in range(pol.n_words)]
+            + [pltpu.VMEM((2, bk, bn), w_dt) for _ in range(pol.n_words)]
+            + [pltpu.SemaphoreType.DMA((pol.n_words, 2)),
+               pltpu.SemaphoreType.DMA((pol.n_words, 2))]),
+        compiler_params=_shared_compiler_params(
+            ("parallel", "parallel", "parallel")),
+        interpret=interpret,
+    )(*aw, *bw)
+    out = out[:, :m, :n]
+    return out if a.ndim == 3 else out[0]
+
+
+def tcec_matmul_auto(a: jnp.ndarray, b: jnp.ndarray,
+                     policy: TcecPolicy | str | None = None,
+                     interpret: bool = False,
+                     site: str = "auto") -> jnp.ndarray:
+    """Tuner-dispatched matmul: ``repro.tune`` picks (block, variant) over
+    the full fused/staged/staged_db/vpu space and this wrapper routes to the
+    matching kernel.  With ``REPRO_TUNE=off`` it is exactly
+    ``tcec_matmul_pallas`` with default blocks."""
+    pol = resolve_policy(policy)
+    nb, m, n, k = _check_shapes(a, b)
+    from repro import tune   # deferred: tune imports kernels for measurement
+    plan = tune.matmul_plan(m, n, k, policy=pol, batch=nb,
+                            rhs_batched=b.ndim == 3, site=site)
+    if plan is None or plan.variant in ("fused", "vpu"):
+        block = None if plan is None else plan.block
+        return tcec_matmul_pallas(a, b, pol, block, interpret)
+    if plan.variant == "staged":
+        return tcec_matmul_staged(a, b, pol, plan.block, interpret)
+    return tcec_matmul_staged_db(a, b, pol, plan.block, interpret)
 
 
 # ---------------------------------------------------------------------------

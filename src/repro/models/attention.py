@@ -92,10 +92,19 @@ def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         # so tests can monkeypatch the kernel entry point.
         import importlib
         _fa = importlib.import_module("repro.kernels.flash_attention")
+        # The flash kernel is a tuned site: repro.tune picks
+        # (block_q, block_kv) from the staging-roofline model (kernel
+        # defaults when REPRO_TUNE=off).
+        from repro import tune
+        tplan = tune.attention_plan(sq, skv, d, dv, policy=pol, b=b, h=h,
+                                    causal=causal)
+        blocks = {} if tplan is None else dict(block_q=tplan.block_q,
+                                               block_k=tplan.block_kv)
         o = _fa.flash_attention(
             q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
             v.transpose(0, 2, 1, 3), causal=causal, policy=pol,
-            kv_len=kv_len, interpret=jax.default_backend() != "tpu")
+            kv_len=kv_len, interpret=jax.default_backend() != "tpu",
+            **blocks)
         return o.transpose(0, 2, 1, 3)
     from .base import largest_divisor_leq
     q_chunk = largest_divisor_leq(sq, q_chunk)

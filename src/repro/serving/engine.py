@@ -58,13 +58,28 @@ class PagedServingEngine:
     admission back-pressure.  ``prefill_chunk`` enables chunked prefill
     (attention/MLA-mixer architectures only: recurrent mixers have no
     multi-token decode step).
+
+    ``page_size=None`` asks ``repro.tune`` for the page size (and, when
+    ``prefill_chunk="auto"``, the prefill chunk = page_size x
+    pages-per-step) from the paged-serving cost model over the engine's
+    ``"attn"`` policy; with ``REPRO_TUNE=off`` the pre-tuner defaults
+    (page_size=16, single-shot prefill) apply.
     """
 
-    def __init__(self, cfg: ArchConfig, params, *, page_size: int = 16,
+    def __init__(self, cfg: ArchConfig, params, *,
+                 page_size: Optional[int] = 16,
                  max_concurrency: int = 4, max_seq_len: int = 256,
                  num_pages: Optional[int] = None,
-                 prefill_chunk: Optional[int] = None,
+                 prefill_chunk=None,
                  eos_id: Optional[int] = None):
+        tuned = None
+        if page_size is None or prefill_chunk == "auto":
+            tuned = self._tuned_plan(cfg, max_seq_len)
+        if page_size is None:
+            page_size = 16 if tuned is None else tuned.page_size
+        if prefill_chunk == "auto":
+            prefill_chunk = None if tuned is None \
+                else tuned.page_size * tuned.pages_per_step
         if cfg.encoder_layers or cfg.vision_tokens:
             raise NotImplementedError(
                 "paged serving covers decoder-only architectures")
@@ -97,6 +112,24 @@ class PagedServingEngine:
             donate_argnums=(2,))
         self._prefill_fn = jax.jit(functools.partial(prefill, cfg=cfg))
         self._write_fn = jax.jit(write_prefill_prefix, donate_argnums=(0,))
+
+    @staticmethod
+    def _tuned_plan(cfg: ArchConfig, max_seq_len: int):
+        """The ``repro.tune`` paged plan for this architecture's KV-cache
+        geometry under the resolved ``"attn"`` policy, or ``None`` when
+        tuning is off."""
+        from repro import tune
+        from repro.core.context import resolve_policy
+        pol = resolve_policy(None, "attn")
+        if cfg.mla is not None:
+            # MLA caches the compressed latent + rope key, one logical head.
+            kvh = 1
+            d = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+            dv = 0
+        else:
+            kvh, d = cfg.n_kv_heads, cfg.head_dim_
+            dv = cfg.head_dim_
+        return tune.paged_plan(max_seq_len, kvh, d, dv, policy=pol)
 
     # -- submission ---------------------------------------------------------
 

@@ -95,6 +95,9 @@ class PlanRecord:
     site: Optional[str]
     policy: TcecPolicy
     backend: str
+    # Tuner-chosen tiling for pallas-planned sites (None: defaults/off/xla).
+    block: Optional[Tuple[int, int, int]] = None
+    variant: Optional[str] = None
 
 
 _TRACE: contextvars.ContextVar[Optional[List[PlanRecord]]] = \
@@ -186,6 +189,7 @@ class _Spec:
     has_residual: bool
     interpret: bool
     fragment: Optional[FragmentOperand] = None
+    block: Optional[Tuple[int, int, int]] = None   # tuner-chosen tiling
 
     @property
     def eq(self) -> str:
@@ -216,7 +220,7 @@ def _run_pallas(spec: _Spec, pol: TcecPolicy, a, b, ep: Dict) -> jnp.ndarray:
     residual = ep.get("residual")
     kw = dict(frag=spec.fragment, bias=bias, scale=spec.scale,
               activation=spec.activation, out_dtype=spec.out_dtype,
-              interpret=spec.interpret)
+              block=spec.block, interpret=spec.interpret)
     if spec.pattern == "fold":
         lead = a.shape[:-1]
         a2 = a.reshape(-1, a.shape[-1])
@@ -367,9 +371,29 @@ def einsum(eq: str, a, b, *, site: Optional[str] = None,
     plan = plan_einsum(
         ia, ib, out, pol, a_frag, b_frag, len(b.shape), bias_ok,
         b_frag_in_kernel_ok=not (b_frag and b.closes_over_arrays()))
+    block = variant = None
+    if plan.backend in ("pallas", "pallas_fragment"):
+        # Trace-time, so the jit compile cache keys on the concrete block.
+        # The fused kernel is the frontend's one data flow, so the search
+        # space is tiles-only; REPRO_TUNE=off keeps the kernel defaults.
+        from repro import tune
+        if plan.pattern == "fold":
+            mm = 1
+            for c in ia[:-1]:
+                mm *= dims[c]
+            kk, nn, batch, rb = dims[ia[-1]], dims[ib[-1]], 1, False
+        else:                      # "batched": bmk, bkn -> bmn
+            batch, mm, kk = (dims[c] for c in ia)
+            nn, rb = dims[ib[2]], True
+        tplan = tune.matmul_plan(mm, nn, kk, policy=pol, batch=batch,
+                                 rhs_batched=rb, site=site,
+                                 variants=("fused",))
+        if tplan is not None:
+            block, variant = tplan.block, tplan.variant
     log = _TRACE.get()
     if log is not None:
-        log.append(PlanRecord(f"{ia},{ib}->{out}", site, pol, plan.backend))
+        log.append(PlanRecord(f"{ia},{ib}->{out}", site, pol, plan.backend,
+                              block, variant))
     if a_frag:
         a = a.build()
     frag = None
@@ -385,7 +409,7 @@ def einsum(eq: str, a, b, *, site: Optional[str] = None,
         precision=precision, scale=float(ep.scale), activation=ep.activation,
         out_dtype=ep.out_dtype_str(), has_bias=ep.bias is not None,
         has_residual=ep.residual is not None, interpret=bool(interpret),
-        fragment=frag)
+        fragment=frag, block=block)
     return _einsum_core(spec, pol, a, b, ep.arrays())
 
 

@@ -1,0 +1,37 @@
+"""``repro.tune`` — roofline-driven autotuning for every Pallas site.
+
+The paper's roofline argument (§3) made tile shapes a *derived* quantity:
+the staging tier's B/F ratio bounds matrix-unit throughput unless the
+footprint per MMA pass fits the budget.  This package turns that analysis
+into a plan-search subsystem:
+
+  * ``matmul_plan``    — (bm, bn, bk) tiles + fused/staged/double-buffered
+                         variant for the TCEC matmul kernels,
+  * ``attention_plan`` — flash-attention (block_q, block_kv),
+  * ``paged_plan``     — serving page size and prefill pages-per-step,
+
+each keyed on (shape, policy, backend, site), pruned analytically with
+``core.roofline`` and — in ``measure`` mode — refined by in-process
+benchmarking with winners persisted under ``~/.cache/repro-tune/``.
+
+``REPRO_TUNE=off`` restores the pre-tuner hardcoded defaults everywhere;
+``tune_mode(...)`` scopes a mode for tests.
+"""
+from .cache import (SCHEMA_VERSION, cache_dir, clear_plan_cache,  # noqa: F401
+                    plan_cache)
+from .space import (AttentionCandidate, MatmulCandidate,  # noqa: F401
+                    PagedCandidate, attention_candidates,
+                    matmul_candidates, matmul_variants, paged_candidates)
+from .tuner import (MODES, AttentionPlan, MatmulPlan,  # noqa: F401
+                    PagedPlan, attention_plan, matmul_plan, mode,
+                    paged_plan, tune_mode)
+
+__all__ = [
+    "MatmulPlan", "AttentionPlan", "PagedPlan",
+    "matmul_plan", "attention_plan", "paged_plan",
+    "matmul_candidates", "attention_candidates", "paged_candidates",
+    "matmul_variants", "MatmulCandidate", "AttentionCandidate",
+    "PagedCandidate",
+    "mode", "tune_mode", "MODES",
+    "cache_dir", "clear_plan_cache", "plan_cache", "SCHEMA_VERSION",
+]

@@ -1,0 +1,146 @@
+"""Persistent plan cache: JSON on disk + an in-memory LRU layer.
+
+One file per (schema version, chip, jax backend) under
+``~/.cache/repro-tune/`` (``REPRO_TUNE_CACHE`` relocates it — tests point it
+at a tmpdir).  Entries are plain dicts so the file is greppable and
+diffable; the schema version is stamped into the filename *and* the payload,
+and a mismatched or corrupt file is silently ignored and rebuilt rather
+than crashing the planner.  Writes are atomic (tempfile + ``os.replace``)
+so concurrent processes at worst lose a benign race, never corrupt.
+
+The in-memory layer makes the common case — a jitted launcher re-planning
+the same (shape, policy, site) key every trace — a dict hit; the disk layer
+is what keeps those launchers warm *across* processes.
+"""
+from __future__ import annotations
+
+import collections
+import json
+import os
+import tempfile
+import threading
+from pathlib import Path
+from typing import Dict, Optional
+
+SCHEMA_VERSION = 1
+
+_LRU_CAPACITY = 1024
+
+
+def cache_dir() -> Path:
+    env = os.environ.get("REPRO_TUNE_CACHE")
+    if env:
+        return Path(env)
+    return Path.home() / ".cache" / "repro-tune"
+
+
+def _cache_file(chip: str, backend: str) -> Path:
+    return cache_dir() / f"plans-v{SCHEMA_VERSION}-{chip}-{backend}.json"
+
+
+class PlanCache:
+    """LRU-fronted, disk-backed plan store for one (chip, backend) pair."""
+
+    def __init__(self, chip: str, backend: str,
+                 capacity: int = _LRU_CAPACITY):
+        self.chip = chip
+        self.backend = backend
+        self.capacity = capacity
+        self._lock = threading.Lock()
+        self._mem: "collections.OrderedDict[str, Dict]" = \
+            collections.OrderedDict()
+        self._disk: Optional[Dict[str, Dict]] = None   # lazy-loaded
+
+    @property
+    def path(self) -> Path:
+        return _cache_file(self.chip, self.backend)
+
+    # -- disk layer ---------------------------------------------------------
+
+    def _load_disk(self) -> Dict[str, Dict]:
+        if self._disk is not None:
+            return self._disk
+        path = _cache_file(self.chip, self.backend)
+        data: Dict[str, Dict] = {}
+        try:
+            raw = json.loads(path.read_text())
+            if (isinstance(raw, dict)
+                    and raw.get("version") == SCHEMA_VERSION
+                    and isinstance(raw.get("plans"), dict)):
+                data = raw["plans"]
+        except (OSError, ValueError):
+            pass                       # missing/corrupt/foreign -> rebuild
+        self._disk = data
+        return data
+
+    def _write_disk(self) -> None:
+        path = _cache_file(self.chip, self.backend)
+        payload = {"version": SCHEMA_VERSION, "chip": self.chip,
+                   "backend": self.backend, "plans": self._disk or {}}
+        try:
+            path.parent.mkdir(parents=True, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=str(path.parent),
+                                       prefix=path.name, suffix=".tmp")
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=0, sort_keys=True)
+            os.replace(tmp, path)
+        except OSError:
+            pass                       # read-only FS: memory layer still works
+
+    # -- public API ---------------------------------------------------------
+
+    def get(self, key: str) -> Optional[Dict]:
+        with self._lock:
+            if key in self._mem:
+                self._mem.move_to_end(key)
+                return self._mem[key]
+            entry = self._load_disk().get(key)
+            if entry is not None:
+                self._mem[key] = entry
+                while len(self._mem) > self.capacity:
+                    self._mem.popitem(last=False)
+            return entry
+
+    def put(self, key: str, entry: Dict, persist: bool = True) -> None:
+        with self._lock:
+            self._mem[key] = entry
+            self._mem.move_to_end(key)
+            while len(self._mem) > self.capacity:
+                self._mem.popitem(last=False)
+            if persist:
+                self._load_disk()[key] = entry
+                self._write_disk()
+
+    def __len__(self) -> int:
+        with self._lock:
+            disk = dict(self._load_disk())
+            disk.update(self._mem)
+            return len(disk)
+
+
+_CACHES: Dict[tuple, PlanCache] = {}
+_CACHES_LOCK = threading.Lock()
+
+
+def plan_cache(chip: str, backend: str) -> PlanCache:
+    """The process-wide cache for (chip, backend) — keyed also on the cache
+    directory so tests that repoint ``REPRO_TUNE_CACHE`` get a fresh one."""
+    key = (str(cache_dir()), chip, backend)
+    with _CACHES_LOCK:
+        if key not in _CACHES:
+            _CACHES[key] = PlanCache(chip, backend)
+        return _CACHES[key]
+
+
+def clear_plan_cache(disk: bool = False) -> None:
+    """Drop every in-memory cache; ``disk=True`` also deletes cache files."""
+    with _CACHES_LOCK:
+        _CACHES.clear()
+    if disk:
+        d = cache_dir()
+        if d.is_dir():
+            for f in d.glob(f"plans-v{SCHEMA_VERSION}-*.json"):
+                try:
+                    f.unlink()
+                except OSError:
+                    pass

@@ -1,0 +1,103 @@
+"""Analytic scoring — the predict tier of predict-measure-refine.
+
+Every score is a pure-Python float computed from a ``ChipSpec`` and the
+candidate's static shape: no jax, no clocks, no randomness, so the analytic
+tier returns byte-identical plans in every process ("Dissecting Tensor
+Cores" is the reason a *measure* tier exists at all: real MMA throughput
+diverges from these datasheet-derived numbers, so the analytic score ranks
+the search and measurement re-ranks the survivors).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.policy import TcecPolicy
+from repro.core.roofline import (ChipSpec, GRID_STEP_OVERHEAD_S,
+                                 LAUNCH_OVERHEAD_S, active_chip,
+                                 predict_matmul_time)
+from .space import AttentionCandidate, MatmulCandidate, PagedCandidate
+
+
+def _pad_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def score_matmul(m: int, n: int, k: int, batch: int, cand: MatmulCandidate,
+                 policy: TcecPolicy, rhs_batched: bool = True,
+                 chip: Optional[ChipSpec] = None) -> float:
+    """Predicted seconds for one matmul candidate (see
+    ``core.roofline.predict_matmul_time`` for the model)."""
+    return predict_matmul_time(
+        m, n, k, batch=batch, block=cand.block, variant=cand.variant,
+        passes=policy.passes, n_words=policy.n_words,
+        rhs_batched=rhs_batched, chip=chip or active_chip())
+
+
+def score_attention(b: int, h: int, sq: int, skv: int, d: int, dv: int,
+                    cand: AttentionCandidate, policy: TcecPolicy,
+                    causal: bool = True,
+                    chip: Optional[ChipSpec] = None) -> float:
+    """Predicted seconds for one flash-attention block shape.
+
+    QK^T and PV both run ``policy.passes`` MXU passes over the padded
+    (bq, bkv) grid; a causal mask skips ~half the kv blocks (the kernel
+    still visits them but the model credits the fully-masked early exit
+    at block granularity only when the whole block is above the diagonal).
+    HBM streams q once and k/v once per q-block.
+    """
+    chip = chip or active_chip()
+    sqp, skvp = _pad_up(sq, cand.block_q), _pad_up(skv, cand.block_kv)
+    n_qb, n_kb = sqp // cand.block_q, skvp // cand.block_kv
+    visit_frac = 1.0
+    if causal and sq == skv and n_qb > 1:
+        visit_frac = 0.5 + 0.5 / n_qb          # lower-triangular block visits
+    flops = 2.0 * b * h * sqp * skvp * (d + dv) * visit_frac
+    t_mxu = flops * policy.passes / (chip.matrix_tflops * 1e12)
+    hbm = 4.0 * b * h * (sqp * d + (skvp * (d + dv)) * n_qb * visit_frac
+                         + sqp * dv)
+    t_hbm = hbm / (chip.hbm_gbps * 1e9)
+    stage = 4.0 * b * h * visit_frac * n_qb * n_kb * (
+        cand.block_q * d + cand.block_kv * (d + dv)
+        + 2.0 * cand.block_q * cand.block_kv          # score tile in + p out
+        + 2.0 * cand.block_q * (dv + 2))              # (m, l, acc) carry
+    t_stage = stage / (chip.staging_gbps * 1e9)
+    steps = b * h * n_qb * n_kb
+    return max(t_mxu, t_hbm, t_stage) + LAUNCH_OVERHEAD_S \
+        + steps * GRID_STEP_OVERHEAD_S
+
+
+#: Per-DMA fixed cost of one paged-attention page fetch (descriptor setup,
+#: semaphore wait): the term that penalizes tiny pages.
+PAGE_DMA_OVERHEAD_S = 5e-7
+
+
+def score_paged(max_seq_len: int, kvh: int, d: int, dv: int,
+                cand: PagedCandidate, policy: TcecPolicy,
+                mean_seq_fill: float = 0.5,
+                chip: Optional[ChipSpec] = None) -> float:
+    """Predicted seconds of one decode step per request, plus the amortized
+    prefill cost of the chunk granularity.
+
+    Decode streams the request's live cache once (bf16 pages) and pays one
+    DMA per page — big pages amortize DMA overhead, small pages waste fewer
+    internal-fragmentation bytes (~half a page per request).  Prefill at
+    ``pages_per_step`` pages per chunk pays one launch per chunk but holds
+    chunk x cache working sets in staging.
+    """
+    chip = chip or active_chip()
+    seq = max(1.0, mean_seq_fill * max_seq_len)
+    npages = -(-seq // cand.page_size)
+    # Live bytes + the partially-filled tail page's dead bytes.
+    live = seq * kvh * (d + dv) * 2.0
+    waste = 0.5 * cand.page_size * kvh * (d + dv) * 2.0
+    t_decode = ((live + waste) / (chip.hbm_gbps * 1e9)
+                + npages * PAGE_DMA_OVERHEAD_S
+                + npages * policy.passes * GRID_STEP_OVERHEAD_S)
+    chunk = cand.page_size * cand.pages_per_step
+    n_chunks = -(-max_seq_len // chunk)
+    # Each chunk re-reads the growing prefix: ~half the cache on average.
+    prefill_bytes = n_chunks * 0.5 * live
+    t_prefill = (n_chunks * LAUNCH_OVERHEAD_S
+                 + prefill_bytes / (chip.hbm_gbps * 1e9))
+    # Decode dominates serving; weight prefill as an amortized minor term.
+    return t_decode + 0.1 * t_prefill / max(1, max_seq_len)

@@ -1,0 +1,147 @@
+"""Candidate enumeration for every tunable site.
+
+Each site kind exposes one generator returning a deterministic, analytically
+pre-filtered list of candidates (MXU-aligned, staging-feasible per
+``core.roofline.matmul_tile_footprint``).  Ordering is fixed (sorted tuples)
+so the analytic tier is reproducible across processes — a hard requirement
+for the CPU test paths.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core.policy import TcecPolicy
+from repro.core.roofline import (ChipSpec, LANE, SUBLANE, active_chip,
+                                 derive_block_caps, matmul_tile_footprint,
+                                 staging_budget_bytes)
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+# ---------------------------------------------------------------------------
+# Matmul: (bm, bn, bk) x variant
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MatmulCandidate:
+    block: Tuple[int, int, int]
+    variant: str                  # "fused" | "staged" | "staged_db" | "vpu"
+
+
+def _axis_options(dim: int, align: int, cap: int) -> List[int]:
+    """Aligned tile sizes for one axis: powers of two of the alignment up to
+    the cap, plus the exact padded dim when it is smaller than the cap
+    (less padding waste than the next power of two)."""
+    opts = set()
+    t = align
+    while t <= cap:
+        opts.add(t)
+        t *= 2
+    padded = _round_up(dim, align)
+    if padded <= cap:
+        opts.add(padded)
+    opts = {min(o, cap) for o in opts}
+    # Tiles beyond one padded dim only waste flops — drop them.
+    opts = {o for o in opts if o <= max(_round_up(dim, align), align)}
+    return sorted(opts)
+
+
+def matmul_variants(policy: TcecPolicy) -> Tuple[str, ...]:
+    """Variants whose arithmetic matches the policy.
+
+    vpu policies have exactly the plain-fp32 data flow; corrected/plain MXU
+    policies can run any of the three word data flows (identical split
+    arithmetic — the variants differ in *movement* only, so the tuner is
+    free to pick among them without changing results).
+    """
+    if policy.backend == "vpu":
+        return ("vpu",)
+    if policy.n_words == 1:
+        return ("fused",)         # one word: nothing to stage
+    return ("fused", "staged", "staged_db")
+
+
+def matmul_candidates(m: int, n: int, k: int, policy: TcecPolicy, *,
+                      chip: Optional[ChipSpec] = None,
+                      variants: Optional[Sequence[str]] = None
+                      ) -> List[MatmulCandidate]:
+    """Feasible (block, variant) candidates for an (m, k) @ (k, n) site."""
+    chip = chip or active_chip()
+    bm_cap, bn_cap, bk_cap = derive_block_caps(chip, policy.n_words)
+    budget = staging_budget_bytes(chip)
+    if variants is None:
+        variants = matmul_variants(policy)
+    bms = _axis_options(m, SUBLANE, bm_cap)
+    bns = _axis_options(n, LANE, bn_cap)
+    bks = _axis_options(k, LANE, bk_cap)
+    out = []
+    for variant in variants:
+        for bm in bms:
+            for bn in bns:
+                for bk in bks:
+                    fp = matmul_tile_footprint(bm, bn, bk, policy.n_words,
+                                               variant)
+                    if fp <= budget:
+                        out.append(MatmulCandidate((bm, bn, bk), variant))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Flash attention: (block_q, block_kv)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttentionCandidate:
+    block_q: int
+    block_kv: int
+
+
+def attention_candidates(sq: int, skv: int, d: int, dv: int, *,
+                         chip: Optional[ChipSpec] = None
+                         ) -> List[AttentionCandidate]:
+    """Feasible flash-attention block shapes.
+
+    Working set per grid step: the fp32 q/k/v streams (Mosaic-pipelined),
+    the (bq, bkv) score tile, and the (m, l, acc) online-softmax scratch
+    carried across kv blocks.
+    """
+    chip = chip or active_chip()
+    budget = staging_budget_bytes(chip)
+    out = []
+    for bq in _axis_options(sq, LANE, 512):
+        for bkv in _axis_options(skv, LANE, 1024):
+            fp = (2 * 4 * (bq * d + bkv * d + bkv * dv)   # pipelined q/k/v
+                  + 4 * bq * bkv                          # score tile
+                  + 4 * (bq * dv + 2 * bq))               # acc + (m, l)
+            if fp <= budget:
+                out.append(AttentionCandidate(bq, bkv))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Paged serving: (page_size, pages_per_step)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PagedCandidate:
+    page_size: int
+    pages_per_step: int           # prefill granularity: pages per chunk
+
+
+PAGE_SIZES = (8, 16, 32, 64, 128)
+PAGES_PER_STEP = (1, 2, 4, 8)
+
+
+def paged_candidates(max_seq_len: int) -> List[PagedCandidate]:
+    """Page sizes no larger than the sequence bound, crossed with prefill
+    pages-per-step granularities."""
+    out = []
+    for ps in PAGE_SIZES:
+        if ps > max(max_seq_len, PAGE_SIZES[0]):
+            continue
+        for pps in PAGES_PER_STEP:
+            out.append(PagedCandidate(ps, pps))
+    return out

@@ -1,0 +1,294 @@
+"""Plan search: analytic predict -> optional measure -> persist.
+
+For a ``(shape, policy, backend, site)`` key the tuner
+
+  1. enumerates feasible candidates (``space``),
+  2. ranks them with the deterministic analytic model (``model``),
+  3. in ``measure`` mode, benchmarks the top-K survivors in-process and
+     persists the winner in the on-disk plan cache (``cache``) so jitted
+     launchers stay warm across processes.
+
+Modes (``REPRO_TUNE`` env var, overridable with the ``tune_mode`` context
+manager):
+
+  * ``off``      — tuner returns ``None`` everywhere; callers fall back to
+                   the hardcoded defaults (pre-tuner behavior, bit-exact).
+  * ``analytic`` — the default.  A *pure function* of (shape, policy, chip):
+                   no clocks, no disk reads, identical plans in every
+                   process — the tier CPU test paths run.
+  * ``measure``  — analytic ranking refined by wall-clock measurement of the
+                   top-K; winners are read from / persisted to the disk
+                   cache.  ("Dissecting Tensor Cores": measured MMA
+                   throughput diverges from datasheet peaks enough to
+                   misrank close candidates — measurement is the refinement,
+                   not the search.)
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import os
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.policy import TcecPolicy, get_policy
+from repro.core.roofline import active_chip
+from . import model, space
+from .cache import plan_cache
+
+__all__ = [
+    "MatmulPlan", "AttentionPlan", "PagedPlan",
+    "matmul_plan", "attention_plan", "paged_plan",
+    "mode", "tune_mode", "MODES",
+]
+
+MODES = ("off", "analytic", "measure")
+
+_MODE_OVERRIDE: contextvars.ContextVar[Optional[str]] = \
+    contextvars.ContextVar("repro_tune_mode", default=None)
+
+
+def mode() -> str:
+    """The active tuner mode (context override > ``REPRO_TUNE`` > analytic)."""
+    override = _MODE_OVERRIDE.get()
+    if override is not None:
+        return override
+    env = os.environ.get("REPRO_TUNE", "analytic").lower()
+    if env not in MODES:
+        raise ValueError(f"REPRO_TUNE={env!r} is not one of {MODES}")
+    return env
+
+
+@contextlib.contextmanager
+def tune_mode(value: str):
+    """Scoped mode override: ``with tune_mode("off"): ...``."""
+    if value not in MODES:
+        raise ValueError(f"tune mode must be one of {MODES}, got {value!r}")
+    token = _MODE_OVERRIDE.set(value)
+    try:
+        yield
+    finally:
+        _MODE_OVERRIDE.reset(token)
+
+
+def _topk() -> int:
+    return max(1, int(os.environ.get("REPRO_TUNE_TOPK", "4")))
+
+
+def _policy_key(pol: TcecPolicy) -> str:
+    return f"p{pol.passes}-{pol.backend}-{pol.fragment_gen}-{pol.kernel}"
+
+
+def _jax_backend() -> str:
+    import jax
+    return jax.default_backend()
+
+
+# ---------------------------------------------------------------------------
+# Plan records
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MatmulPlan:
+    block: Tuple[int, int, int]
+    variant: str
+    predicted_us: float
+    measured_us: Optional[float] = None
+    source: str = "analytic"       # "analytic" | "measured"
+
+    def to_dict(self) -> Dict:
+        return {"block": list(self.block), "variant": self.variant,
+                "predicted_us": self.predicted_us,
+                "measured_us": self.measured_us, "source": self.source}
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "MatmulPlan":
+        return cls(tuple(d["block"]), d["variant"], d["predicted_us"],
+                   d.get("measured_us"), d.get("source", "analytic"))
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionPlan:
+    block_q: int
+    block_kv: int
+    predicted_us: float
+    measured_us: Optional[float] = None
+    source: str = "analytic"
+
+    def to_dict(self) -> Dict:
+        return {"block_q": self.block_q, "block_kv": self.block_kv,
+                "predicted_us": self.predicted_us,
+                "measured_us": self.measured_us, "source": self.source}
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "AttentionPlan":
+        return cls(d["block_q"], d["block_kv"], d["predicted_us"],
+                   d.get("measured_us"), d.get("source", "analytic"))
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedPlan:
+    page_size: int
+    pages_per_step: int
+    predicted_us: float
+    source: str = "analytic"
+
+    def to_dict(self) -> Dict:
+        return {"page_size": self.page_size,
+                "pages_per_step": self.pages_per_step,
+                "predicted_us": self.predicted_us, "source": self.source}
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "PagedPlan":
+        return cls(d["page_size"], d["pages_per_step"], d["predicted_us"],
+                   d.get("source", "analytic"))
+
+
+# ---------------------------------------------------------------------------
+# In-process measurement (the refine tier)
+# ---------------------------------------------------------------------------
+
+def _time_call(fn, *args, repeats: int = 3) -> float:
+    """Best-of-N wall time in microseconds (first call compiles: discarded)."""
+    import jax
+    jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def _measure_matmul(m: int, n: int, k: int, batch: int,
+                    cand: space.MatmulCandidate, pol: TcecPolicy) -> float:
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import tcec_matmul as km
+    interpret = jax.default_backend() != "tpu"
+    key = jax.random.PRNGKey(0)
+    shape_a = (m, k) if batch == 1 else (batch, m, k)
+    a = jax.random.normal(key, shape_a, jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (k, n), jnp.float32)
+    fn = {"fused": km.tcec_matmul_pallas, "vpu": km.tcec_matmul_pallas,
+          "staged": km.tcec_matmul_staged,
+          "staged_db": km.tcec_matmul_staged_db}[cand.variant]
+    return _time_call(lambda: fn(a, b, pol, cand.block, interpret))
+
+
+def _measure_attention(b: int, h: int, sq: int, skv: int, d: int, dv: int,
+                       cand: space.AttentionCandidate, pol: TcecPolicy,
+                       causal: bool) -> float:
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.flash_attention import flash_attention
+    interpret = jax.default_backend() != "tpu"
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(kq, (b, h, sq, d), jnp.float32)
+    k = jax.random.normal(kk, (b, h, skv, d), jnp.float32)
+    v = jax.random.normal(kv, (b, h, skv, dv), jnp.float32)
+    return _time_call(lambda: flash_attention(
+        q, k, v, causal=causal, policy=pol, block_q=cand.block_q,
+        block_k=cand.block_kv, interpret=interpret))
+
+
+# ---------------------------------------------------------------------------
+# The search driver
+# ---------------------------------------------------------------------------
+
+def _search(key: str, scored: List[Tuple[float, object]], measure_fn,
+            make_plan, from_dict):
+    """Shared predict->measure->persist driver.
+
+    ``scored`` is [(predicted_seconds, candidate)]; ties break on the
+    candidate's (sorted-dataclass) repr so ranking is total and
+    process-independent.
+    """
+    scored = sorted(scored, key=lambda sc: (sc[0], repr(sc[1])))
+    if not scored:
+        return None
+    if mode() == "analytic":
+        pred, cand = scored[0]
+        return make_plan(cand, pred * 1e6, None, "analytic")
+    cache = plan_cache(active_chip().name, _jax_backend())
+    hit = cache.get(key)
+    if hit is not None and hit.get("source") == "measured":
+        return from_dict(hit)
+    best_plan, best_t = None, float("inf")
+    for pred, cand in scored[:_topk()]:
+        t_us = measure_fn(cand)
+        if t_us < best_t:
+            best_t = t_us
+            best_plan = make_plan(cand, pred * 1e6, t_us, "measured")
+    cache.put(key, best_plan.to_dict(), persist=True)
+    return best_plan
+
+
+def matmul_plan(m: int, n: int, k: int, *,
+                policy: TcecPolicy | str,
+                batch: int = 1, rhs_batched: bool = True,
+                site: Optional[str] = None,
+                variants: Optional[Sequence[str]] = None
+                ) -> Optional[MatmulPlan]:
+    """The plan for one matmul site, or ``None`` when tuning is off.
+
+    ``variants`` restricts the search space (the einsum frontend passes
+    ``("fused",)`` — its kernel is the on-the-fly data flow; the standalone
+    ``tcec_matmul_auto`` searches all of them).
+    """
+    if mode() == "off":
+        return None
+    pol = get_policy(policy)
+    cands = space.matmul_candidates(m, n, k, pol, variants=variants)
+    scored = [(model.score_matmul(m, n, k, batch, c, pol, rhs_batched), c)
+              for c in cands]
+    key = (f"matmul|{site or '-'}|b{batch}|m{m}|n{n}|k{k}"
+           f"|rb{int(rhs_batched)}|{_policy_key(pol)}"
+           f"|v{','.join(variants or space.matmul_variants(pol))}")
+    return _search(
+        key, scored,
+        lambda c: _measure_matmul(m, n, k, batch, c, pol),
+        lambda c, p, t, src: MatmulPlan(c.block, c.variant, p, t, src),
+        MatmulPlan.from_dict)
+
+
+def attention_plan(sq: int, skv: int, d: int, dv: int, *,
+                   policy: TcecPolicy | str, b: int = 1, h: int = 1,
+                   causal: bool = True,
+                   site: str = "attn") -> Optional[AttentionPlan]:
+    """The flash-attention block plan, or ``None`` when tuning is off."""
+    if mode() == "off":
+        return None
+    pol = get_policy(policy)
+    cands = space.attention_candidates(sq, skv, d, dv)
+    scored = [(model.score_attention(b, h, sq, skv, d, dv, c, pol, causal), c)
+              for c in cands]
+    key = (f"attn|{site}|b{b}|h{h}|sq{sq}|skv{skv}|d{d}|dv{dv}"
+           f"|c{int(causal)}|{_policy_key(pol)}")
+    return _search(
+        key, scored,
+        lambda c: _measure_attention(b, h, sq, skv, d, dv, c, pol, causal),
+        lambda c, p, t, src: AttentionPlan(c.block_q, c.block_kv, p, t, src),
+        AttentionPlan.from_dict)
+
+
+def paged_plan(max_seq_len: int, kvh: int, d: int, dv: int, *,
+               policy: TcecPolicy | str,
+               site: str = "attn") -> Optional[PagedPlan]:
+    """Page-size / pages-per-step plan for the paged serving engine, or
+    ``None`` when tuning is off.  Analytic in every mode: measuring engine
+    throughput in-process would drag model weights and a scheduler into the
+    tuner — ``benchmarks/serving_throughput.py`` owns that measurement."""
+    if mode() == "off":
+        return None
+    pol = get_policy(policy)
+    best = None
+    for c in space.paged_candidates(max_seq_len):
+        t = model.score_paged(max_seq_len, kvh, d, dv, c, pol)
+        if best is None or (t, repr(c)) < best[:2]:
+            best = (t, repr(c), c)
+    if best is None:
+        return None
+    t, _, c = best
+    return PagedPlan(c.page_size, c.pages_per_step, t * 1e6, "analytic")

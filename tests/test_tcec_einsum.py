@@ -421,3 +421,58 @@ def test_frontend_rejects_bad_equations():
     with pytest.raises(ValueError, match="residual shape"):
         tcec.einsum("mk,kn->mn", a, b,
                     epilogue=tcec.Epilogue(residual=_arr(3, 3)))
+
+
+# ---------------------------------------------------------------------------
+# Autotuner integration (acceptance): tuner-chosen blocks reach the kernel
+# through the frontend, differ from the hardcoded defaults for at least one
+# shape, and change nothing numerically.
+# ---------------------------------------------------------------------------
+
+def test_tuned_blocks_reach_kernel_and_preserve_bits():
+    """For k=520 the tuner picks bk=128 (vs the default chooser's 512):
+    trace_plans shows the block on the PlanRecord, and — with integer-valued
+    inputs, exact in the bf16 words and in fp32 sums — results are
+    bitwise-identical to the fixed-block path for every bf16 policy."""
+    from repro import tune
+    from repro.kernels.tcec_matmul import default_blocks
+
+    rng = np.random.default_rng(3)
+    a = jnp.asarray(rng.integers(-8, 8, (4, 64, 520)), jnp.float32)
+    b = jnp.asarray(rng.integers(-8, 8, (520, 128)), jnp.float32)
+
+    for name in ("bf16x3_pallas", "bf16x6_pallas"):
+        with tune.tune_mode("analytic"), tcec.trace_plans() as log:
+            tuned = tcec.einsum("bmk,kn->bmn", a, b, policy=name,
+                                precision="strict")
+        (rec,) = log
+        assert rec.backend == "pallas"
+        assert rec.block is not None and rec.variant == "fused"
+        assert rec.block != default_blocks(4 * 64, 128, 520), \
+            "tuner plan must differ from the hardcoded default for k=520"
+
+        with tune.tune_mode("off"), tcec.trace_plans() as log_off:
+            fixed = tcec.einsum("bmk,kn->bmn", a, b, policy=name,
+                                precision="strict")
+        (rec_off,) = log_off
+        assert rec_off.block is None and rec_off.variant is None
+        np.testing.assert_array_equal(np.asarray(tuned), np.asarray(fixed))
+
+
+def test_tuned_blocks_off_mode_is_default_path():
+    """REPRO_TUNE=off spec carries no block — byte-for-byte the pre-tuner
+    jit key (the escape hatch the issue requires)."""
+    from repro import tune
+    a, b = _arr(16, 64), _arr(64, 128)
+    with tune.tune_mode("off"), tcec.trace_plans() as log:
+        tcec.einsum("mk,kn->mn", a, b, policy="bf16x6_pallas")
+    assert log[0].block is None
+
+
+def test_tuner_feeds_xla_sites_nothing():
+    """XLA-planned sites bypass the tuner entirely (no spurious plans)."""
+    from repro import tune
+    a, b = _arr(16, 64), _arr(64, 128)
+    with tune.tune_mode("analytic"), tcec.trace_plans() as log:
+        tcec.einsum("mk,kn->mn", a, b, policy="bf16x6")    # xla policy
+    assert log[0].backend == "xla" and log[0].block is None
