@@ -71,6 +71,9 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="chunk long prompts to this many tokens per "
                          "engine step (paged mode)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share cached prompt-prefix pages across requests "
+                         "and skip their prefill (paged mode)")
     args = ap.parse_args()
     if args.kernel and not args.policy:
         ap.error("--kernel requires --policy (the kernel override applies "
@@ -113,15 +116,24 @@ def main():
                            args.prompt_len + 1, args.batch)
         prompts = [list(np.asarray(tokens[i, :lens[i]]))
                    for i in range(args.batch)]
+        if args.prefix_cache:
+            # shared "system prompt" ahead of each tail: the cache's target
+            system = list(np.asarray(tokens[0, :max(1, args.prompt_len // 2)]))
+            prompts = [system + p for p in prompts]
+        stats = {}
         with mesh, activation_sharding(mesh), scope:
             out, tps = generate_paged(
                 cfg, params, prompts, args.gen, page_size=args.page_size,
                 max_concurrency=args.max_concurrency,
-                prefill_chunk=args.prefill_chunk)
+                prefill_chunk=args.prefill_chunk,
+                prefix_cache=args.prefix_cache, stats=stats)
         print(f"served {len(out)} requests (prompt lens "
               f"{[int(x) for x in lens]}) at "
               f"{tps:.1f} tok/s on {args.max_concurrency} slots, "
               f"{args.page_size}-token pages")
+        if args.prefix_cache:
+            print(f"prefix cache: {stats['hit_rate']:.1%} hit rate, "
+                  f"{stats['cached_tokens']} prompt tokens skipped")
         print("first stream:", out[0][:16])
         return
     with mesh, activation_sharding(mesh), scope:

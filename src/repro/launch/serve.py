@@ -119,22 +119,30 @@ def generate(cfg, params, tokens, max_len, gen_steps, batch_extras=None,
 
 
 def generate_paged(cfg, params, prompts, gen_steps, *, page_size=16,
-                   max_concurrency=4, prefill_chunk=None):
+                   max_concurrency=4, prefill_chunk=None,
+                   prefix_cache=False, stats=None):
     """Continuous-batching generation over paged caches.
 
     ``prompts`` is a list of token lists (mixed lengths welcome — that is
-    the point).  Returns ({rid: tokens}, tokens/sec)."""
+    the point).  ``prefix_cache=True`` shares cached prompt-prefix pages
+    across requests (refcounted, copy-on-write boundary pages) and skips
+    their prefill; pass a dict as ``stats`` to receive the scheduler's
+    cache counters (``hit_rate``, ``cached_tokens``, ...).  Returns
+    ({rid: tokens}, tokens/sec)."""
     from repro.serving import PagedServingEngine
     max_seq = max(len(p) for p in prompts) + gen_steps + 1
     eng = PagedServingEngine(cfg, params, page_size=page_size,
                              max_concurrency=max_concurrency,
                              max_seq_len=max_seq,
-                             prefill_chunk=prefill_chunk)
+                             prefill_chunk=prefill_chunk,
+                             prefix_cache=prefix_cache)
     for pr in prompts:
         eng.submit(pr, gen_steps)
     t0 = time.time()
     out = eng.run()
     dt = time.time() - t0
+    if stats is not None:
+        stats.update(eng.scheduler.prefix_stats)
     n_tok = sum(len(v) for v in out.values())
     return out, n_tok / dt
 
@@ -159,6 +167,12 @@ def main(argv=None):
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="chunk long prefills to this many tokens per "
                          "engine step (paged mode, attention archs)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share cached prompt-prefix pages across requests "
+                         "(paged mode, attention archs): admission installs "
+                         "matching pages by reference, clones only the "
+                         "copy-on-write boundary page, and prefill starts "
+                         "at the first uncached position")
     add_policy_args(ap)
     args = ap.parse_args(argv)
 
@@ -180,14 +194,26 @@ def main(argv=None):
                            args.batch)
         prompts = [list(np.asarray(tokens[i, :lens[i]])) for i in
                    range(args.batch)]
+        if args.prefix_cache:
+            # production-shaped stream: one shared "system prompt" ahead of
+            # each request's own tail, so the cache has something to hit
+            system = list(np.asarray(tokens[0, :max(1, args.prompt_len // 2)]))
+            prompts = [system + p for p in prompts]
+        stats = {}
         with policy_scope_from_args(args), mesh, activation_sharding(mesh):
             out, tps = generate_paged(
                 cfg, params, prompts, args.gen, page_size=args.page_size,
                 max_concurrency=args.max_concurrency,
-                prefill_chunk=args.prefill_chunk)
+                prefill_chunk=args.prefill_chunk,
+                prefix_cache=args.prefix_cache, stats=stats)
         print(f"generated {sum(len(v) for v in out.values())} tokens over "
               f"{len(out)} requests at {tps:.1f} tok/s (paged, "
               f"page={args.page_size}, slots={args.max_concurrency})")
+        if args.prefix_cache:
+            print(f"prefix cache: hit rate {stats['hit_rate']:.1%} "
+                  f"({stats['cached_tokens']}/{stats['prompt_tokens']} prompt "
+                  f"tokens skipped, {stats['shared_pages']} pages shared, "
+                  f"{stats['boundary_copies']} COW boundary copies)")
         print("sample:", out[0][:16])
         return out
 

@@ -281,7 +281,8 @@ def decode_step(params, token: jnp.ndarray, caches: Any,
 def decode_step_paged(params, tokens: jnp.ndarray, caches: Any,
                       block_table: jnp.ndarray, seq_lens: jnp.ndarray,
                       cfg: ArchConfig,
-                      active: Optional[jnp.ndarray] = None
+                      active: Optional[jnp.ndarray] = None,
+                      logit_index: Optional[jnp.ndarray] = None
                       ) -> Tuple[jnp.ndarray, Any]:
     """One continuous-batching step against *paged* caches.
 
@@ -295,8 +296,11 @@ def decode_step_paged(params, tokens: jnp.ndarray, caches: Any,
     one batch.  ``active (b,)`` bool marks the slots actually decoding this
     tick: idle lanes' paged KV writes are absorbed/overwritten harmlessly,
     but *recurrent* per-slot states are accumulating, so inactive slots
-    keep their old state.  Returns (last-position logits ``(b, v)``,
-    updated caches).
+    keep their old state.  ``logit_index (b,)`` int32 selects which chunk
+    position's logits to return (right-padded prefill chunks pass the last
+    *real* position; padded tail rows are causally inert for earlier rows
+    but their logits are garbage); ``None`` means the last position.
+    Returns (selected-position logits ``(b, v)``, updated caches).
     """
     b, s = tokens.shape
     with policy_defaults(cfg.site_policies()):
@@ -308,7 +312,11 @@ def decode_step_paged(params, tokens: jnp.ndarray, caches: Any,
                                     block_table=block_table,
                                     seq_lens=seq_lens, active=active)
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-        logits = _logits(params, x[:, -1:], cfg)[:, 0]
+        if logit_index is None:
+            sel = x[:, -1:]
+        else:
+            sel = x[jnp.arange(b), logit_index.astype(jnp.int32)][:, None]
+        logits = _logits(params, sel, cfg)[:, 0]
     return logits, new_caches
 
 

@@ -11,22 +11,32 @@ reaches paged decode exactly like prefill), and a pure-Python
 continuous-batching scheduler (``repro.serving.scheduler``) admits, chunks
 and evicts requests against a page allocator.  ``PagedServingEngine``
 (``repro.serving.engine``) glues the three to the model zoo.
+
+Prefix caching (``repro.serving.prefix_index``) extends the pool with
+refcounted page sharing: a radix index over page-granularity token spans
+lets admission install cached prefix pages by reference, skip their
+prefill entirely, and clone only the copy-on-write boundary page where a
+prompt diverges inside a cached page.
 """
-from .paged_cache import (append_pages, gather_pages, init_pool,
+from .paged_cache import (append_pages, copy_page, gather_pages, init_pool,
                           pages_needed, NULL_PAGE)
 from .paged_attention import (paged_decode_attention,
                               paged_decode_attention_pallas,
                               paged_decode_attention_xla,
                               paged_mla_decode_attention,
                               paged_prefill_attention)
-from .scheduler import PageAllocator, Request, Scheduler, StepPlan
+from .prefix_index import NO_MATCH, PrefixIndex, PrefixMatch
+from .scheduler import (PageAllocator, PrefillChunk, Request, Scheduler,
+                        StepPlan)
 from .engine import PagedServingEngine
 
 __all__ = [
-    "append_pages", "gather_pages", "init_pool", "pages_needed", "NULL_PAGE",
+    "append_pages", "copy_page", "gather_pages", "init_pool", "pages_needed",
+    "NULL_PAGE",
     "paged_decode_attention", "paged_decode_attention_pallas",
     "paged_decode_attention_xla", "paged_mla_decode_attention",
     "paged_prefill_attention",
-    "PageAllocator", "Request", "Scheduler", "StepPlan",
+    "NO_MATCH", "PrefixIndex", "PrefixMatch",
+    "PageAllocator", "PrefillChunk", "Request", "Scheduler", "StepPlan",
     "PagedServingEngine",
 ]

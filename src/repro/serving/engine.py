@@ -41,7 +41,8 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.models import (decode_step_paged, init_paged_decode_caches,
                           prefill)
-from .paged_cache import NULL_PAGE, pages_needed, write_prefill_prefix
+from .paged_cache import (NULL_PAGE, copy_page, pages_needed,
+                          write_prefill_prefix)
 from .scheduler import Request, Scheduler, StepPlan
 
 __all__ = ["PagedServingEngine"]
@@ -64,6 +65,18 @@ class PagedServingEngine:
     pages-per-step) from the paged-serving cost model over the engine's
     ``"attn"`` policy; with ``REPRO_TUNE=off`` the pre-tuner defaults
     (page_size=16, single-shot prefill) apply.
+
+    ``prefix_cache=True`` turns on refcounted prefix sharing over the page
+    pool (attention/MLA mixers only — a shared KV page cannot capture
+    accumulating recurrent state): admission installs cached pages into the
+    slot's block-table row by reference, clones the copy-on-write boundary
+    page where a prompt diverges inside a cached page, and prefill starts
+    at the first uncached position.  All prefill then runs through the
+    paged multi-token path (never ``model.prefill``, which cannot start
+    mid-prompt), so cached and uncached requests share one code path —
+    sharing changes which physical page a read resolves to, never
+    arithmetic, keeping token streams bitwise-identical per policy to the
+    uncached engine.
     """
 
     def __init__(self, cfg: ArchConfig, params, *,
@@ -71,6 +84,7 @@ class PagedServingEngine:
                  max_concurrency: int = 4, max_seq_len: int = 256,
                  num_pages: Optional[int] = None,
                  prefill_chunk=None,
+                 prefix_cache: bool = False,
                  eos_id: Optional[int] = None):
         tuned = None
         if page_size is None or prefill_chunk == "auto":
@@ -83,21 +97,23 @@ class PagedServingEngine:
         if cfg.encoder_layers or cfg.vision_tokens:
             raise NotImplementedError(
                 "paged serving covers decoder-only architectures")
-        if prefill_chunk is not None and any(
+        if (prefill_chunk is not None or prefix_cache) and any(
                 spec.mixer not in _SEQ_MIXERS for spec in cfg.pattern):
             raise NotImplementedError(
-                "chunked prefill needs attention/MLA mixers only "
-                f"(pattern has {[s.mixer for s in cfg.pattern]})")
+                "chunked prefill and prefix caching need attention/MLA "
+                f"mixers only (pattern has {[s.mixer for s in cfg.pattern]})")
         self.cfg = cfg
         self.params = params
         self.page_size = page_size
+        self.prefix_cache = prefix_cache
         self.eos_id = eos_id
         self.npages_per_seq = pages_needed(max_seq_len, page_size)
         if num_pages is None:
             num_pages = 1 + max_concurrency * self.npages_per_seq
         self.scheduler = Scheduler(num_pages, page_size, max_concurrency,
                                    self.npages_per_seq,
-                                   prefill_chunk=prefill_chunk)
+                                   prefill_chunk=prefill_chunk,
+                                   prefix_cache=prefix_cache)
         self.caches = init_paged_decode_caches(cfg, max_concurrency,
                                                num_pages, page_size)
         self.block_table = np.full((max_concurrency, self.npages_per_seq),
@@ -107,11 +123,12 @@ class PagedServingEngine:
         self._next_rid = 0
 
         self._decode_fn = jax.jit(
-            lambda p, t, c, bt, sl, act: decode_step_paged(
-                p, t, c, bt, sl, cfg, active=act),
+            lambda p, t, c, bt, sl, act, li: decode_step_paged(
+                p, t, c, bt, sl, cfg, active=act, logit_index=li),
             donate_argnums=(2,))
         self._prefill_fn = jax.jit(functools.partial(prefill, cfg=cfg))
         self._write_fn = jax.jit(write_prefill_prefix, donate_argnums=(0,))
+        self._copy_fn = jax.jit(copy_page, donate_argnums=(0,))
 
     @staticmethod
     def _tuned_plan(cfg: ArchConfig, max_seq_len: int):
@@ -152,15 +169,24 @@ class PagedServingEngine:
             self.block_table[slot] = NULL_PAGE
             self.seq_lens[slot] = 0
         for rid, slot in plan.admit:
+            st = sched.active[rid]
             row = sched.block_row(rid)
             self.block_table[slot] = NULL_PAGE
             self.block_table[slot, :len(row)] = row
-            self.seq_lens[slot] = 0
+            if st.boundary_src is not None:
+                # COW boundary: clone the cached page holding the span this
+                # request diverges inside into its first private page; its
+                # own tokens overwrite the clone from offset
+                # cached_upto % page_size on.
+                self.caches = self._copy_fn(
+                    self.caches, jnp.int32(st.boundary_src),
+                    jnp.int32(row[st.n_shared]))
+            self.seq_lens[slot] = st.cached_upto
 
         for chunk in plan.prefill:
             st = sched.active[chunk.rid]
             tokens = list(st.req.prompt[chunk.start:chunk.end])
-            if sched.prefill_chunk is None:
+            if sched.prefill_chunk is None and not self.prefix_cache:
                 # single-shot: the standard prefill (same numerics as the
                 # dense serve path), scattered into this request's pages
                 logits, pf = self._prefill_fn(
@@ -170,12 +196,24 @@ class PagedServingEngine:
                     jnp.asarray(self.block_table[chunk.slot]),
                     jnp.int32(chunk.slot))
             else:
-                # chunked: the chunk rides the paged multi-token step
+                # chunked (or prefix-cached, which must be able to start
+                # mid-prompt): the chunk rides the paged multi-token step.
+                # The tail chunk is right-padded to prefill_chunk so every
+                # chunk shares ONE compiled shape — unpadded, each distinct
+                # final-chunk length re-traced the jitted step.  Padding is
+                # causally inert for the real rows; pad K/V appends land
+                # past the real positions and are overwritten (or
+                # scratch-absorbed past the block row) before any read.
+                real = len(tokens)
+                if sched.prefill_chunk is not None \
+                        and real < sched.prefill_chunk:
+                    tokens = tokens + [0] * (sched.prefill_chunk - real)
                 logits, self.caches = self._decode_fn(
                     self.params, jnp.asarray([tokens], jnp.int32),
                     self.caches,
                     jnp.asarray(self.block_table[chunk.slot][None]),
-                    jnp.asarray(self.seq_lens[chunk.slot][None]), None)
+                    jnp.asarray(self.seq_lens[chunk.slot][None]), None,
+                    jnp.asarray([real - 1], jnp.int32))
             self.seq_lens[chunk.slot] = chunk.end
             if chunk.last:
                 # only the final chunk's logits are consumed (one host sync)
@@ -193,7 +231,7 @@ class PagedServingEngine:
             logits, self.caches = self._decode_fn(
                 self.params, toks, self.caches,
                 jnp.asarray(self.block_table), jnp.asarray(self.seq_lens),
-                jnp.asarray(active))
+                jnp.asarray(active), None)
             next_tok = np.asarray(jnp.argmax(logits, axis=-1))
             for rid, slot in plan.decode:
                 self.seq_lens[slot] += 1

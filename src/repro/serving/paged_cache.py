@@ -51,12 +51,22 @@ def append_pages(pool: jnp.ndarray, new: jnp.ndarray,
     offset).  Returns the updated pool.  Requests whose row should not
     grow (idle slots) must point at ``NULL_PAGE`` so their write is
     absorbed by the scratch page.
+
+    Contract: a logical position past the block-table row (``pos //
+    page_size >= npages``) is redirected to the scratch page, NOT clamped.
+    Unguarded, JAX's scatter clamp would silently alias such writes onto
+    the row's *last* physical page and corrupt it — with copy-on-write
+    prefix sharing that last page may even be another request's boundary
+    copy.  Right-padded prefill tail chunks rely on this redirect.
     """
     b, s = new.shape[0], new.shape[1]
     page_size = pool.shape[1]
+    npages = block_table.shape[1]
     pos = seq_lens[:, None].astype(jnp.int32) + jnp.arange(s, dtype=jnp.int32)
     rows = jnp.arange(b, dtype=jnp.int32)[:, None]
-    phys = block_table[rows, pos // page_size]          # (b, s) physical page
+    logical = pos // page_size                          # (b, s) logical page
+    phys = block_table[rows, jnp.clip(logical, 0, npages - 1)]
+    phys = jnp.where(logical < npages, phys, NULL_PAGE)
     off = pos % page_size
     return pool.at[phys, off].set(new.astype(pool.dtype))
 
@@ -71,12 +81,17 @@ def append_prefix_pages(pool: jnp.ndarray, prefix: jnp.ndarray,
     ``stacked=False`` the pool is ``(P, page, *tail)`` and the prefix
     ``(s, *tail)``; with ``stacked=True`` both carry a leading layer-group
     axis — pool ``(g, P, page, *tail)``, prefix ``(g, s, *tail)`` (the
-    layout ``model.init_paged_decode_caches`` produces).
+    layout ``model.init_paged_decode_caches`` produces).  Positions past
+    the block row go to the scratch page (same contract as
+    ``append_pages``).
     """
     s = prefix.shape[1] if stacked else prefix.shape[0]
     page_size = pool.shape[2] if stacked else pool.shape[1]
+    npages = block_row.shape[0]
     pos = jnp.arange(s, dtype=jnp.int32)
-    phys = block_row[pos // page_size]
+    logical = pos // page_size
+    phys = block_row[jnp.clip(logical, 0, npages - 1)]
+    phys = jnp.where(logical < npages, phys, NULL_PAGE)
     off = pos % page_size
     if stacked:
         return pool.at[:, phys, off].set(prefix.astype(pool.dtype))
@@ -109,6 +124,31 @@ def write_prefill_prefix(paged_caches, prefill_caches, block_row, slot):
                     val[:, 0].astype(pg[key].dtype))
         return out
     return rec(paged_caches, prefill_caches)
+
+
+def copy_page(paged_caches, src, dst):
+    """Clone physical page ``src`` into ``dst`` across every *pool* leaf of
+    the group-stacked paged cache tree (``(g, P, page, *tail)`` leaves named
+    by ``PAGED_KEYS``); per-slot recurrent-state leaves pass through.
+
+    This is the copy-on-write boundary-page copy: a request whose prompt
+    diverges inside a cached, partially-filled page receives a private
+    clone of just that page and writes its divergent tokens there, leaving
+    the shared source read-only.
+    """
+    pool_keys = frozenset(PAGED_KEYS.values())
+
+    def rec(node):
+        out = {}
+        for key, val in node.items():
+            if isinstance(val, dict):
+                out[key] = rec(val)
+            elif key in pool_keys:
+                out[key] = val.at[:, dst].set(val[:, src])
+            else:
+                out[key] = val
+        return out
+    return rec(paged_caches)
 
 
 def gather_pages(pool: jnp.ndarray, block_table: jnp.ndarray) -> jnp.ndarray:

@@ -68,6 +68,66 @@ def test_append_gather_roundtrip_across_page_boundary():
     assert float(jnp.abs(got[0, :6]).max()) == 0.0
 
 
+def test_append_past_block_row_redirects_to_scratch_not_last_page():
+    """Regression: a logical position past the block-table row must go to
+    the scratch page.  JAX's scatter clamp would otherwise silently alias
+    the write onto the row's LAST physical page — which, under
+    copy-on-write prefix sharing, may be a page another request reads."""
+    rng = np.random.default_rng(9)
+    pool = jnp.asarray(rng.standard_normal((POOL, PAGE, 1, 2)), jnp.float32)
+    before = np.asarray(pool)
+    bt = jnp.asarray([[3, 7]], np.int32)         # row holds 2 logical pages
+    # append 4 tokens starting at 14: positions 14,15 hit page 7, 16,17
+    # fall PAST the row (logical page 2 of a 2-page table)
+    new = jnp.full((1, 4, 1, 2), 5.0, jnp.float32)
+    out = np.asarray(append_pages(pool, new, bt, jnp.asarray([14], np.int32)))
+    np.testing.assert_array_equal(out[7, 6:], np.asarray(new[0, :2]))
+    np.testing.assert_array_equal(out[7, :6], before[7, :6])   # intact
+    np.testing.assert_array_equal(out[3], before[3])           # untouched
+    # overflow landed on the scratch page, nowhere else
+    changed = [p for p in range(1, POOL)
+               if not np.array_equal(out[p], before[p])]
+    assert changed == [7]
+    assert np.array_equal(out[NULL_PAGE, 0], np.asarray(new[0, 2]))
+
+
+def test_append_prefix_past_block_row_redirects_to_scratch():
+    from repro.serving.paged_cache import append_prefix_pages
+    rng = np.random.default_rng(10)
+    pool = jnp.asarray(rng.standard_normal((POOL, PAGE, 2)), jnp.float32)
+    before = np.asarray(pool)
+    row = jnp.asarray([4, 6], np.int32)          # 2 pages = 16 positions
+    prefix = jnp.full((PAGE * 2 + 3, 2), 2.0, jnp.float32)
+    out = np.asarray(append_prefix_pages(pool, prefix, row))
+    np.testing.assert_array_equal(out[4], np.full((PAGE, 2), 2.0))
+    np.testing.assert_array_equal(out[6], np.full((PAGE, 2), 2.0))
+    changed = [p for p in range(1, POOL)
+               if not np.array_equal(out[p], before[p])]
+    assert changed == [4, 6]                     # overflow -> scratch only
+
+
+def test_copy_page_clones_pool_leaves_only():
+    """``copy_page`` (the COW boundary copy) clones src -> dst on every
+    pool leaf across groups and passes per-slot state through untouched."""
+    from repro.serving import copy_page
+    rng = np.random.default_rng(11)
+    tree = {"blk": {
+        "k_pages": jnp.asarray(rng.standard_normal((2, POOL, PAGE, 1, 2)),
+                               jnp.float32),
+        "v_pages": jnp.asarray(rng.standard_normal((2, POOL, PAGE, 1, 2)),
+                               jnp.float32),
+        "state": jnp.asarray(rng.standard_normal((2, 3, 4)), jnp.float32),
+    }}
+    out = copy_page(tree, jnp.int32(3), jnp.int32(5))
+    for key in ("k_pages", "v_pages"):
+        np.testing.assert_array_equal(np.asarray(out["blk"][key][:, 5]),
+                                      np.asarray(tree["blk"][key][:, 3]))
+        np.testing.assert_array_equal(np.asarray(out["blk"][key][:, :3]),
+                                      np.asarray(tree["blk"][key][:, :3]))
+    np.testing.assert_array_equal(np.asarray(out["blk"]["state"]),
+                                  np.asarray(tree["blk"]["state"]))
+
+
 def test_idle_slot_append_lands_on_null_page():
     pool = jnp.zeros((POOL, PAGE, 1, 2), jnp.float32)
     bt = jnp.asarray([[NULL_PAGE, NULL_PAGE, NULL_PAGE], [1, 2, 3]], np.int32)

@@ -59,6 +59,21 @@ def test_request_validation():
         s.submit(Request(rid=0, prompt=[1] * 8, max_new_tokens=2))
 
 
+def test_submit_rejects_request_larger_than_pool():
+    """Regression: a request needing more pages than the pool can EVER
+    hand out (num_pages - 1; the scratch page is reserved) used to sit at
+    the head of the FIFO queue forever and surface as an opaque starvation
+    RuntimeError deep in engine.run — submit must reject it up front."""
+    s = Scheduler(num_pages=4, page_size=4, max_concurrency=1,
+                  max_pages_per_seq=8)
+    with pytest.raises(ValueError, match="never be admitted"):
+        s.submit(Request(rid=0, prompt=[1] * 14, max_new_tokens=2))
+    # exactly the pool capacity (3 allocatable pages) is fine
+    s.submit(Request(rid=1, prompt=[1] * 10, max_new_tokens=2))
+    plan = s.step()
+    assert plan.admit == ((1, 0),)
+
+
 def test_duplicate_rid_rejected_in_every_phase():
     s = Scheduler(num_pages=8, page_size=4, max_concurrency=1,
                   max_pages_per_seq=4)
