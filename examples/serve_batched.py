@@ -24,6 +24,12 @@ same policy flags reach paged decode (the paged attention kernel/twin run
 the identical split schedule):
 
     --paged --max-concurrency 4 --page-size 16 --attn-policy bf16x6
+
+``--mesh DATAxMODEL`` serves over an explicit device mesh (tensor-parallel
+params and page pools; token streams identical to single-device):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/serve_batched.py --paged --mesh 2x4
 """
 import argparse
 import dataclasses
@@ -37,7 +43,7 @@ from repro.configs import get_config, ARCH_IDS
 from repro.core.context import policy_scope
 from repro.core.policy import get_policy, registered_policies
 from repro.data.pipeline import make_frontend_inputs
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, make_mesh, parse_mesh_shape
 from repro.launch.serve import generate
 from repro.models import init_params, param_count
 from repro.models.base import activation_sharding
@@ -74,6 +80,11 @@ def main():
     ap.add_argument("--prefix-cache", action="store_true",
                     help="share cached prompt-prefix pages across requests "
                          "and skip their prefill (paged mode)")
+    ap.add_argument("--mesh", default=None, metavar="DATAxMODEL",
+                    help="device mesh shape, e.g. 2x4 (data=2, model=4); "
+                         "default is the all-devices (n, 1) host mesh — on "
+                         "CPU pair an explicit model dim with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
     args = ap.parse_args()
     if args.kernel and not args.policy:
         ap.error("--kernel requires --policy (the kernel override applies "
@@ -82,7 +93,10 @@ def main():
     cfg = get_config(args.arch, reduced=not args.full)
     print(f"serving {cfg.name}: {param_count(cfg)/1e6:.1f}M params, "
           f"batch={args.batch}")
-    mesh = make_host_mesh()
+    if args.mesh:
+        mesh = make_mesh(parse_mesh_shape(args.mesh), ("data", "model"))
+    else:
+        mesh = make_host_mesh()
     rng = jax.random.PRNGKey(0)
     params = init_params(rng, cfg)
     pspecs = shd.param_pspecs(cfg, mesh)
@@ -121,16 +135,17 @@ def main():
             system = list(np.asarray(tokens[0, :max(1, args.prompt_len // 2)]))
             prompts = [system + p for p in prompts]
         stats = {}
-        with mesh, activation_sharding(mesh), scope:
+        with scope:          # the engine enters its own mesh scope per step
             out, tps = generate_paged(
                 cfg, params, prompts, args.gen, page_size=args.page_size,
                 max_concurrency=args.max_concurrency,
                 prefill_chunk=args.prefill_chunk,
-                prefix_cache=args.prefix_cache, stats=stats)
+                prefix_cache=args.prefix_cache, mesh=mesh, stats=stats)
+        mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
         print(f"served {len(out)} requests (prompt lens "
               f"{[int(x) for x in lens]}) at "
               f"{tps:.1f} tok/s on {args.max_concurrency} slots, "
-              f"{args.page_size}-token pages")
+              f"{args.page_size}-token pages, mesh={mesh_shape}")
         if args.prefix_cache:
             print(f"prefix cache: {stats['hit_rate']:.1%} hit rate, "
                   f"{stats['cached_tokens']} prompt tokens skipped")

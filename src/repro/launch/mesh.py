@@ -40,9 +40,36 @@ def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
 
 
 def make_host_mesh():
-    """Single-device mesh for CPU smoke tests/examples."""
+    """All-devices data-parallel mesh for CPU smoke tests/examples
+    (shape ``(n, 1)`` — the ``model`` axis is 1, no tensor parallelism)."""
     n = len(jax.devices())
     return jax.make_mesh((n, 1), ("data", "model"), **_axis_type_kwargs(2))
+
+
+def parse_mesh_shape(arg: str) -> Tuple[int, int]:
+    """Parse a ``DATAxMODEL`` CLI mesh-shape argument (``"4x2"``, ``"4,2"``
+    or ``"8"`` — a bare count means all-data-parallel).  Serving launchers
+    route this through :func:`make_mesh` so ``--mesh 1x8`` can actually
+    exercise tensor parallelism; the old hardcoded ``make_host_mesh()``
+    pinned the ``model`` axis to 1 no matter how many devices
+    ``XLA_FLAGS=--xla_force_host_platform_device_count`` exposed."""
+    parts = [p for p in arg.replace(",", "x").lower().split("x") if p]
+    try:
+        dims = tuple(int(p) for p in parts)
+    except ValueError:
+        raise ValueError(f"--mesh expects DATAxMODEL (e.g. 4x2), got {arg!r}")
+    if len(dims) == 1:
+        dims = (dims[0], 1)
+    if len(dims) != 2 or any(d < 1 for d in dims):
+        raise ValueError(f"--mesh expects two positive dims DATAxMODEL "
+                         f"(e.g. 4x2), got {arg!r}")
+    n = len(jax.devices())
+    if dims[0] * dims[1] > n:
+        raise ValueError(
+            f"--mesh {arg!r} needs {dims[0] * dims[1]} devices but only {n} "
+            f"are visible (set XLA_FLAGS=--xla_force_host_platform_device_"
+            f"count=N for a forced CPU mesh)")
+    return dims
 
 
 def dp_axes(mesh) -> Tuple[str, ...]:

@@ -35,7 +35,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import get_config, ARCH_IDS
 from repro.data.pipeline import make_frontend_inputs
 from repro.launch import add_policy_args, policy_scope_from_args
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, make_mesh, parse_mesh_shape
 from repro.models import init_params, prefill, decode_step, init_decode_caches
 from repro.models.base import activation_sharding
 from repro.models.model import decode_cache_axes
@@ -120,22 +120,25 @@ def generate(cfg, params, tokens, max_len, gen_steps, batch_extras=None,
 
 def generate_paged(cfg, params, prompts, gen_steps, *, page_size=16,
                    max_concurrency=4, prefill_chunk=None,
-                   prefix_cache=False, stats=None):
+                   prefix_cache=False, mesh=None, stats=None):
     """Continuous-batching generation over paged caches.
 
     ``prompts`` is a list of token lists (mixed lengths welcome — that is
     the point).  ``prefix_cache=True`` shares cached prompt-prefix pages
     across requests (refcounted, copy-on-write boundary pages) and skips
     their prefill; pass a dict as ``stats`` to receive the scheduler's
-    cache counters (``hit_rate``, ``cached_tokens``, ...).  Returns
-    ({rid: tokens}, tokens/sec)."""
+    cache counters (``hit_rate``, ``cached_tokens``, ...).  ``mesh``
+    (a ``("data", "model")`` mesh) runs every batched model step SPMD over
+    the devices — tensor-parallel params/pools per the logical-axis rules,
+    host scheduler untouched, token streams identical to the single-device
+    engine.  Returns ({rid: tokens}, tokens/sec)."""
     from repro.serving import PagedServingEngine
     max_seq = max(len(p) for p in prompts) + gen_steps + 1
     eng = PagedServingEngine(cfg, params, page_size=page_size,
                              max_concurrency=max_concurrency,
                              max_seq_len=max_seq,
                              prefill_chunk=prefill_chunk,
-                             prefix_cache=prefix_cache)
+                             prefix_cache=prefix_cache, mesh=mesh)
     for pr in prompts:
         eng.submit(pr, gen_steps)
     t0 = time.time()
@@ -173,11 +176,22 @@ def main(argv=None):
                          "matching pages by reference, clones only the "
                          "copy-on-write boundary page, and prefill starts "
                          "at the first uncached position")
+    ap.add_argument("--mesh", default=None, metavar="DATAxMODEL",
+                    help="device mesh shape, e.g. 4x2 (data=4, model=2): "
+                         "params/pools shard by the logical-axis rules and "
+                         "the batched steps run SPMD over the mesh.  The "
+                         "default all-devices (n, 1) host mesh never "
+                         "exercises tensor parallelism — pass an explicit "
+                         "model dim (with XLA_FLAGS=--xla_force_host_"
+                         "platform_device_count=N on CPU) to turn it on")
     add_policy_args(ap)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced)
-    mesh = make_host_mesh()
+    if args.mesh:
+        mesh = make_mesh(parse_mesh_shape(args.mesh), ("data", "model"))
+    else:
+        mesh = make_host_mesh()
     rng = jax.random.PRNGKey(args.seed)
     params = init_params(rng, cfg)
     pspecs = shd.param_pspecs(cfg, mesh)
@@ -200,15 +214,17 @@ def main(argv=None):
             system = list(np.asarray(tokens[0, :max(1, args.prompt_len // 2)]))
             prompts = [system + p for p in prompts]
         stats = {}
-        with policy_scope_from_args(args), mesh, activation_sharding(mesh):
+        with policy_scope_from_args(args):
             out, tps = generate_paged(
                 cfg, params, prompts, args.gen, page_size=args.page_size,
                 max_concurrency=args.max_concurrency,
                 prefill_chunk=args.prefill_chunk,
-                prefix_cache=args.prefix_cache, stats=stats)
+                prefix_cache=args.prefix_cache, mesh=mesh, stats=stats)
+        mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
         print(f"generated {sum(len(v) for v in out.values())} tokens over "
               f"{len(out)} requests at {tps:.1f} tok/s (paged, "
-              f"page={args.page_size}, slots={args.max_concurrency})")
+              f"page={args.page_size}, slots={args.max_concurrency}, "
+              f"mesh={mesh_shape})")
         if args.prefix_cache:
             print(f"prefix cache: hit rate {stats['hit_rate']:.1%} "
                   f"({stats['cached_tokens']}/{stats['prompt_tokens']} prompt "

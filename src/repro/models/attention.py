@@ -405,8 +405,16 @@ def gqa_apply(p, x: jnp.ndarray, cfg: ArchConfig, positions: jnp.ndarray,
         # through the block table (lazy import: serving depends on models)
         from repro.serving import paged_cache as _pc
         from repro.serving import paged_attention as _pa
-        k_pages = _pc.append_pages(cache["k_pages"], k, block_table, seq_lens)
-        v_pages = _pc.append_pages(cache["v_pages"], v, block_table, seq_lens)
+        # pool sharding: kv heads over "model" (when divisible), page and
+        # offset axes never — under a mesh the constraint keeps GSPMD from
+        # re-replicating the appended pool across the model axis mid-step
+        # (matches parallel.sharding.paged_cache_pspecs).
+        k_pages = shard_hint(
+            _pc.append_pages(cache["k_pages"], k, block_table, seq_lens),
+            None, None, "kv", None)
+        v_pages = shard_hint(
+            _pc.append_pages(cache["v_pages"], v, block_table, seq_lens),
+            None, None, "kv", None)
         if s == 1:
             o = _pa.paged_decode_attention(
                 q[:, 0], k_pages, v_pages, block_table,
@@ -416,6 +424,7 @@ def gqa_apply(p, x: jnp.ndarray, cfg: ArchConfig, positions: jnp.ndarray,
                 + jnp.arange(s, dtype=jnp.int32)[None]
             o = _pa.paged_prefill_attention(q, k_pages, v_pages,
                                             block_table, row_pos)
+        o = shard_hint(o, "batch", None, "heads", None)
         y = dense(o.reshape(b, s, h * hd), p["wo"], pol)
         return y.astype(x.dtype), {"k_pages": k_pages, "v_pages": v_pages}
 
@@ -526,7 +535,9 @@ def mla_apply(p, x: jnp.ndarray, cfg: ArchConfig, positions: jnp.ndarray,
                 <= row_pos[..., None]
             o_c = mla_absorbed_attention(q_c, q_rope, c, r, valid, scale,
                                          apol)
-        o = tcec.einsum("bqhl,lhv->bqhv", o_c, w_uv, site="attn", policy=apol)
+        o = shard_hint(
+            tcec.einsum("bqhl,lhv->bqhv", o_c, w_uv, site="attn", policy=apol),
+            "batch", None, "heads", None)
         y = dense(o.reshape(b, s, h * vd).astype(x.dtype), p["wo"], pol)
         return y.astype(x.dtype), {"c_pages": c_pages, "r_pages": r_pages}
 

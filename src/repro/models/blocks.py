@@ -201,6 +201,24 @@ def block_paged_cache_spec(cfg: ArchConfig, spec: BlockSpec, slots: int,
     return block_cache_spec(cfg, spec, slots, 0)
 
 
+def block_paged_cache_axes(cfg: ArchConfig, spec: BlockSpec) -> Optional[Dict]:
+    """Logical axis names matching ``block_paged_cache_spec`` (pre-stacking).
+
+    Pool leaves ``(num_pages, page_size, *tail)``: neither the page axis
+    nor the in-page offset is ever sharded (any device may need to resolve
+    any physical page id its block table names); the kv-head axis rides the
+    ``kv`` rule — tensor-parallel over ``model`` when divisible, replicated
+    otherwise.  MLA latent pools have no head axis and replicate.  Per-slot
+    recurrent states reuse the dense batch layout (slot axis == "batch")."""
+    if spec.mixer == "attn":
+        return {"mixer": {"k_pages": (None, None, "kv", None),
+                          "v_pages": (None, None, "kv", None)}}
+    if spec.mixer == "mla":
+        return {"mixer": {"c_pages": (None, None, None),
+                          "r_pages": (None, None, None)}}
+    return block_cache_axes(cfg, spec)
+
+
 def block_cache_axes(cfg: ArchConfig, spec: BlockSpec,
                      cross_len: int = 0) -> Optional[Dict]:
     """Logical axis names for each decode-cache tensor (pre-stacking)."""

@@ -366,6 +366,26 @@ def init_paged_decode_caches(cfg: ArchConfig, slots: int, num_pages: int,
                         paged_cache_specs(cfg, slots, num_pages, page_size))
 
 
+def paged_cache_axes(cfg: ArchConfig) -> Any:
+    """Logical-axis tree matching ``paged_cache_specs`` (stacked: +'layers').
+
+    Feeds ``repro.parallel.sharding.paged_cache_pspecs``: page pools shard
+    only their kv-head axis (over ``model`` when divisible), per-slot
+    recurrent states shard the slot axis over the data axes."""
+    from .blocks import block_paged_cache_axes
+    group = {}
+    for i, spec in enumerate(cfg.pattern):
+        a = block_paged_cache_axes(cfg, spec)
+        if a is not None:
+            group[f"pos{i}"] = a
+
+    def stack(node):
+        if isinstance(node, dict):
+            return {k: stack(v) for k, v in node.items()}
+        return ("layers",) + tuple(node)
+    return stack(group)
+
+
 def decode_cache_axes(cfg: ArchConfig) -> Any:
     """Logical-axis tree matching decode_cache_specs (stacked: +'layers')."""
     from .blocks import block_cache_axes

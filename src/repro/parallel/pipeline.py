@@ -77,10 +77,27 @@ def run_pipeline(mesh: Mesh, stage_fn, stage_params_stacked, x_micro,
                  n_micro: int, axis: str = "pipe"):
     """Convenience wrapper: shard_map the pipelined fn over ``axis``.
 
-    stage_params_stacked: pytree with leading dim == n_stages.
+    stage_params_stacked: pytree with leading dim == n_stages on EVERY leaf.
     x_micro: (n_micro, mb, ...) input microbatches.
+
+    The leading stage dim is load-bearing twice over: leaves are sharded
+    ``P(axis)`` on dim 0 (one stage's slice per device) and the shard_map
+    body slices ``leaf[0]`` to unwrap it.  A leaf without that dim used to
+    be silently mis-sliced (its *first row* became every stage's "params")
+    or rejected by the partitioner with an opaque divisibility error, so
+    the shapes are validated up front and a mismatch names the leaf.
     """
     n_stages = mesh.shape[axis]
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(
+            stage_params_stacked)[0]:
+        shape = tuple(getattr(leaf, "shape", ()))
+        if not shape or shape[0] != n_stages:
+            name = jax.tree_util.keystr(kp) or "<root>"
+            raise ValueError(
+                f"run_pipeline: params leaf {name} has shape {shape}; every "
+                f"leaf needs a leading stage dimension of size n_stages == "
+                f"{n_stages} (mesh axis {axis!r}) — stack per-stage params "
+                f"with jax.tree.map(lambda *xs: jnp.stack(xs), *stages)")
     fn = pipeline_fn(stage_fn, n_stages, n_micro, axis)
     in_specs = (
         jax.tree.map(lambda _: P(axis), stage_params_stacked),

@@ -39,8 +39,24 @@ def default_rules(mesh: Mesh) -> Dict[str, Sequence[AxisGroup]]:
 
 
 def spec_for(shape: Tuple[int, ...], logical: Tuple[Optional[str], ...],
-             mesh: Mesh, rules=None) -> P:
-    """Resolve one tensor's PartitionSpec from its logical axes."""
+             mesh: Mesh, rules=None, path: Optional[str] = None) -> P:
+    """Resolve one tensor's PartitionSpec from its logical axes.
+
+    ``logical`` must name every dimension (``None`` for "don't shard").  A
+    rank mismatch raises: ``zip(shape, logical)`` used to silently truncate
+    to the shorter tuple, producing an under-specified PartitionSpec whose
+    trailing dims defaulted to replicated — the same silent-pass-through
+    class as the old ``write_prefill_caches`` shape heuristic.  ``path``
+    (optional) names the tensor in the error message.
+    """
+    shape = tuple(shape)
+    logical = tuple(logical)
+    if len(logical) != len(shape):
+        where = f" at {path!r}" if path else ""
+        raise ValueError(
+            f"logical axes {logical} (rank {len(logical)}) do not match "
+            f"tensor{where} of shape {shape} (rank {len(shape)}); every "
+            f"dimension needs a logical name or None")
     rules = rules or default_rules(mesh)
     used: set = set()
     out = []
@@ -69,16 +85,23 @@ def _is_axes_leaf(x) -> bool:
                                         for a in x)
 
 
-def _walk(shape_node, axes_node, fn):
+def _walk(shape_node, axes_node, fn, path=""):
     if isinstance(axes_node, dict):
-        return {k: _walk(shape_node[k], axes_node[k], fn) for k in axes_node}
-    return fn(shape_node, axes_node)
+        return {k: _walk(shape_node[k], axes_node[k], fn, f"{path}/{k}")
+                for k in axes_node}
+    return fn(shape_node, axes_node, path)
 
 
 def tree_pspecs(shape_tree, axes_tree, mesh: Mesh, rules=None):
-    """(ShapeDtypeStruct tree, logical-axes tree) -> PartitionSpec tree."""
+    """(ShapeDtypeStruct tree, logical-axes tree) -> PartitionSpec tree.
+
+    Each leaf resolves through :func:`spec_for` with its tree path, so a
+    rank mismatch between a tensor and its logical-axes tuple raises a
+    ``ValueError`` naming the offending leaf instead of silently
+    under-specifying its PartitionSpec."""
     return _walk(shape_tree, axes_tree,
-                 lambda s, ax: spec_for(tuple(s.shape), ax, mesh, rules))
+                 lambda s, ax, p: spec_for(tuple(s.shape), ax, mesh, rules,
+                                           path=p))
 
 
 def param_pspecs(cfg, mesh: Mesh, rules=None):
@@ -90,6 +113,20 @@ def cache_pspecs(cfg, mesh: Mesh, b: int, max_len: int, rules=None):
     from repro.models.model import decode_cache_specs, decode_cache_axes
     return tree_pspecs(decode_cache_specs(cfg, b, max_len),
                        decode_cache_axes(cfg), mesh, rules)
+
+
+def paged_cache_pspecs(cfg, mesh: Mesh, slots: int, num_pages: int,
+                       page_size: int, rules=None):
+    """PartitionSpec tree for the *paged* serving caches.
+
+    Page pools shard their kv-head axis over ``model`` when divisible
+    (tensor-parallel decode reads only its own heads' pages) and stay
+    replicated otherwise; the page axis itself is never sharded — every
+    device must resolve any physical page id its block table names.
+    Per-slot recurrent states shard the slot axis over the data axes."""
+    from repro.models.model import paged_cache_specs, paged_cache_axes
+    return tree_pspecs(paged_cache_specs(cfg, slots, num_pages, page_size),
+                       paged_cache_axes(cfg), mesh, rules)
 
 
 def batch_pspecs(batch_tree, mesh: Mesh):

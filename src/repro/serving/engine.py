@@ -31,6 +31,7 @@ token-stream tests pin.  Policies reach the engine through the ambient
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import Dict, List, Optional, Sequence
 
@@ -77,6 +78,24 @@ class PagedServingEngine:
     sharing changes which physical page a read resolves to, never
     arithmetic, keeping token streams bitwise-identical per policy to the
     uncached engine.
+
+    ``mesh=`` makes the engine multi-device: every batched model step
+    (decode AND chunked/single-shot prefill) runs SPMD over the given
+    ``("data", "model")`` mesh.  Params shard by the logical-axis rules of
+    ``repro.parallel.sharding`` (TP over ``model`` on heads/mlp/vocab,
+    FSDP-style over the data axes on ``embed``); the page pools shard
+    their kv-head axis over ``model`` when divisible and replicate
+    otherwise (``paged_cache_pspecs`` — the page axis itself is never
+    sharded, so any device can resolve any physical page id its
+    replicated block table names); per-slot recurrent states shard the
+    slot axis over the data axes.  The pure-Python scheduler, prefix
+    index and block-table bookkeeping stay on the host untouched — only
+    the array programs are partitioned, so arithmetic per token is
+    unchanged and single- vs multi-device engines emit identical token
+    streams per policy (the golden-stream contract; TP all-reduces ride
+    at bf16 wire width through the einsum frontend's emit-width
+    discipline).  Control tensors (tokens, block table, seq lens, active
+    mask) are replicated — they are bytes, not bandwidth.
     """
 
     def __init__(self, cfg: ArchConfig, params, *,
@@ -85,6 +104,7 @@ class PagedServingEngine:
                  num_pages: Optional[int] = None,
                  prefill_chunk=None,
                  prefix_cache: bool = False,
+                 mesh=None,
                  eos_id: Optional[int] = None):
         tuned = None
         if page_size is None or prefill_chunk == "auto":
@@ -103,7 +123,6 @@ class PagedServingEngine:
                 "chunked prefill and prefix caching need attention/MLA "
                 f"mixers only (pattern has {[s.mixer for s in cfg.pattern]})")
         self.cfg = cfg
-        self.params = params
         self.page_size = page_size
         self.prefix_cache = prefix_cache
         self.eos_id = eos_id
@@ -116,6 +135,19 @@ class PagedServingEngine:
                                    prefix_cache=prefix_cache)
         self.caches = init_paged_decode_caches(cfg, max_concurrency,
                                                num_pages, page_size)
+        self.mesh = mesh
+        self._replicated = None
+        if mesh is not None:
+            from repro.parallel import sharding as shd
+            params = jax.device_put(
+                params, shd.shardings_of(shd.param_pspecs(cfg, mesh), mesh))
+            self.caches = jax.device_put(
+                self.caches,
+                shd.shardings_of(
+                    shd.paged_cache_pspecs(cfg, mesh, max_concurrency,
+                                           num_pages, page_size), mesh))
+            self._replicated = shd.replicated(mesh)
+        self.params = params
         self.block_table = np.full((max_concurrency, self.npages_per_seq),
                                    NULL_PAGE, np.int32)
         self.seq_lens = np.zeros((max_concurrency,), np.int32)
@@ -129,6 +161,27 @@ class PagedServingEngine:
         self._prefill_fn = jax.jit(functools.partial(prefill, cfg=cfg))
         self._write_fn = jax.jit(write_prefill_prefix, donate_argnums=(0,))
         self._copy_fn = jax.jit(copy_page, donate_argnums=(0,))
+
+    def _scope(self):
+        """Mesh + activation-sharding context for every jitted model call
+        (a no-op single-device).  Entered per call site, not stored: the
+        logical-axis rules are read at trace time, so the first call under
+        the scope bakes the sharding constraints into the compiled step."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        from repro.models.base import activation_sharding
+        stack = contextlib.ExitStack()
+        stack.enter_context(self.mesh)
+        stack.enter_context(activation_sharding(self.mesh))
+        return stack
+
+    def _host(self, x, dtype=jnp.int32):
+        """Host array -> device, replicated over the mesh when sharded
+        (control tensors: tokens, block tables, lengths, masks)."""
+        arr = jnp.asarray(x, dtype)
+        if self._replicated is not None:
+            arr = jax.device_put(arr, self._replicated)
+        return arr
 
     @staticmethod
     def _tuned_plan(cfg: ArchConfig, max_seq_len: int):
@@ -163,6 +216,10 @@ class PagedServingEngine:
     # -- one tick -----------------------------------------------------------
 
     def step(self) -> StepPlan:
+        with self._scope():
+            return self._step()
+
+    def _step(self) -> StepPlan:
         sched = self.scheduler
         plan = sched.step()
         for rid, slot in plan.evict:
@@ -179,8 +236,8 @@ class PagedServingEngine:
                 # own tokens overwrite the clone from offset
                 # cached_upto % page_size on.
                 self.caches = self._copy_fn(
-                    self.caches, jnp.int32(st.boundary_src),
-                    jnp.int32(row[st.n_shared]))
+                    self.caches, self._host(st.boundary_src),
+                    self._host(row[st.n_shared]))
             self.seq_lens[slot] = st.cached_upto
 
         for chunk in plan.prefill:
@@ -190,11 +247,11 @@ class PagedServingEngine:
                 # single-shot: the standard prefill (same numerics as the
                 # dense serve path), scattered into this request's pages
                 logits, pf = self._prefill_fn(
-                    self.params, {"tokens": jnp.asarray([tokens], jnp.int32)})
+                    self.params, {"tokens": self._host([tokens])})
                 self.caches = self._write_fn(
                     self.caches, pf,
-                    jnp.asarray(self.block_table[chunk.slot]),
-                    jnp.int32(chunk.slot))
+                    self._host(self.block_table[chunk.slot]),
+                    self._host(chunk.slot))
             else:
                 # chunked (or prefix-cached, which must be able to start
                 # mid-prompt): the chunk rides the paged multi-token step.
@@ -209,11 +266,11 @@ class PagedServingEngine:
                         and real < sched.prefill_chunk:
                     tokens = tokens + [0] * (sched.prefill_chunk - real)
                 logits, self.caches = self._decode_fn(
-                    self.params, jnp.asarray([tokens], jnp.int32),
+                    self.params, self._host([tokens]),
                     self.caches,
-                    jnp.asarray(self.block_table[chunk.slot][None]),
-                    jnp.asarray(self.seq_lens[chunk.slot][None]), None,
-                    jnp.asarray([real - 1], jnp.int32))
+                    self._host(self.block_table[chunk.slot][None]),
+                    self._host(self.seq_lens[chunk.slot][None]), None,
+                    self._host([real - 1]))
             self.seq_lens[chunk.slot] = chunk.end
             if chunk.last:
                 # only the final chunk's logits are consumed (one host sync)
@@ -224,14 +281,14 @@ class PagedServingEngine:
                 sched.record_prefill(chunk.rid, chunk.end)
 
         if plan.decode:
-            toks = jnp.asarray(self._last_tok[:, None], jnp.int32)
+            toks = self._host(self._last_tok[:, None])
             active = np.zeros((len(self.seq_lens),), bool)
             for _, slot in plan.decode:
                 active[slot] = True
             logits, self.caches = self._decode_fn(
                 self.params, toks, self.caches,
-                jnp.asarray(self.block_table), jnp.asarray(self.seq_lens),
-                jnp.asarray(active), None)
+                self._host(self.block_table), self._host(self.seq_lens),
+                self._host(active, jnp.bool_), None)
             next_tok = np.asarray(jnp.argmax(logits, axis=-1))
             for rid, slot in plan.decode:
                 self.seq_lens[slot] += 1

@@ -31,13 +31,23 @@ def pages_needed(n_tokens: int, page_size: int) -> int:
 
 
 def init_pool(num_pages: int, page_size: int, tail: Tuple[int, ...],
-              dtype) -> jnp.ndarray:
-    """Zero page pool ``(num_pages, page_size, *tail)``."""
+              dtype, sharding=None) -> jnp.ndarray:
+    """Zero page pool ``(num_pages, page_size, *tail)``.
+
+    ``sharding`` (an optional ``NamedSharding``) places the pool on a
+    device mesh.  The pool-sharding contract: only *tail* axes (kv heads)
+    may shard — the page axis and in-page offset never do, because any
+    device must be able to resolve any physical page id a block table
+    names (``repro.parallel.sharding.paged_cache_pspecs`` encodes this)."""
     if num_pages < 2:
         raise ValueError(
             f"num_pages must be >= 2 (page {NULL_PAGE} is the reserved "
             f"scratch page), got {num_pages}")
-    return jnp.zeros((num_pages, page_size) + tuple(tail), dtype)
+    pool = jnp.zeros((num_pages, page_size) + tuple(tail), dtype)
+    if sharding is not None:
+        import jax
+        pool = jax.device_put(pool, sharding)
+    return pool
 
 
 def append_pages(pool: jnp.ndarray, new: jnp.ndarray,

@@ -1,5 +1,38 @@
-"""GPipe pipeline library: output correctness vs sequential execution."""
+"""GPipe pipeline library: output correctness vs sequential execution, and
+the stage-dimension contract on stacked params."""
+import jax.numpy as jnp
+import pytest
+
 from subproc import run_python
+
+
+class _FakeMesh:
+    """Enough mesh for run_pipeline's up-front validation (it consults
+    mesh.shape[axis] before any shard_map is built)."""
+    axis_names = ("pipe",)
+    shape = {"pipe": 4}
+
+
+def test_run_pipeline_rejects_missing_stage_dim():
+    """Regression: run_pipeline slices ``leaf[0]`` off every params leaf
+    inside the shard_map body, so a leaf without the leading n_stages dim
+    was silently mis-sliced (its first row became every stage's params) or
+    died in the partitioner with an opaque divisibility error.  The shape
+    check must fire first and name the offending leaf."""
+    from repro.parallel.pipeline import run_pipeline
+    mesh = _FakeMesh()
+    stage_fn = lambda w, h: h @ w
+    x = jnp.zeros((8, 2, 16))
+    good = jnp.zeros((4, 16, 16))
+    with pytest.raises(ValueError, match=r"\['b'\].*\(16, 16\)"):
+        run_pipeline(mesh, stage_fn, {"a": good, "b": jnp.zeros((16, 16))},
+                     x, n_micro=8, axis="pipe")
+    with pytest.raises(ValueError, match=r"n_stages == 4"):
+        run_pipeline(mesh, stage_fn, {"a": jnp.zeros((3, 16, 16))},
+                     x, n_micro=8, axis="pipe")
+    with pytest.raises(ValueError, match=r"shape \(\)"):
+        run_pipeline(mesh, stage_fn, {"a": good, "s": jnp.float32(1.0)},
+                     x, n_micro=8, axis="pipe")
 
 
 def test_pipeline_matches_sequential():

@@ -1,0 +1,207 @@
+"""Sharded paged serving: the engine on a device mesh must emit token
+streams bitwise-identical to the single-device engine, per policy —
+tensor parallelism (model axis > 1) included, and with prefix caching and
+page back-pressure in play.
+
+Two layers of coverage:
+
+* subprocess tests (``run_python``) force an 8-device CPU topology and
+  compare a ``mesh=None`` engine against ``(8, 1)`` / ``(2, 4)`` meshes —
+  these run in the ordinary fast tier;
+* in-process tests that skip unless the *current* process already sees
+  >= 8 devices — exercised by the CI forced-multi-device step
+  (``XLA_FLAGS=--xla_force_host_platform_device_count=8``), where they
+  also feed ``--cov=repro.parallel``.
+"""
+import numpy as np
+import pytest
+import jax
+
+from subproc import run_python
+
+
+_PARITY_TEMPLATE = """
+import jax, numpy as np
+from repro.configs import get_config
+from repro.core.context import policy_scope
+from repro.launch.mesh import make_mesh
+from repro.models import init_params
+from repro.serving import PagedServingEngine
+
+cfg = get_config("qwen2-0.5b", reduced=True)
+params = init_params(jax.random.PRNGKey(0), cfg)
+rng = np.random.default_rng(0)
+prompts = [list(rng.integers(0, cfg.vocab, n)) for n in (5, 11, 3, 7)]
+
+def run(mesh):
+    with policy_scope({policy!r}):
+        eng = PagedServingEngine(cfg, params, page_size=4, max_concurrency=4,
+                                 max_seq_len=24, mesh=mesh)
+        for p in prompts:
+            eng.submit(p, 5)
+        return eng.run()
+
+base = run(None)
+assert sorted(base) == list(range(len(prompts)))
+for shape in ((8, 1), (2, 4)):
+    sharded = run(make_mesh(shape, ("data", "model")))
+    assert sharded == base, (shape, base, sharded)
+print("OK")
+"""
+
+
+@pytest.mark.parametrize("policy", ["fp32_vpu", "bf16x1", "bf16x6"])
+def test_sharded_streams_bitwise_match_single_device(policy):
+    """Pure-DP (8,1) and TP (2,4) meshes both reproduce the single-device
+    token streams exactly, for VPU and split-bf16 policies alike."""
+    run_python(_PARITY_TEMPLATE.format(policy=policy), devices=8)
+
+
+def test_sharded_prefix_cache_streams_match():
+    """Prefix-cache page sharing (refcounted installs + COW boundary
+    copies) on a TP mesh still matches the single-device uncached engine."""
+    run_python("""
+import jax, numpy as np
+from repro.configs import get_config
+from repro.core.context import policy_scope
+from repro.launch.mesh import make_mesh
+from repro.models import init_params
+from repro.serving import PagedServingEngine
+
+cfg = get_config("qwen2-0.5b", reduced=True)
+params = init_params(jax.random.PRNGKey(0), cfg)
+rng = np.random.default_rng(2)
+system = list(rng.integers(0, cfg.vocab, 9))     # shared prefix, spans pages
+prompts = [system + list(rng.integers(0, cfg.vocab, n)) for n in (3, 6, 1, 4)]
+
+def run(mesh, prefix_cache):
+    with policy_scope("fp32_vpu"):
+        eng = PagedServingEngine(cfg, params, page_size=4, max_concurrency=2,
+                                 max_seq_len=24, prefix_cache=prefix_cache,
+                                 mesh=mesh)
+        for p in prompts:
+            eng.submit(p, 4)
+        out = eng.run()
+        return out, eng.scheduler.prefix_stats
+
+base, _ = run(None, False)
+sharded, stats = run(make_mesh((2, 4), ("data", "model")), True)
+assert sharded == base, (base, sharded)
+assert stats["cached_tokens"] > 0, stats    # the cache actually engaged
+print("OK", stats["hit_rate"])
+""", devices=8)
+
+
+def test_sharded_backpressure_streams_match():
+    """A tight page budget (queueing, late admission, evictions) on a TP
+    mesh must not perturb any stream versus the roomy single-device run."""
+    run_python("""
+import jax, numpy as np
+from repro.configs import get_config
+from repro.core.context import policy_scope
+from repro.launch.mesh import make_mesh
+from repro.models import init_params
+from repro.serving import PagedServingEngine
+
+cfg = get_config("qwen2-0.5b", reduced=True)
+params = init_params(jax.random.PRNGKey(0), cfg)
+rng = np.random.default_rng(7)
+prompts = [list(rng.integers(0, cfg.vocab, int(rng.integers(1, 10))))
+           for _ in range(4)]
+gens = [int(rng.integers(1, 6)) for _ in range(4)]
+
+def run(mesh, num_pages):
+    with policy_scope("fp32_vpu"):
+        eng = PagedServingEngine(cfg, params, page_size=4, max_concurrency=2,
+                                 max_seq_len=16, num_pages=num_pages,
+                                 mesh=mesh)
+        for p, g in zip(prompts, gens):
+            eng.submit(p, g)
+        return eng.run()
+
+base = run(None, None)                       # roomy default pool
+tight = run(make_mesh((2, 4), ("data", "model")), 1 + 2 * 4)
+assert tight == base, (base, tight)
+print("OK")
+""", devices=8)
+
+
+def test_mesh_engine_rejects_too_small_mesh():
+    """parse_mesh_shape refuses shapes larger than the visible topology
+    with an actionable XLA_FLAGS hint."""
+    run_python("""
+from repro.launch.mesh import parse_mesh_shape
+assert parse_mesh_shape("2x2") == (2, 2)
+assert parse_mesh_shape("4,1") == (4, 1)
+assert parse_mesh_shape("4") == (4, 1)
+try:
+    parse_mesh_shape("16x4")
+except ValueError as e:
+    assert "xla_force_host_platform_device_count" in str(e)
+else:
+    raise AssertionError("oversized mesh accepted")
+try:
+    parse_mesh_shape("2x0")
+except ValueError:
+    pass
+else:
+    raise AssertionError("zero dim accepted")
+print("OK")
+""", devices=4)
+
+
+# ---------------------------------------------------------------------------
+# in-process variants: run only under the CI forced-multi-device step
+# ---------------------------------------------------------------------------
+
+needs_devices = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+def _tiny_run(mesh, policy="fp32_vpu"):
+    from repro.configs import get_config
+    from repro.core.context import policy_scope
+    from repro.models import init_params
+    from repro.serving import PagedServingEngine
+    cfg = get_config("qwen2-0.5b", reduced=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(0, cfg.vocab, n)) for n in (5, 11, 3)]
+    with policy_scope(policy):
+        eng = PagedServingEngine(cfg, params, page_size=4, max_concurrency=2,
+                                 max_seq_len=24, mesh=mesh)
+        for p in prompts:
+            eng.submit(p, 4)
+        return eng.run()
+
+
+@needs_devices
+@pytest.mark.parametrize("shape", [(8, 1), (2, 4), (1, 8)])
+def test_inprocess_mesh_parity(shape):
+    from repro.launch.mesh import make_mesh
+    base = _tiny_run(None)
+    assert _tiny_run(make_mesh(shape, ("data", "model"))) == base
+
+
+@needs_devices
+def test_inprocess_pool_sharding_layout():
+    """On a (2, 4) mesh the attention page pools shard the kv-head axis
+    over ``model`` when divisible, never the page axis; recurrent-state
+    slots shard over data."""
+    from jax.sharding import PartitionSpec as P
+    from repro.configs import get_config
+    from repro.launch.mesh import make_mesh
+    from repro.parallel.sharding import paged_cache_pspecs
+    cfg = get_config("qwen2-0.5b", reduced=True)    # n_kv_heads=2
+    mesh = make_mesh((2, 2), ("data", "model"))     # model=2 divides kv=2
+    specs = paged_cache_pspecs(cfg, mesh, slots=4, num_pages=9, page_size=4)
+    flat = jax.tree.flatten(specs, is_leaf=lambda x: isinstance(x, P))[0]
+    assert flat, "no paged cache leaves resolved"
+    for sp in flat:
+        # leading axes: (layers-group, pages, page_size, ...) — layers and
+        # the page/offset axes are never sharded
+        assert sp[0] is None and sp[1] is None and sp[2] is None, sp
+    # kv axis (index 3 of k_pages/v_pages) rides the model axis
+    assert any("model" in (ax if isinstance(ax, tuple) else (ax,))
+               for sp in flat for ax in sp if ax is not None), specs

@@ -42,6 +42,39 @@ def test_axis_conflict_resolution():
     assert spec == P("model", None)
 
 
+def test_spec_for_rejects_rank_mismatch():
+    """Regression: zip(shape, logical) used to silently truncate to the
+    shorter tuple, leaving trailing dims replicated with no diagnostic —
+    now a mismatch raises and names the tensor when a path is given."""
+    from repro.parallel.sharding import spec_for
+    m = mesh_2x2()
+    with pytest.raises(ValueError, match=r"rank 2.*rank 3"):
+        spec_for((8, 32, 64), ("batch", "embed"), m)
+    with pytest.raises(ValueError, match=r"rank 3.*rank 2"):
+        spec_for((8, 64), ("batch", None, "embed"), m)
+    with pytest.raises(ValueError, match=r"'/mixer/wq'"):
+        spec_for((64, 64), ("embed",), m, path="/mixer/wq")
+    # exact-rank still resolves
+    assert spec_for((8, 64), ("batch", "embed"), m) == P("data", None)
+
+
+def test_tree_pspecs_names_offending_leaf():
+    """A rank mismatch anywhere in the tree surfaces the leaf's tree path
+    in the error, not just shapes."""
+    from repro.parallel.sharding import tree_pspecs
+    m = mesh_2x2()
+    shapes = {"blk": {"wq": jax.ShapeDtypeStruct((64, 64), "float32"),
+                      "wo": jax.ShapeDtypeStruct((64, 4, 16), "float32")}}
+    axes = {"blk": {"wq": ("embed", "heads"),
+                    "wo": ("heads", None)}}          # rank 2 vs rank 3
+    with pytest.raises(ValueError, match=r"'/blk/wo'"):
+        tree_pspecs(shapes, axes, m)
+    axes["blk"]["wo"] = ("heads", None, "embed")
+    specs = tree_pspecs(shapes, axes, m)
+    assert specs["blk"]["wq"] == P("data", "model")
+    assert specs["blk"]["wo"] == P("model", None, "data")
+
+
 def test_seq_fallback_for_bs1():
     from repro.parallel.sharding import spec_for
     m = mesh_pod()
