@@ -13,7 +13,9 @@
   §API (Code 4/5) -> einsum_frontend (fused-epilogue + fragment-operand
                    walltime vs the staged/unfused twins, saved-bytes claim)
   §Serving      -> serving_throughput (paged vs dense decode: tok/s and
-                   cache-bytes-touched per step across policies)
+                   cache-bytes-touched per step across policies; prefix
+                   cache hit rates; speculative-decoding spec_ngram_* /
+                   spec_draft_* accept-rate + tok/s speedup rows)
   §Roofline     -> roofline        (cluster table from dry-run artifacts)
   §Autotune     -> autotune        (repro.tune plan picks + predicted vs
                    measured walltime)
@@ -34,10 +36,13 @@ import traceback
 _SHAPE_RE = re.compile(r"(?:m(\d+)n(\d+)k(\d+))|(?:_s(\d+)(?:_|$))|"
                        r"(?:b(\d+)_s(\d+))")
 _POLICY_RE = re.compile(r"(bf16x\d(?:_(?:pallas|staged))?|fp32_vpu)")
+# speculative-decoding rows (serving_throughput): spec_ngram_* /
+# spec_draft_* accept-rate, tok/s and speedup rows carry the proposer.
+_SPEC_RE = re.compile(r"spec_(ngram|draft)_")
 
 
 def _row_record(bench: str, key: str, metric: str, value):
-    shape = policy = None
+    shape = policy = proposer = None
     m = _SHAPE_RE.search(key)
     if m:
         groups = [g for g in m.groups() if g is not None]
@@ -45,8 +50,14 @@ def _row_record(bench: str, key: str, metric: str, value):
     p = _POLICY_RE.search(key)
     if p:
         policy = p.group(1)
-    return {"bench": bench, "name": key, "shape": shape, "policy": policy,
-            "metric": metric, "value": value}
+    sp = _SPEC_RE.search(key)
+    if sp:
+        proposer = sp.group(1)
+    rec = {"bench": bench, "name": key, "shape": shape, "policy": policy,
+           "metric": metric, "value": value}
+    if proposer is not None:
+        rec["proposer"] = proposer
+    return rec
 
 
 def main(argv=None) -> None:

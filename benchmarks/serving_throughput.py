@@ -67,6 +67,89 @@ def _scaling_rows():
     return rows
 
 
+def _timed_stream(cfg, params, prompts, gen_steps, *, page_size,
+                  speculative=None):
+    """Serve ``prompts`` twice through ONE engine — the first pass warms
+    every jitted step (compiles dominate CPU wall time and would drown the
+    decode-loop difference speculation targets), the second is timed.
+    Returns (streams in submission order, timed-pass seconds, spec stats).
+    """
+    from repro.serving import PagedServingEngine
+    max_seq = max(len(p) for p in prompts) + gen_steps + 1
+    eng = PagedServingEngine(cfg, params, page_size=page_size,
+                             max_concurrency=len(prompts),
+                             max_seq_len=max_seq, speculative=speculative)
+    for p in prompts:
+        eng.submit(p, gen_steps)
+    eng.run()
+    rids = [eng.submit(p, gen_steps) for p in prompts]
+    t0 = time.perf_counter()
+    out = eng.run()
+    dt = time.perf_counter() - t0
+    stats = eng.spec_stats.as_dict() if eng.spec_stats is not None else {}
+    return [out[r] for r in rids], dt, stats
+
+
+def _spec_rows(cfg, params, rng):
+    """Speculative vs plain decode on a repetitive-continuation stream.
+
+    The prompts repeat a short token pattern, and greedy decode of the
+    tiny random-weight config locks into short cycles — both are exactly
+    what the prompt-lookup proposer catches, so the accept rate is high
+    and the verify tick commits several tokens for ~one tick's worth of
+    weight/pool traffic.  Streams are asserted bitwise-identical to the
+    plain engine per policy (the acceptance contract), so the rows
+    measure pure wall-clock, not quality drift."""
+    import dataclasses
+
+    import jax
+    from repro.core.context import policy_scope
+    from repro.models import init_params
+    from repro.spec import SpecConfig
+
+    page_size, gen_steps = 8, 16
+    pat = [list(rng.integers(0, cfg.vocab, 3)) for _ in range(4)]
+    prompts = [p * 5 for p in pat]              # 15-token repeating prompts
+
+    rows = []
+    for policy in ("fp32_vpu", "bf16x6"):
+        with policy_scope(policy):
+            base, base_dt, _ = _timed_stream(cfg, params, prompts, gen_steps,
+                                             page_size=page_size)
+            spec, spec_dt, st = _timed_stream(
+                cfg, params, prompts, gen_steps, page_size=page_size,
+                speculative=SpecConfig(k=4, proposer="ngram"))
+        assert base == spec, \
+            f"speculative stream diverged from baseline under {policy}"
+        n_tok = sum(len(s) for s in spec)
+        rows.append((f"{policy}.spec_ngram_tok_s", n_tok / spec_dt))
+        rows.append((f"{policy}.spec_ngram_speedup", base_dt / spec_dt))
+        rows.append((f"{policy}.spec_ngram_accept_rate",
+                     st["spec_accept_rate"]))
+        rows.append((f"{policy}.spec_ngram_tokens_per_tick",
+                     st["spec_tokens_per_tick"]))
+
+    # draft-model proposer: a 1-layer slice of the same architecture with
+    # fresh random params — a deliberately weak draft, so these rows
+    # track the verify machinery's overhead at low accept rates rather
+    # than a tuned draft's speedup.
+    draft_cfg = dataclasses.replace(cfg, name=cfg.name + "-draft", n_layers=1)
+    draft_params = init_params(jax.random.PRNGKey(7), draft_cfg)
+    with policy_scope("bf16x6"):
+        base, base_dt, _ = _timed_stream(cfg, params, prompts, gen_steps,
+                                         page_size=page_size)
+        spec, spec_dt, st = _timed_stream(
+            cfg, params, prompts, gen_steps, page_size=page_size,
+            speculative=SpecConfig(k=4, proposer="draft",
+                                   draft_cfg=draft_cfg,
+                                   draft_params=draft_params))
+    assert base == spec, "draft-spec stream diverged from baseline"
+    rows.append(("spec_draft_tok_s", sum(len(s) for s in spec) / spec_dt))
+    rows.append(("spec_draft_speedup", base_dt / spec_dt))
+    rows.append(("spec_draft_accept_rate", st["spec_accept_rate"]))
+    return rows
+
+
 def _cache_bytes_per_step(cfg, lens, page_size, paged):
     """Bytes of K+V (or latent) cache read by one decode step.
 
@@ -176,6 +259,7 @@ def run():
                  _cache_bytes_per_step(full, prod_lens, 64, True)
                  / _cache_bytes_per_step(full, [8192] * 4, 64, False)))
 
+    rows.extend(_spec_rows(cfg, params, rng))
     rows.extend(_scaling_rows())
     return rows
 

@@ -80,6 +80,13 @@ def main():
     ap.add_argument("--prefix-cache", action="store_true",
                     help="share cached prompt-prefix pages across requests "
                          "and skip their prefill (paged mode)")
+    ap.add_argument("--spec-ngram", action="store_true",
+                    help="speculative decoding with the n-gram/prompt-lookup "
+                         "proposer (paged mode): up to --spec-k draft tokens "
+                         "verified per slot in one batched multi-token step; "
+                         "token streams stay bitwise-identical per policy")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="max draft tokens verified per slot per tick")
     ap.add_argument("--mesh", default=None, metavar="DATAxMODEL",
                     help="device mesh shape, e.g. 2x4 (data=2, model=4); "
                          "default is the all-devices (n, 1) host mesh — on "
@@ -134,13 +141,18 @@ def main():
             # shared "system prompt" ahead of each tail: the cache's target
             system = list(np.asarray(tokens[0, :max(1, args.prompt_len // 2)]))
             prompts = [system + p for p in prompts]
+        spec = None
+        if args.spec_ngram:
+            from repro.spec import SpecConfig
+            spec = SpecConfig(k=args.spec_k, proposer="ngram")
         stats = {}
         with scope:          # the engine enters its own mesh scope per step
             out, tps = generate_paged(
                 cfg, params, prompts, args.gen, page_size=args.page_size,
                 max_concurrency=args.max_concurrency,
                 prefill_chunk=args.prefill_chunk,
-                prefix_cache=args.prefix_cache, mesh=mesh, stats=stats)
+                prefix_cache=args.prefix_cache, mesh=mesh, stats=stats,
+                speculative=spec)
         mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
         print(f"served {len(out)} requests (prompt lens "
               f"{[int(x) for x in lens]}) at "
@@ -149,6 +161,10 @@ def main():
         if args.prefix_cache:
             print(f"prefix cache: {stats['hit_rate']:.1%} hit rate, "
                   f"{stats['cached_tokens']} prompt tokens skipped")
+        if spec is not None:
+            print(f"speculative (ngram, k={args.spec_k}): "
+                  f"{stats['spec_accept_rate']:.1%} accept rate, "
+                  f"{stats['spec_tokens_per_tick']:.2f} tokens/tick")
         print("first stream:", out[0][:16])
         return
     with mesh, activation_sharding(mesh), scope:

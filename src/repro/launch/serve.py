@@ -120,25 +120,31 @@ def generate(cfg, params, tokens, max_len, gen_steps, batch_extras=None,
 
 def generate_paged(cfg, params, prompts, gen_steps, *, page_size=16,
                    max_concurrency=4, prefill_chunk=None,
-                   prefix_cache=False, mesh=None, stats=None):
+                   prefix_cache=False, mesh=None, stats=None,
+                   speculative=None):
     """Continuous-batching generation over paged caches.
 
     ``prompts`` is a list of token lists (mixed lengths welcome — that is
     the point).  ``prefix_cache=True`` shares cached prompt-prefix pages
     across requests (refcounted, copy-on-write boundary pages) and skips
     their prefill; pass a dict as ``stats`` to receive the scheduler's
-    cache counters (``hit_rate``, ``cached_tokens``, ...).  ``mesh``
+    cache counters (``hit_rate``, ``cached_tokens``, ...) and — with
+    ``speculative=SpecConfig(...)`` — the engine's accept-rate counters
+    (``spec_accept_rate``, ``spec_tokens_per_tick``, ...).  ``mesh``
     (a ``("data", "model")`` mesh) runs every batched model step SPMD over
     the devices — tensor-parallel params/pools per the logical-axis rules,
     host scheduler untouched, token streams identical to the single-device
-    engine.  Returns ({rid: tokens}, tokens/sec)."""
+    engine.  ``speculative`` (a ``repro.spec.SpecConfig``) commits up to
+    ``k + 1`` tokens per decode tick with streams bitwise-identical per
+    policy to the plain engine.  Returns ({rid: tokens}, tokens/sec)."""
     from repro.serving import PagedServingEngine
     max_seq = max(len(p) for p in prompts) + gen_steps + 1
     eng = PagedServingEngine(cfg, params, page_size=page_size,
                              max_concurrency=max_concurrency,
                              max_seq_len=max_seq,
                              prefill_chunk=prefill_chunk,
-                             prefix_cache=prefix_cache, mesh=mesh)
+                             prefix_cache=prefix_cache, mesh=mesh,
+                             speculative=speculative)
     for pr in prompts:
         eng.submit(pr, gen_steps)
     t0 = time.time()
@@ -146,6 +152,8 @@ def generate_paged(cfg, params, prompts, gen_steps, *, page_size=16,
     dt = time.time() - t0
     if stats is not None:
         stats.update(eng.scheduler.prefix_stats)
+        if eng.spec_stats is not None:
+            stats.update(eng.spec_stats.as_dict())
     n_tok = sum(len(v) for v in out.values())
     return out, n_tok / dt
 
@@ -176,6 +184,18 @@ def main(argv=None):
                          "matching pages by reference, clones only the "
                          "copy-on-write boundary page, and prefill starts "
                          "at the first uncached position")
+    ap.add_argument("--spec-ngram", action="store_true",
+                    help="speculative decoding with the self-speculative "
+                         "n-gram/prompt-lookup proposer (paged mode): up to "
+                         "--spec-k tokens verified per slot per tick, token "
+                         "streams bitwise-identical to the plain engine")
+    ap.add_argument("--spec-draft", default=None, metavar="ARCH",
+                    help="speculative decoding with a draft-model proposer "
+                         "(paged mode): the named arch (reduced, fresh "
+                         "random params — pair with --reduced targets) "
+                         "drafts greedily, the target verifies")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="max draft tokens verified per slot per tick")
     ap.add_argument("--mesh", default=None, metavar="DATAxMODEL",
                     help="device mesh shape, e.g. 4x2 (data=4, model=2): "
                          "params/pools shard by the logical-axis rules and "
@@ -213,13 +233,28 @@ def main(argv=None):
             # each request's own tail, so the cache has something to hit
             system = list(np.asarray(tokens[0, :max(1, args.prompt_len // 2)]))
             prompts = [system + p for p in prompts]
+        spec = None
+        if args.spec_ngram and args.spec_draft:
+            ap.error("--spec-ngram and --spec-draft are mutually exclusive")
+        if args.spec_ngram or args.spec_draft:
+            from repro.spec import SpecConfig
+            if args.spec_draft:
+                draft_cfg = get_config(args.spec_draft, reduced=True)
+                draft_params = init_params(jax.random.PRNGKey(args.seed + 1),
+                                           draft_cfg)
+                spec = SpecConfig(k=args.spec_k, proposer="draft",
+                                  draft_cfg=draft_cfg,
+                                  draft_params=draft_params)
+            else:
+                spec = SpecConfig(k=args.spec_k, proposer="ngram")
         stats = {}
         with policy_scope_from_args(args):
             out, tps = generate_paged(
                 cfg, params, prompts, args.gen, page_size=args.page_size,
                 max_concurrency=args.max_concurrency,
                 prefill_chunk=args.prefill_chunk,
-                prefix_cache=args.prefix_cache, mesh=mesh, stats=stats)
+                prefix_cache=args.prefix_cache, mesh=mesh, stats=stats,
+                speculative=spec)
         mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
         print(f"generated {sum(len(v) for v in out.values())} tokens over "
               f"{len(out)} requests at {tps:.1f} tok/s (paged, "
@@ -230,6 +265,11 @@ def main(argv=None):
                   f"({stats['cached_tokens']}/{stats['prompt_tokens']} prompt "
                   f"tokens skipped, {stats['shared_pages']} pages shared, "
                   f"{stats['boundary_copies']} COW boundary copies)")
+        if spec is not None:
+            print(f"speculative ({spec.proposer}, k={spec.k}): accept rate "
+                  f"{stats['spec_accept_rate']:.1%}, "
+                  f"{stats['spec_tokens_per_tick']:.2f} tokens/tick over "
+                  f"{stats['spec_ticks']} verify ticks")
         print("sample:", out[0][:16])
         return out
 

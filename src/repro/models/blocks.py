@@ -95,11 +95,15 @@ def block_apply(p, x: jnp.ndarray, cfg: ArchConfig, spec: BlockSpec,
         mixer_cache = cache.get("mixer") if cache else None
         y, new_mixer = apply_fn(p["mixer"], h, cfg, state=mixer_cache)
         if active is not None and mixer_cache is not None \
-                and new_mixer is not None:
+                and new_mixer is not None and h.shape[1] == 1:
             # continuous batching: recurrent state is accumulating (unlike
             # the positional, overwrite-idempotent KV append), so slots not
             # decoding this tick must keep their old state — a ghost step
-            # would consume their pending token twice
+            # would consume their pending token twice.  In the multi-token
+            # verify step (s > 1 with state) the mixers emit per-position
+            # state stacks whose shapes no longer match the old state; the
+            # caller (model.verify_step_paged) selects the accepted
+            # position's row AND applies this mask in one place.
             new_mixer = jax.tree.map(
                 lambda n, o: jnp.where(
                     active.reshape((-1,) + (1,) * (n.ndim - 1)), n, o),

@@ -296,11 +296,16 @@ def decode_step_paged(params, tokens: jnp.ndarray, caches: Any,
     one batch.  ``active (b,)`` bool marks the slots actually decoding this
     tick: idle lanes' paged KV writes are absorbed/overwritten harmlessly,
     but *recurrent* per-slot states are accumulating, so inactive slots
-    keep their old state.  ``logit_index (b,)`` int32 selects which chunk
-    position's logits to return (right-padded prefill chunks pass the last
-    *real* position; padded tail rows are causally inert for earlier rows
-    but their logits are garbage); ``None`` means the last position.
-    Returns (selected-position logits ``(b, v)``, updated caches).
+    keep their old state.  ``logit_index`` selects which chunk positions'
+    logits to return: a ``(b,)`` int32 vector picks ONE position per slot
+    (right-padded prefill chunks pass the last *real* position; padded
+    tail rows are causally inert for earlier rows but their logits are
+    garbage) and returns ``(b, v)``; a ``(b, m)`` per-slot index *vector*
+    picks ``m`` positions per slot and returns ``(b, m, v)`` — the
+    multi-position contract speculative verification scores through
+    (the scalar form silently assumed one position per slot).  ``None``
+    means the last position, ``(b, v)``.
+    Returns (selected-position logits, updated caches).
     """
     b, s = tokens.shape
     with policy_defaults(cfg.site_policies()):
@@ -313,11 +318,93 @@ def decode_step_paged(params, tokens: jnp.ndarray, caches: Any,
                                     seq_lens=seq_lens, active=active)
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         if logit_index is None:
-            sel = x[:, -1:]
-        else:
+            logits = _logits(params, x[:, -1:], cfg)[:, 0]
+        elif logit_index.ndim == 1:
             sel = x[jnp.arange(b), logit_index.astype(jnp.int32)][:, None]
-        logits = _logits(params, sel, cfg)[:, 0]
+            logits = _logits(params, sel, cfg)[:, 0]
+        else:                                   # (b, m) -> (b, m, v)
+            sel = jnp.take_along_axis(
+                x, logit_index.astype(jnp.int32)[..., None], axis=1)
+            logits = _logits(params, sel, cfg)
     return logits, new_caches
+
+
+_POOL_KEYS = frozenset(("k_pages", "v_pages", "c_pages", "r_pages"))
+
+
+def _restore_recurrent_rows(new_caches, old_caches, n_acc, active):
+    """Select each recurrent state leaf's per-position snapshot at the
+    last *accepted* position.  Multi-token decode from state stacks the
+    post-token state for every position on axis 1 after batch (leaves are
+    ``(g, b, s, ...)`` once scanned over pattern groups); page pools are
+    positional/overwrite-idempotent and pass through untouched.  Inactive
+    slots keep their old state (the per-mixer active mask in ``blocks``
+    skips stacked shapes — this is the one place it is applied)."""
+    b = n_acc.shape[0]
+    bi = jnp.arange(b)
+
+    def rec(new, old):
+        if isinstance(new, dict):
+            return {k: (new[k] if k in _POOL_KEYS else rec(new[k], old[k]))
+                    for k in new}
+        sel = new[:, bi, n_acc]                   # (g, b, ...)
+        if active is not None:
+            mask = active.reshape((1, b) + (1,) * (sel.ndim - 2))
+            sel = jnp.where(mask, sel, old)
+        return sel
+
+    return rec(new_caches, old_caches)
+
+
+def verify_step_paged(params, tokens: jnp.ndarray, caches: Any,
+                      block_table: jnp.ndarray, seq_lens: jnp.ndarray,
+                      cfg: ArchConfig,
+                      n_draft: jnp.ndarray,
+                      active: Optional[jnp.ndarray] = None
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray, Any]:
+    """Speculative-verification step: score ``s = k + 1`` tokens per slot
+    (position 0 = the slot's last committed token, positions 1.. = the
+    proposer's drafts, right-padded past ``n_draft (b,)``) in ONE paged
+    multi-token forward, then apply greedy acceptance on-device.
+
+    Returns ``(targets (b, s) int32, n_acc (b,) int32, new_caches)``.
+    ``targets[:, j]`` is the verifier's greedy argmax after consuming
+    input ``j`` — computed through the same paged multi-token path,
+    per-slot rope positions, and policy sites as sequential decode, so
+    per policy it is exactly the token the non-speculative engine would
+    emit there (the policy-aware acceptance contract: corrected policies
+    like bf16x3/bf16x6 stay bitwise-identical to their own baseline).
+    ``n_acc`` counts the leading drafts that matched; the executor
+    commits ``targets[:, :n_acc + 1]`` — accepted-per-tick is
+    ``n_acc + 1`` in ``[1, k + 1]`` (the +1 is the verifier's own
+    bonus/corrected token, so progress is guaranteed every tick).
+
+    Rollback of the rejected tail needs no pool surgery: paged KV
+    appends are positional and overwrite-idempotent, attention reads
+    mask by ``seq_lens``, and appends past a block-table row already
+    redirect to the scratch page — the executor simply advances
+    ``seq_lens`` by the committed count and refcounts are never touched.
+    Recurrent (SSM) per-slot state IS accumulating, so the mixers
+    snapshot their state after every position and this step restores the
+    row at index ``n_acc`` — the state having consumed exactly the
+    accepted inputs; inactive slots keep their old state untouched.
+    """
+    with policy_defaults(cfg.site_policies()):
+        x = _embed_tokens(params, tokens, cfg)
+        s = tokens.shape[1]
+        positions = seq_lens[:, None].astype(jnp.int32) \
+            + jnp.arange(s, dtype=jnp.int32)[None]
+        x, new_caches = _run_blocks(params["blocks"], x, cfg, positions,
+                                    causal=True, caches=caches,
+                                    block_table=block_table,
+                                    seq_lens=seq_lens, active=active)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = _logits(params, x, cfg)          # (b, s, v) fp32
+    targets = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    from repro.spec.acceptance import greedy_accept_counts
+    n_acc = greedy_accept_counts(targets, tokens[:, 1:], n_draft)
+    new_caches = _restore_recurrent_rows(new_caches, caches, n_acc, active)
+    return targets, n_acc, new_caches
 
 
 def decode_cache_specs(cfg: ArchConfig, b: int, max_len: int) -> Any:

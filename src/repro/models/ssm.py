@@ -69,17 +69,29 @@ def mamba_params(cfg: ArchConfig) -> Dict[str, PSpec]:
 
 
 def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
-                 state: Optional[jnp.ndarray] = None):
+                 state: Optional[jnp.ndarray] = None,
+                 stack_state: bool = False):
     """Depthwise causal conv along time.  x (b, s, d_in), w (k, d_in).
-    Returns (y, new_state) where state is the last k-1 inputs."""
+    Returns (y, new_state) where state is the last k-1 inputs.  With
+    ``stack_state`` the returned state carries one window PER position
+    (``(b, s, k-1, d_in)`` — the state after consuming position t), so a
+    speculative-verification caller can restore the window of the last
+    *accepted* token; each per-position output is unchanged."""
     k = w.shape[0]
+    s = x.shape[1]
     if state is None:
         pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
     else:
         pad = state.astype(x.dtype)
     xp = jnp.concatenate([pad, x], axis=1)               # (b, s+k-1, d)
-    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(k))
-    new_state = xp[:, -(k - 1):] if k > 1 else None
+    y = sum(xp[:, i:i + s] * w[i][None, None] for i in range(k))
+    if k <= 1:
+        new_state = None
+    elif stack_state:
+        # window after position t = inputs t-k+2 .. t = xp[:, t+1 : t+k]
+        new_state = jnp.stack([xp[:, t + 1:t + k] for t in range(s)], axis=1)
+    else:
+        new_state = xp[:, -(k - 1):]
     return y + b[None, None].astype(y.dtype), new_state
 
 
@@ -123,7 +135,13 @@ def _ssm_chunk_scan(x, dt, B, C, a, chunk):
 
 def mamba_apply(p, x: jnp.ndarray, cfg: ArchConfig,
                 state: Optional[Dict] = None) -> Tuple[jnp.ndarray, Optional[Dict]]:
-    """Mamba mixer.  state given -> single-token decode (s == 1)."""
+    """Mamba mixer.  state given -> decode.  ``s == 1`` is the classic
+    single-token step; ``s > 1`` with state is the *speculative
+    verification* step: the identical single-step recurrence applied
+    sequentially per position (bitwise what s separate decode ticks would
+    compute), with the post-token state emitted for EVERY position
+    (leaves gain an ``s`` axis at dim 1) so the caller can restore the row
+    of the last accepted draft (``model.verify_step_paged``)."""
     s_cfg = cfg.ssm
     b, s, d = x.shape
     d_in, dt_rank = _mamba_dims(cfg)
@@ -133,7 +151,8 @@ def mamba_apply(p, x: jnp.ndarray, cfg: ArchConfig,
     x_br, z = jnp.split(xz, 2, axis=-1)
 
     conv_state = state["conv"] if state is not None else None
-    x_c, new_conv = _causal_conv(x_br, p["conv_w"], p["conv_b"], conv_state)
+    x_c, new_conv = _causal_conv(x_br, p["conv_w"], p["conv_b"], conv_state,
+                                 stack_state=state is not None and s > 1)
     x_c = shard_hint(jax.nn.silu(x_c.astype(jnp.float32)),
                      "batch", None, "mlp")
 
@@ -146,7 +165,21 @@ def mamba_apply(p, x: jnp.ndarray, cfg: ArchConfig,
         + p["dt_bias"][None, None])
     a = -jnp.exp(p["a_log"].astype(jnp.float32))          # (d_in, n) < 0
 
-    if state is not None:  # decode: one recurrence step
+    if state is not None and s > 1:  # multi-token decode (verification)
+        def step(h_prev, xs_t):
+            dt_t, xc_t, B_t, C_t = xs_t
+            decay = jnp.exp(dt_t[..., None] * a[None])
+            h = decay * h_prev + (dt_t * xc_t)[..., None] * B_t[:, None, :]
+            y_t = jnp.sum(h * C_t[:, None, :], axis=-1)
+            return h, (h, y_t)
+
+        _, (hs, ys) = jax.lax.scan(
+            step, state["h"],
+            (dt.swapaxes(0, 1), x_c.swapaxes(0, 1),
+             B.swapaxes(0, 1), C.swapaxes(0, 1)))
+        y = ys.swapaxes(0, 1)                             # (b, s, d_in)
+        new_state = {"h": hs.swapaxes(0, 1), "conv": new_conv}
+    elif state is not None:  # decode: one recurrence step
         h_prev = state["h"]
         decay = jnp.exp(dt[:, 0, :, None] * a[None])
         h = decay * h_prev + (dt[:, 0] * x_c[:, 0])[..., None] * B[:, 0, None, :]
@@ -262,7 +295,8 @@ def mlstm_apply(p, x: jnp.ndarray, cfg: ArchConfig,
     xz = shard_hint(dense(x, p["w_up"], pol), "batch", None, "mlp")
     x_br, z = jnp.split(xz, 2, axis=-1)
     conv_state = state["conv"] if state is not None else None
-    x_c, new_conv = _causal_conv(x_br, p["conv_w"], p["conv_b"], conv_state)
+    x_c, new_conv = _causal_conv(x_br, p["conv_w"], p["conv_b"], conv_state,
+                                 stack_state=state is not None and s > 1)
     x_c = shard_hint(jax.nn.silu(x_c.astype(jnp.float32)).astype(x.dtype),
                      "batch", None, "mlp")
 
@@ -275,7 +309,31 @@ def mlstm_apply(p, x: jnp.ndarray, cfg: ArchConfig,
     log_i = -jax.nn.softplus(-gates[..., 0])              # log sigmoid(i)
     log_f = -jax.nn.softplus(-gates[..., 1])              # log sigmoid(f)
 
-    if state is not None:
+    if state is not None and s > 1:
+        # multi-token decode (speculative verification): the exact
+        # single-step recurrence scanned per position, states stacked on
+        # axis 1 so the verify step can restore the accepted position's row
+        def step(carry, xs_t):
+            C_prev, n_prev = carry
+            q_t, k_t, v_t, lf_t, li_t = xs_t
+            f_ = jnp.exp(lf_t)[..., None, None]           # (b, nh, 1, 1)
+            i_ = jnp.exp(li_t)[..., None, None]
+            C = C_prev * f_ + i_ * k_t[..., :, None] * v_t[..., None, :]
+            n = n_prev * f_[..., 0] + i_[..., 0] * k_t
+            q0 = q_t / (dh ** 0.5)
+            num = _ssm_einsum("bhd,bhde->bhe", q0, C)
+            den = jnp.abs(_ssm_einsum("bhd,bhd->bh", q0, n))
+            y_t = num / jnp.maximum(den, 1.0)[..., None]
+            return (C, n), (C, n, y_t)
+
+        _, (Cs, ns, ys) = jax.lax.scan(
+            step, (state["C"], state["n"]),
+            (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+             log_f.swapaxes(0, 1), log_i.swapaxes(0, 1)))
+        new_state = {"C": Cs.swapaxes(0, 1), "n": ns.swapaxes(0, 1),
+                     "conv": new_conv}
+        y = ys.swapaxes(0, 1).reshape(b, s, d_in)
+    elif state is not None:
         C_prev, n_prev = state["C"], state["n"]
         f_ = jnp.exp(log_f[:, 0])[..., None, None]        # (b, nh, 1, 1)
         i_ = jnp.exp(log_i[:, 0])[..., None, None]
@@ -346,6 +404,11 @@ def slstm_apply(p, x: jnp.ndarray, cfg: ArchConfig,
 
     r = p["r_gates"].astype(jnp.float32)                  # (nh, dh, 4dh)
 
+    # multi-token decode from carried state (speculative verification)
+    # additionally stacks the full carry per position, so the verify step
+    # can restore the state row of the last accepted draft
+    stack = state is not None and s > 1
+
     def step(carry, pre_t):
         c, n, h, m = carry
         pre = pre_t + _ssm_einsum("bhd,hdk->bhk", h, r)   # recurrent term
@@ -360,15 +423,22 @@ def slstm_apply(p, x: jnp.ndarray, cfg: ArchConfig,
         c_new = f_g * c + i_g * z_g
         n_new = f_g * n + i_g
         h_new = o_g * c_new / jnp.maximum(n_new, 1.0)
-        return (c_new, n_new, h_new, m_new), h_new
+        new = (c_new, n_new, h_new, m_new)
+        return new, (new if stack else h_new)
 
-    (c, n, h, m), hs = jax.lax.scan(
+    (c, n, h, m), ys = jax.lax.scan(
         step, (st["c"], st["n"], st["h"], st["m"]), pre_x.swapaxes(0, 1))
+    if stack:
+        cs, ns_, hs, ms = ys
+        new_state = {"c": cs.swapaxes(0, 1), "n": ns_.swapaxes(0, 1),
+                     "h": hs.swapaxes(0, 1), "m": ms.swapaxes(0, 1)}
+    else:
+        hs = ys
+        new_state = {"c": c, "n": n, "h": h, "m": m}
     y = hs.swapaxes(0, 1).reshape(b, s, d).astype(x.dtype)
     y = rms_norm(y, p["norm"], cfg.norm_eps)
     # post-projection FFN (GeGLU, pf 4/3)
     ff = jax.nn.gelu(dense(y, p["w_up1"], pol).astype(jnp.float32)) \
         * dense(y, p["w_up2"], pol).astype(jnp.float32)
     out = dense(ff.astype(x.dtype), p["w_down"], pol)
-    new_state = {"c": c, "n": n, "h": h, "m": m}
     return out.astype(x.dtype), new_state

@@ -17,6 +17,11 @@ refcounted page sharing: a radix index over page-granularity token spans
 lets admission install cached prefix pages by reference, skip their
 prefill entirely, and clone only the copy-on-write boundary page where a
 prompt diverges inside a cached page.
+
+Speculative decoding (``repro.spec``) rides the same engine:
+``PagedServingEngine(speculative=SpecConfig(...))`` turns each decode tick
+into a batched multi-token verify tick committing ``[1, k+1]`` tokens per
+slot, streams bitwise-identical per policy to the plain engine.
 """
 from .paged_cache import (append_pages, copy_page, gather_pages, init_pool,
                           pages_needed, NULL_PAGE)

@@ -42,6 +42,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.models import (decode_step_paged, init_paged_decode_caches,
                           prefill)
+from repro.models.model import verify_step_paged
 from .paged_cache import (NULL_PAGE, copy_page, pages_needed,
                           write_prefill_prefix)
 from .scheduler import Request, Scheduler, StepPlan
@@ -96,6 +97,20 @@ class PagedServingEngine:
     at bf16 wire width through the einsum frontend's emit-width
     discipline).  Control tensors (tokens, block table, seq lens, active
     mask) are replicated — they are bytes, not bandwidth.
+
+    ``speculative=SpecConfig(...)`` turns decode ticks into speculative
+    verify ticks (``repro.spec``): a host-side proposer drafts up to ``k``
+    tokens per slot, ONE batched ``verify_step_paged`` scores all ``k+1``
+    positions through the paged multi-token path, and greedy acceptance
+    commits the matched prefix plus the verifier's bonus/corrected token
+    — ``[1, k+1]`` tokens per tick, streams bitwise-identical per policy
+    to the non-speculative engine.  Rollback is free: seq_lens advance by
+    the committed count only, the rejected tail's positional KV appends
+    are overwritten (or scratch-absorbed past the block row) before any
+    read, refcounts untouched.  Ghost lanes stay safe for the same
+    reason single-token ticks keep them safe: a position only becomes
+    readable once a *real* append at it advances ``seq_lens`` past it,
+    and every real append overwrites the position first.
     """
 
     def __init__(self, cfg: ArchConfig, params, *,
@@ -105,7 +120,8 @@ class PagedServingEngine:
                  prefill_chunk=None,
                  prefix_cache: bool = False,
                  mesh=None,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None,
+                 speculative=None):
         tuned = None
         if page_size is None or prefill_chunk == "auto":
             tuned = self._tuned_plan(cfg, max_seq_len)
@@ -129,10 +145,19 @@ class PagedServingEngine:
         self.npages_per_seq = pages_needed(max_seq_len, page_size)
         if num_pages is None:
             num_pages = 1 + max_concurrency * self.npages_per_seq
+        self.spec = speculative
         self.scheduler = Scheduler(num_pages, page_size, max_concurrency,
                                    self.npages_per_seq,
                                    prefill_chunk=prefill_chunk,
-                                   prefix_cache=prefix_cache)
+                                   prefix_cache=prefix_cache,
+                                   spec_lookahead=(speculative.k
+                                                   if speculative else 0))
+        self.proposer = None
+        self._spec_stats = None
+        if speculative is not None:
+            from repro.spec import SpecStats, build_proposer
+            self.proposer = build_proposer(speculative, max_seq_len)
+            self._spec_stats = SpecStats()
         self.caches = init_paged_decode_caches(cfg, max_concurrency,
                                                num_pages, page_size)
         self.mesh = mesh
@@ -161,6 +186,10 @@ class PagedServingEngine:
         self._prefill_fn = jax.jit(functools.partial(prefill, cfg=cfg))
         self._write_fn = jax.jit(write_prefill_prefix, donate_argnums=(0,))
         self._copy_fn = jax.jit(copy_page, donate_argnums=(0,))
+        self._verify_fn = jax.jit(
+            lambda p, t, c, bt, sl, act, nd: verify_step_paged(
+                p, t, c, bt, sl, cfg, n_draft=nd, active=act),
+            donate_argnums=(2,))
 
     def _scope(self):
         """Mesh + activation-sharding context for every jitted model call
@@ -225,8 +254,12 @@ class PagedServingEngine:
         for rid, slot in plan.evict:
             self.block_table[slot] = NULL_PAGE
             self.seq_lens[slot] = 0
+            if self.proposer is not None:
+                self.proposer.release(rid)
         for rid, slot in plan.admit:
             st = sched.active[rid]
+            if self.proposer is not None:
+                self.proposer.register(rid, st.req.prompt)
             row = sched.block_row(rid)
             self.block_table[slot] = NULL_PAGE
             self.block_table[slot, :len(row)] = row
@@ -277,10 +310,17 @@ class PagedServingEngine:
                 tok = int(jnp.argmax(logits[0]))
                 sched.record_prefill(chunk.rid, chunk.end, first_token=tok)
                 self._last_tok[chunk.slot] = tok
+                if self.proposer is not None \
+                        and not sched.active[chunk.rid].finished:
+                    # feed the first emitted token (unless it finished the
+                    # request outright — its state is about to be released)
+                    self.proposer.observe(chunk.rid, [tok])
             else:
                 sched.record_prefill(chunk.rid, chunk.end)
 
-        if plan.decode:
+        if plan.decode and self.spec is not None:
+            self._spec_decode(plan)
+        elif plan.decode:
             toks = self._host(self._last_tok[:, None])
             active = np.zeros((len(self.seq_lens),), bool)
             for _, slot in plan.decode:
@@ -296,6 +336,54 @@ class PagedServingEngine:
                 sched.record_decode(rid, tok)
                 self._last_tok[slot] = tok
         return plan
+
+    def _spec_decode(self, plan: StepPlan) -> None:
+        """One speculative verify tick over every decode-phase slot.
+
+        Input row per slot: ``[last committed token, draft_1 .. draft_k]``
+        right-padded past the slot's real draft count.  The draft budget
+        is capped at ``max_new_tokens - generated - 1`` so a full accept
+        (``budget + 1`` tokens) lands exactly on the request's reservation
+        — ``record_decode_burst`` then only ever truncates on eos."""
+        sched = self.scheduler
+        k = self.spec.k
+        b = len(self.seq_lens)
+        toks = np.zeros((b, k + 1), np.int32)
+        toks[:, 0] = self._last_tok
+        n_draft = np.zeros((b,), np.int32)
+        active = np.zeros((b,), bool)
+        for rid, slot in plan.decode:
+            active[slot] = True
+            st = sched.active[rid]
+            budget = min(k, st.req.max_new_tokens - st.generated - 1)
+            drafts = self.proposer.propose(rid, budget) if budget > 0 else []
+            n_draft[slot] = len(drafts)
+            toks[slot, 1:1 + len(drafts)] = drafts
+        targets, n_acc, self.caches = self._verify_fn(
+            self.params, self._host(toks), self.caches,
+            self._host(self.block_table), self._host(self.seq_lens),
+            self._host(active, jnp.bool_), self._host(n_draft))
+        targets = np.asarray(targets)
+        n_acc = np.asarray(n_acc)
+        stats = self._spec_stats
+        for rid, slot in plan.decode:
+            n_out = int(n_acc[slot]) + 1
+            out = [int(t) for t in targets[slot, :n_out]]
+            committed = sched.record_decode_burst(rid, out)
+            self.seq_lens[slot] += committed
+            self._last_tok[slot] = out[committed - 1]
+            if not sched.active[rid].finished:
+                self.proposer.observe(rid, out[:committed])
+            stats.proposed += int(n_draft[slot])
+            stats.accepted += n_out - 1
+            stats.emitted += committed
+        stats.ticks += 1
+
+    @property
+    def spec_stats(self):
+        """``repro.spec.SpecStats`` counters, or ``None`` when the engine
+        is not speculative."""
+        return self._spec_stats
 
     def run(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
         """Drive the step loop until every submitted request completed.

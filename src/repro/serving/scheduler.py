@@ -207,16 +207,31 @@ class Scheduler:
     def __init__(self, num_pages: int, page_size: int, max_concurrency: int,
                  max_pages_per_seq: int,
                  prefill_chunk: Optional[int] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 spec_lookahead: int = 0):
         if page_size < 1 or max_concurrency < 1 or max_pages_per_seq < 1:
             raise ValueError("page_size, max_concurrency and "
                              "max_pages_per_seq must all be >= 1")
         if prefill_chunk is not None and prefill_chunk < 1:
             raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
+        if spec_lookahead < 0:
+            raise ValueError(f"spec_lookahead must be >= 0, got "
+                             f"{spec_lookahead}")
         self.page_size = page_size
         self.max_concurrency = max_concurrency
         self.max_pages_per_seq = max_pages_per_seq
         self.prefill_chunk = prefill_chunk
+        # Burst-decode audit (speculative decoding commits up to
+        # spec_lookahead + 1 tokens per tick): admission reserves
+        # ceil(max_len / page_size) pages up front — ALL pages the request
+        # can ever touch, whatever the per-tick burst — so a k-token
+        # accept can never need a page the allocator cannot hand out
+        # mid-tick.  The executor separately caps each slot's draft budget
+        # at max_new_tokens - generated - 1, so record_decode_burst never
+        # sees tokens past the reservation; _emit stops a burst at
+        # eos/max_new and the tail KV appends land past seq_lens (masked,
+        # scratch-absorbed), never in unreserved pages.
+        self.spec_lookahead = spec_lookahead
         self.allocator = PageAllocator(num_pages)
         self.prefix_index = PrefixIndex(page_size) if prefix_cache else None
         self.queue: List[Request] = []
@@ -350,7 +365,33 @@ class Scheduler:
         """The executor decoded one token for ``rid``."""
         self._emit(self.active[rid], token)
 
+    def record_decode_burst(self, rid: int, tokens: Sequence[int]) -> int:
+        """A speculative tick committed up to ``spec_lookahead + 1`` tokens
+        for ``rid`` in one step.  Emits them in order, stopping at the
+        request's own finish condition (eos / max_new_tokens) — tokens
+        past it are discarded.  Returns the count actually committed, by
+        which the executor advances ``seq_lens`` (and feeds the proposer).
+        """
+        if len(tokens) > self.spec_lookahead + 1:
+            raise ValueError(
+                f"request {rid}: burst of {len(tokens)} tokens exceeds "
+                f"spec_lookahead + 1 = {self.spec_lookahead + 1}")
+        if not tokens:
+            raise ValueError(f"request {rid}: empty decode burst — every "
+                             f"verify tick commits at least one token")
+        st = self.active[rid]
+        committed = 0
+        for t in tokens:
+            self._emit(st, t)
+            committed += 1
+            if st.finished:
+                break
+        return committed
+
     def _emit(self, st: _Active, token: int) -> None:
+        if st.finished:
+            raise RuntimeError(
+                f"request {st.req.rid}: token emitted after finish")
         st.tokens.append(token)
         st.generated += 1
         eos = st.req.eos_id is not None and token == st.req.eos_id

@@ -1,0 +1,44 @@
+"""repro.spec — speculative decoding for the paged serving engine.
+
+Decode is memory-bound: every tick streams the whole paged KV pool plus
+the weights to score ONE token per slot.  Speculative decoding amortizes
+that traffic: a cheap *proposer* drafts up to ``k`` tokens per slot, the
+target model scores all ``k + 1`` positions in a single batched paged
+multi-token forward (``model.verify_step_paged`` — the same
+``paged_prefill_attention``-backed path chunked prefill uses), and greedy
+acceptance commits the leading drafts that match plus the verifier's own
+bonus/corrected token.  Per tick each slot advances by ``n_acc + 1`` in
+``[1, k + 1]`` tokens for roughly one tick's worth of pool/weight
+traffic — the serving-layer analogue of the footprint-per-flop reduction
+the source paper's register-level WMMA extension pursues in-kernel.
+
+Because the verifier's argmax per position is computed through the same
+paged path and TCEC policy sites as sequential decode, the accepted
+stream is *bitwise-identical* to the non-speculative engine per policy
+(fp32_vpu, bf16x1, corrected bf16x3/bf16x6, ...) — speculation changes
+only wall-clock, never tokens.
+
+Entry points:
+  * ``SpecConfig``        — k, proposer choice, draft model handles.
+  * ``Proposer`` protocol — ``NGramProposer`` (self-speculative
+    prompt-lookup, no extra weights) and ``DraftModelProposer`` (any
+    smaller ``ArchConfig`` sharing the greedy contract).
+  * ``greedy_accept_counts`` / ``SpecStats`` — on-device acceptance and
+    per-engine accept-rate accounting.
+  * ``PagedServingEngine(speculative=SpecConfig(...))`` wires it up;
+    ``--spec-ngram`` / ``--spec-draft`` on the serve CLI.
+"""
+from .acceptance import SpecStats, greedy_accept_counts
+from .config import SpecConfig
+from .proposer import (DraftModelProposer, NGramProposer, Proposer,
+                       build_proposer)
+
+__all__ = [
+    "SpecConfig",
+    "SpecStats",
+    "greedy_accept_counts",
+    "Proposer",
+    "NGramProposer",
+    "DraftModelProposer",
+    "build_proposer",
+]

@@ -1,0 +1,61 @@
+"""Greedy acceptance for speculative verification + accept-rate stats.
+
+Acceptance is *policy-aware by construction*: the verifier's targets are
+argmaxed from logits computed through the exact paged multi-token path and
+TCEC policy sites sequential decode uses, so "draft matches target" is
+literally "draft equals the token the non-speculative engine would emit".
+Accepting the matched prefix plus the verifier's bonus/corrected token
+therefore reproduces the baseline stream bitwise per policy — no
+distribution-level accept/reject sampling is needed for greedy serving.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+def greedy_accept_counts(targets: jnp.ndarray, drafts: jnp.ndarray,
+                         n_draft: jnp.ndarray) -> jnp.ndarray:
+    """Count leading draft tokens the verifier agrees with.
+
+    ``targets (b, s)`` — verifier argmax after consuming input j (only the
+    first ``k = s - 1`` columns are compared); ``drafts (b, k)`` — proposed
+    tokens (right-padded); ``n_draft (b,)`` — real draft count per slot
+    (padding never matches).  Returns ``n_acc (b,) int32`` in ``[0, k]``:
+    the executor commits ``targets[:, :n_acc + 1]``, i.e. the matched
+    drafts plus one bonus/corrected token — guaranteed progress every
+    tick.  ``sum(cumprod(ok))`` counts the all-true prefix length.
+    """
+    k = drafts.shape[1]
+    ok = (targets[:, :k] == drafts) \
+        & (jnp.arange(k, dtype=jnp.int32)[None, :] < n_draft[:, None])
+    return jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=1),
+                   axis=1).astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class SpecStats:
+    """Per-engine speculative-decoding counters (host-side, cheap)."""
+    proposed: int = 0   # draft tokens scored by the verifier
+    accepted: int = 0   # draft tokens that matched (excl. bonus tokens)
+    emitted: int = 0    # tokens committed to streams via spec ticks
+    ticks: int = 0      # verify ticks executed
+
+    @property
+    def accept_rate(self) -> float:
+        return self.accepted / self.proposed if self.proposed else 0.0
+
+    @property
+    def tokens_per_tick(self) -> float:
+        return self.emitted / self.ticks if self.ticks else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "spec_proposed": self.proposed,
+            "spec_accepted": self.accepted,
+            "spec_emitted": self.emitted,
+            "spec_ticks": self.ticks,
+            "spec_accept_rate": self.accept_rate,
+            "spec_tokens_per_tick": self.tokens_per_tick,
+        }

@@ -1,0 +1,47 @@
+"""Speculative-decoding configuration for ``PagedServingEngine``."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+_PROPOSERS = ("ngram", "draft")
+
+
+# eq=False: draft_params holds jax arrays, whose __eq__ is elementwise —
+# the generated dataclass __eq__/__hash__ would be wrong or raise.
+@dataclasses.dataclass(frozen=True, eq=False)
+class SpecConfig:
+    """``PagedServingEngine(speculative=SpecConfig(...))``.
+
+    ``k`` — max draft tokens verified per slot per tick (the verify
+    forward scores ``k + 1`` positions).  ``proposer`` — ``"ngram"``
+    (self-speculative prompt lookup over each request's own context, no
+    extra weights) or ``"draft"`` (a smaller model decoded greedily;
+    ``draft_cfg``/``draft_params`` are any ``ArchConfig`` + params sharing
+    the tokenizer-free greedy contract).  ``max_ngram``/``min_ngram``
+    bound the trailing-pattern lengths the n-gram proposer tries, longest
+    first.
+    """
+    k: int = 4
+    proposer: str = "ngram"
+    max_ngram: int = 3
+    min_ngram: int = 1
+    draft_cfg: Optional[Any] = None
+    draft_params: Optional[Any] = None
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"SpecConfig.k must be >= 1, got {self.k}")
+        if self.proposer not in _PROPOSERS:
+            raise ValueError(
+                f"SpecConfig.proposer must be one of {_PROPOSERS}, "
+                f"got {self.proposer!r}")
+        if not 1 <= self.min_ngram <= self.max_ngram:
+            raise ValueError(
+                "SpecConfig needs 1 <= min_ngram <= max_ngram, got "
+                f"min_ngram={self.min_ngram} max_ngram={self.max_ngram}")
+        if self.proposer == "draft" and (
+                self.draft_cfg is None or self.draft_params is None):
+            raise ValueError(
+                "SpecConfig(proposer='draft') needs draft_cfg and "
+                "draft_params")

@@ -1,0 +1,151 @@
+"""Draft-token proposers behind one ``Proposer`` protocol.
+
+A proposer is a *host-side* per-request oracle the engine consults each
+decode tick: it tracks every request's committed context (prompt + emitted
+tokens) and guesses the next few tokens.  Wrong guesses only cost verify
+bandwidth — acceptance guarantees the committed stream is the baseline
+stream bitwise — so proposers are free to be heuristic.
+
+  * ``NGramProposer`` — self-speculative prompt lookup: find the most
+    recent earlier occurrence of the context's trailing n-gram (longest
+    first) and propose the tokens that followed it.  Zero extra weights;
+    shines on repetitive continuations (code, templated text, and the
+    short greedy cycles small models lock into).
+  * ``DraftModelProposer`` — greedy rollout of a smaller ``ArchConfig``
+    through the dense decode path; the draft caches consume exactly the
+    committed tokens (``observe``), so drafts condition on the same
+    context the target verifies against.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Protocol, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .config import SpecConfig
+
+
+class Proposer(Protocol):
+    """Per-request draft oracle consulted by the engine each spec tick."""
+
+    def register(self, rid: int, prompt: Sequence[int]) -> None:
+        """A request entered a slot with this committed prompt."""
+
+    def observe(self, rid: int, tokens: Sequence[int]) -> None:
+        """Tokens were committed to the request's stream (in order)."""
+
+    def propose(self, rid: int, max_tokens: int) -> List[int]:
+        """Up to ``max_tokens`` draft tokens continuing the context
+        (possibly empty — the engine then runs a plain decode tick)."""
+
+    def release(self, rid: int) -> None:
+        """The request left its slot; drop its state."""
+
+
+class NGramProposer:
+    """Prompt-lookup proposer: match the trailing n-gram, replay what
+    followed its most recent earlier occurrence."""
+
+    def __init__(self, max_ngram: int = 3, min_ngram: int = 1):
+        if not 1 <= min_ngram <= max_ngram:
+            raise ValueError("need 1 <= min_ngram <= max_ngram")
+        self.max_ngram = max_ngram
+        self.min_ngram = min_ngram
+        self._ctx: Dict[int, List[int]] = {}
+
+    def register(self, rid: int, prompt: Sequence[int]) -> None:
+        self._ctx[rid] = list(prompt)
+
+    def observe(self, rid: int, tokens: Sequence[int]) -> None:
+        self._ctx[rid].extend(tokens)
+
+    def release(self, rid: int) -> None:
+        self._ctx.pop(rid, None)
+
+    def propose(self, rid: int, max_tokens: int) -> List[int]:
+        ctx = self._ctx[rid]
+        if max_tokens <= 0:
+            return []
+        # Longest trailing pattern first; the pattern must have an earlier
+        # occurrence, so n is capped at len(ctx) - 1.
+        for n in range(min(self.max_ngram, len(ctx) - 1),
+                       self.min_ngram - 1, -1):
+            pat = ctx[-n:]
+            # Most recent earlier occurrence (recency beats frequency for
+            # greedy continuations).
+            for j in range(len(ctx) - n - 1, -1, -1):
+                if ctx[j:j + n] == pat:
+                    cont = ctx[j + n:j + n + max_tokens]
+                    # Exclude the trailing pattern itself from the
+                    # continuation window when the match overlaps it.
+                    if cont:
+                        return cont[:max_tokens]
+                    break
+        return []
+
+
+class DraftModelProposer:
+    """Greedy rollout of a smaller model through the dense decode path.
+
+    Per request: dense decode caches sized ``max_seq_len``, the position
+    counter, and the logits predicting the next token.  ``observe`` feeds
+    each committed token through one decode step, so the stored caches
+    always reflect exactly the committed context; ``propose`` rolls out
+    greedily on a *local* caches variable — the jitted step does NOT
+    donate its cache argument, so the stored (committed) caches stay
+    valid whatever the verifier later rejects.
+    """
+
+    def __init__(self, cfg, params, max_seq_len: int):
+        from repro.models import model as M
+        self.cfg = cfg
+        self.params = params
+        self.max_seq_len = int(max_seq_len)
+        self._state: Dict[int, list] = {}   # rid -> [caches, pos, logits]
+        self._prefill = jax.jit(lambda p, t: M.prefill(p, {"tokens": t}, cfg))
+        # No donate_argnums: propose() must be able to roll forward from a
+        # snapshot without invalidating it.
+        self._step = jax.jit(
+            lambda p, t, c, i: M.decode_step(p, t, c, i, cfg))
+
+    def register(self, rid: int, prompt: Sequence[int]) -> None:
+        from repro.launch.serve import write_prefill_caches
+        from repro.models import model as M
+        toks = jnp.asarray([list(prompt)], dtype=jnp.int32)
+        logits, pf_caches = self._prefill(self.params, toks)
+        caches = M.init_decode_caches(self.cfg, 1, self.max_seq_len)
+        caches = write_prefill_caches(caches, pf_caches, self.cfg)
+        self._state[rid] = [caches, len(prompt), logits]
+
+    def observe(self, rid: int, tokens: Sequence[int]) -> None:
+        st = self._state[rid]
+        for t in tokens:
+            if st[1] >= self.max_seq_len:
+                break
+            tok = jnp.asarray([[t]], dtype=jnp.int32)
+            st[2], st[0] = self._step(self.params, tok, st[0],
+                                      jnp.int32(st[1]))
+            st[1] += 1
+
+    def release(self, rid: int) -> None:
+        self._state.pop(rid, None)
+
+    def propose(self, rid: int, max_tokens: int) -> List[int]:
+        caches, pos, logits = self._state[rid]
+        out: List[int] = []
+        while len(out) < max_tokens and pos < self.max_seq_len:
+            tok = int(jnp.argmax(logits, -1)[0])
+            out.append(tok)
+            if len(out) < max_tokens:
+                logits, caches = self._step(
+                    self.params, jnp.asarray([[tok]], dtype=jnp.int32),
+                    caches, jnp.int32(pos))
+                pos += 1
+        return out
+
+
+def build_proposer(spec: SpecConfig, max_seq_len: int) -> Proposer:
+    if spec.proposer == "ngram":
+        return NGramProposer(spec.max_ngram, spec.min_ngram)
+    return DraftModelProposer(spec.draft_cfg, spec.draft_params, max_seq_len)

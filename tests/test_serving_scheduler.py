@@ -213,6 +213,81 @@ def test_scheduler_fifo_admission_and_eos(data):
 
 
 # ---------------------------------------------------------------------------
+# burst decode (speculative ticks)
+# ---------------------------------------------------------------------------
+
+def _admitted_sched(max_new=6, spec_lookahead=3, eos_id=None):
+    sched = Scheduler(num_pages=20, page_size=2, max_concurrency=1,
+                      max_pages_per_seq=8, spec_lookahead=spec_lookahead)
+    sched.submit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=max_new,
+                         eos_id=eos_id))
+    sched.step()
+    sched.record_prefill(0, 3, first_token=5)
+    return sched
+
+
+def test_decode_burst_commits_and_validates():
+    """A k-token accept commits in one call; oversized bursts and empty
+    bursts are scheduler-contract violations."""
+    sched = _admitted_sched(max_new=6, spec_lookahead=3)
+    assert sched.record_decode_burst(0, [7, 8, 9, 10]) == 4
+    with pytest.raises(ValueError, match="exceeds"):
+        sched.record_decode_burst(0, [1, 2, 3, 4, 5])
+    with pytest.raises(ValueError, match="empty"):
+        sched.record_decode_burst(0, [])
+    assert sched.record_decode_burst(0, [11]) == 1       # -> 6 generated
+    assert sched.completed[0] == [5, 7, 8, 9, 10, 11]
+    sched.step()                                         # evict
+    assert sched.allocator.n_free == 19
+
+
+def test_decode_burst_truncates_at_eos_and_max_new():
+    """Tokens past the request's own finish condition are discarded — the
+    committed count is what the executor advances seq_lens by."""
+    sched = _admitted_sched(max_new=6, spec_lookahead=3, eos_id=99)
+    assert sched.record_decode_burst(0, [7, 99, 8, 9]) == 2
+    assert sched.completed[0] == [5, 7, 99]
+    sched = _admitted_sched(max_new=3, spec_lookahead=3)
+    # 2 remaining, 4 offered: max_new truncates
+    assert sched.record_decode_burst(0, [7, 8, 9, 10]) == 2
+    assert sched.completed[0] == [5, 7, 8]
+
+
+def test_emit_after_finish_raises():
+    """Satellite-1 audit guard: no token may ever be recorded for a
+    finished request — a finished slot's pages are being evicted."""
+    sched = _admitted_sched(max_new=2, spec_lookahead=2)
+    assert sched.record_decode_burst(0, [7, 8]) == 1
+    with pytest.raises(RuntimeError, match="after finish"):
+        sched.record_decode(0, 9)
+
+
+def test_burst_reservation_always_covers_spec_lookahead():
+    """Satellite-1 audit, the property itself: admission reserves ALL
+    pages a request can ever touch up front (ceil(max_len / page_size)),
+    so a full k-token accept never needs a mid-tick allocation — drive a
+    max-burst stream and check the block row always covers the committed
+    length."""
+    for page_size, k, max_new in [(1, 4, 9), (2, 3, 7), (4, 5, 5)]:
+        sched = Scheduler(num_pages=40, page_size=page_size,
+                          max_concurrency=2, max_pages_per_seq=20,
+                          spec_lookahead=k)
+        sched.submit(Request(rid=0, prompt=[1] * 3, max_new_tokens=max_new))
+        sched.step()
+        sched.record_prefill(0, 3, first_token=5)
+        emitted = 1
+        while 0 in sched.active and not sched.active[0].finished:
+            sched.step()
+            st = sched.active[0]
+            budget = min(k, st.req.max_new_tokens - st.generated - 1)
+            n = sched.record_decode_burst(0, [7] * (budget + 1))
+            emitted += n
+            covered = len(st.block_row) * page_size
+            assert 3 + emitted <= covered, (page_size, k, emitted)
+        assert emitted == max_new
+
+
+# ---------------------------------------------------------------------------
 # golden: engine token streams == single-request generate()
 # ---------------------------------------------------------------------------
 

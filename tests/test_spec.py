@@ -1,0 +1,348 @@
+"""Speculative decoding (``repro.spec``): acceptance math, proposers, and
+the golden contract — speculative token streams are BITWISE-identical to
+the non-speculative engine per policy, whatever the proposer guesses.
+Speculation may only change wall-clock, never tokens."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.serving.paged_cache import pages_needed
+from repro.spec import (DraftModelProposer, NGramProposer, SpecConfig,
+                        build_proposer, greedy_accept_counts)
+
+try:        # property tests need hypothesis; the rest of the file does not
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                        # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+    def given(*a, **k):
+        return lambda f: pytest.mark.skip("hypothesis not installed")(f)
+
+    def settings(*a, **k):
+        return lambda f: f
+
+    class _StStub:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+    st = _StStub()
+
+
+# ---------------------------------------------------------------------------
+# acceptance math
+# ---------------------------------------------------------------------------
+
+def test_greedy_accept_counts_prefix_semantics():
+    targets = jnp.asarray([[5, 6, 7, 8, 9],      # all drafts match
+                           [5, 6, 7, 8, 9],      # mismatch at 1
+                           [5, 6, 7, 8, 9],      # mismatch at 0
+                           [5, 6, 7, 8, 9]])     # match past n_draft ignored
+    drafts = jnp.asarray([[5, 6, 7, 8],
+                          [5, 0, 7, 8],
+                          [0, 6, 7, 8],
+                          [5, 6, 7, 8]])
+    n_draft = jnp.asarray([4, 4, 4, 2])
+    got = greedy_accept_counts(targets, drafts, n_draft)
+    np.testing.assert_array_equal(np.asarray(got), [4, 1, 0, 2])
+
+
+def test_greedy_accept_counts_zero_drafts():
+    targets = jnp.asarray([[5, 6]])
+    drafts = jnp.asarray([[5]])
+    got = greedy_accept_counts(targets, drafts, jnp.asarray([0]))
+    assert int(got[0]) == 0        # padding never matches
+
+
+def test_spec_stats_counters():
+    from repro.spec import SpecStats
+    s = SpecStats()
+    assert s.accept_rate == 0.0 and s.tokens_per_tick == 0.0
+    s.proposed, s.accepted, s.emitted, s.ticks = 8, 4, 10, 5
+    d = s.as_dict()
+    assert d["spec_accept_rate"] == 0.5
+    assert d["spec_tokens_per_tick"] == 2.0
+    assert d["spec_proposed"] == 8 and d["spec_emitted"] == 10
+
+
+# ---------------------------------------------------------------------------
+# config + proposers
+# ---------------------------------------------------------------------------
+
+def test_spec_config_validation():
+    with pytest.raises(ValueError, match="k must be"):
+        SpecConfig(k=0)
+    with pytest.raises(ValueError, match="proposer"):
+        SpecConfig(proposer="medusa")
+    with pytest.raises(ValueError, match="min_ngram"):
+        SpecConfig(min_ngram=3, max_ngram=2)
+    with pytest.raises(ValueError, match="draft_cfg"):
+        SpecConfig(proposer="draft")
+    assert isinstance(build_proposer(SpecConfig(), 32), NGramProposer)
+
+
+def test_ngram_proposer_prompt_lookup():
+    p = NGramProposer(max_ngram=3, min_ngram=1)
+    p.register(0, [1, 2, 3, 9, 1, 2, 3])
+    # trailing 3-gram (1,2,3) recurs at position 0 -> continuation is 9,1,2
+    assert p.propose(0, 3) == [9, 1, 2]
+    assert p.propose(0, 5) == [9, 1, 2, 3]      # runs off the context end
+    p.observe(0, [4])
+    # trailing (3, 4) and (4,) are novel -> no proposal
+    assert p.propose(0, 3) == []
+    p.register(1, [7])
+    assert p.propose(1, 4) == []                # nothing earlier to match
+    # most recent occurrence wins over the first
+    p.register(2, [5, 1, 5, 2, 5])
+    assert p.propose(2, 1) == [2]
+    p.release(0)
+    with pytest.raises(KeyError):
+        p.propose(0, 2)
+
+
+def test_ngram_proposer_respects_budget():
+    p = NGramProposer(max_ngram=2, min_ngram=1)
+    p.register(0, [1, 2, 3, 4, 1, 2])
+    assert p.propose(0, 2) == [3, 4]
+    assert p.propose(0, 0) == []
+
+
+# ---------------------------------------------------------------------------
+# golden: spec streams == non-spec streams, bitwise per policy
+# ---------------------------------------------------------------------------
+
+def _attn_cfg():
+    from repro.configs.base import ArchConfig, BlockSpec
+    return ArchConfig(
+        name="tiny-serve", family="dense", n_layers=2, d_model=32,
+        n_heads=4, n_kv_heads=2, d_ff=64, vocab=128,
+        pattern=(BlockSpec("attn", "dense"),), qkv_bias=True,
+        tie_embeddings=True, remat="none")
+
+
+def _hybrid_cfg():
+    from repro.configs.base import ArchConfig, BlockSpec, SsmConfig
+    return ArchConfig(
+        name="tiny-hybrid", family="hybrid", n_layers=2, d_model=32,
+        n_heads=4, n_kv_heads=2, d_ff=64, vocab=128,
+        pattern=(BlockSpec("mamba", "dense"), BlockSpec("attn", "dense")),
+        ssm=SsmConfig(d_state=8, d_conv=4, expand=2, chunk=16),
+        remat="none")
+
+
+@pytest.fixture(scope="module")
+def attn_model():
+    from repro.models import init_params
+    cfg = _attn_cfg()
+    return cfg, init_params(jax.random.PRNGKey(0), cfg)
+
+
+@pytest.fixture(scope="module")
+def hybrid_model():
+    from repro.models import init_params
+    cfg = _hybrid_cfg()
+    return cfg, init_params(jax.random.PRNGKey(3), cfg)
+
+
+def _streams(cfg, params, prompts, gens, spec=None, **kw):
+    from repro.serving import PagedServingEngine
+    eng = PagedServingEngine(cfg, params, speculative=spec, **kw)
+    for p, g in zip(prompts, gens):
+        eng.submit(p, g)
+    out = eng.run()
+    al = eng.scheduler.allocator
+    # pinned = pages retained by the prefix index (empty without caching)
+    assert al.n_free + len(al.pinned) == al.num_pages - 1
+    return [out[r] for r in range(len(prompts))], eng
+
+
+@pytest.mark.parametrize("policy", ["fp32_vpu", "bf16x1", "bf16x6"])
+@pytest.mark.parametrize("arch", ["attn", "hybrid"])
+def test_spec_stream_bitwise_equals_baseline(arch, policy, attn_model,
+                                             hybrid_model):
+    """The acceptance contract across the qwen2-like and hybrid jamba-like
+    configs, under the plain bf16 policy AND the corrected bf16x6 policy:
+    identical token streams, staggered mixed-length admissions included."""
+    from repro.core.context import policy_scope
+    cfg, params = attn_model if arch == "attn" else hybrid_model
+    rng = np.random.default_rng(11)
+    # repetitive + random mix: some prompts the proposer nails, some not
+    pat = list(rng.integers(0, cfg.vocab, 3))
+    prompts = [pat * 4,
+               list(rng.integers(0, cfg.vocab, 9)),
+               pat * 2 + [7],
+               list(rng.integers(0, cfg.vocab, 4))]
+    gens = [6, 5, 7, 4]
+    kw = dict(page_size=4, max_concurrency=2, max_seq_len=24)
+    with policy_scope(policy):
+        base, _ = _streams(cfg, params, prompts, gens, **kw)
+        spec, eng = _streams(cfg, params, prompts, gens,
+                             spec=SpecConfig(k=3), **kw)
+    assert base == spec
+    stats = eng.spec_stats
+    # first token per request comes from prefill, the rest from spec ticks
+    assert stats.ticks > 0 and stats.emitted == sum(gens) - len(gens)
+
+
+def test_spec_with_prefix_cache_and_backpressure(attn_model):
+    """Spec + prefix caching + tight page budget in one engine: shared
+    prefix pages admit by reference, back-pressure queues requests, verify
+    ticks burst-commit — streams still equal the plain engine's."""
+    from repro.core.context import policy_scope
+    cfg, params = attn_model
+    rng = np.random.default_rng(5)
+    shared = list(rng.integers(0, cfg.vocab, 9))
+    prompts = [shared + list(rng.integers(0, cfg.vocab, k))
+               for k in (2, 4, 1, 3)]
+    gens = [5, 4, 6, 3]
+    kw = dict(page_size=4, max_concurrency=2, max_seq_len=24,
+              num_pages=1 + 2 * 6, prefill_chunk=4, prefix_cache=True)
+    with policy_scope("bf16x6"):
+        base, _ = _streams(cfg, params, prompts, gens, **kw)
+        spec, eng = _streams(cfg, params, prompts, gens,
+                             spec=SpecConfig(k=4), **kw)
+    assert base == spec
+    assert eng.scheduler.prefix_stats["cached_tokens"] > 0
+
+
+class _AdversarialProposer:
+    """Proposes exactly the WRONG token at every position (one past the
+    known golden stream, mod vocab) — every draft must be rejected and the
+    engine must fall back to one corrected token per tick."""
+
+    def __init__(self, golden, vocab):
+        self.golden = golden
+        self.vocab = vocab
+        self.pos = {}
+
+    def register(self, rid, prompt):
+        self.pos[rid] = 0
+
+    def observe(self, rid, tokens):
+        self.pos[rid] += len(tokens)
+
+    def release(self, rid):
+        self.pos.pop(rid, None)
+
+    def propose(self, rid, max_tokens):
+        g = self.golden[rid]
+        lo = self.pos[rid]
+        return [(g[i] + 1) % self.vocab
+                for i in range(lo, min(lo + max_tokens, len(g)))]
+
+
+def test_forced_all_reject_stream(attn_model):
+    """All-reject worst case: zero accepted drafts, yet the stream is
+    untouched and every tick still makes progress (the bonus token)."""
+    from repro.core.context import policy_scope
+    cfg, params = attn_model
+    rng = np.random.default_rng(2)
+    prompts = [list(rng.integers(0, cfg.vocab, n)) for n in (6, 3)]
+    gens = [6, 5]
+    kw = dict(page_size=4, max_concurrency=2, max_seq_len=20)
+    with policy_scope("fp32_vpu"):
+        base, _ = _streams(cfg, params, prompts, gens, **kw)
+        from repro.serving import PagedServingEngine
+        eng = PagedServingEngine(cfg, params, speculative=SpecConfig(k=3),
+                                 **kw)
+        eng.proposer = _AdversarialProposer(dict(enumerate(base)), cfg.vocab)
+        for p, g in zip(prompts, gens):
+            eng.submit(p, g)
+        out = eng.run()
+    assert [out[r] for r in range(len(prompts))] == base
+    st = eng.spec_stats
+    assert st.accepted == 0 and st.proposed > 0
+    assert st.emitted == sum(gens) - len(gens)
+
+
+def test_draft_model_proposer_self_draft(attn_model):
+    """A draft model that IS the target must agree with every verifier
+    token: accept rate 1.0, k+1 tokens per slot-tick, streams identical."""
+    from repro.core.context import policy_scope
+    cfg, params = attn_model
+    rng = np.random.default_rng(4)
+    prompts = [list(rng.integers(0, cfg.vocab, 5))]
+    gens = [9]
+    kw = dict(page_size=4, max_concurrency=1, max_seq_len=20)
+    with policy_scope("fp32_vpu"):
+        base, _ = _streams(cfg, params, prompts, gens, **kw)
+        spec, eng = _streams(
+            cfg, params, prompts, gens,
+            spec=SpecConfig(k=3, proposer="draft", draft_cfg=cfg,
+                            draft_params=params), **kw)
+    assert base == spec
+    assert eng.spec_stats.accept_rate == 1.0
+
+
+def test_draft_proposer_rollout_preserves_committed_state(attn_model):
+    """Propose must not corrupt the proposer's committed caches: two
+    propose calls with no observe in between return identical drafts."""
+    cfg, params = attn_model
+    p = DraftModelProposer(cfg, params, max_seq_len=24)
+    p.register(0, [3, 1, 4, 1, 5])
+    first = p.propose(0, 4)
+    assert len(first) == 4
+    assert p.propose(0, 4) == first
+    p.observe(0, first[:1])
+    assert p.propose(0, 3) == first[1:]          # greedy rollout shifts by 1
+
+
+# ---------------------------------------------------------------------------
+# property: per-tick accept counts and page accounting
+# ---------------------------------------------------------------------------
+
+def _drive_and_check(cfg, params, seed, k, page_size):
+    """One engine run with a spy on record_decode_burst: every verify tick
+    offers n in [1, k+1] tokens per slot and commits >= 1; afterwards no
+    page is leaked."""
+    from repro.core.context import policy_scope
+    from repro.serving import PagedServingEngine
+    rng = np.random.default_rng(seed)
+    pat = list(rng.integers(0, cfg.vocab, 2))
+    prompts = [pat * 3, list(rng.integers(0, cfg.vocab, 5)),
+               list(rng.integers(0, cfg.vocab, 2))]
+    gens = [int(rng.integers(1, 8)) for _ in prompts]
+    with policy_scope("fp32_vpu"):
+        eng = PagedServingEngine(cfg, params, page_size=page_size,
+                                 max_concurrency=2, max_seq_len=16,
+                                 num_pages=1 + 2 * pages_needed(
+                                     16, page_size),
+                                 speculative=SpecConfig(k=k))
+        bursts = []
+        real = eng.scheduler.record_decode_burst
+
+        def spy(rid, tokens):
+            bursts.append(len(tokens))
+            return real(rid, tokens)
+
+        eng.scheduler.record_decode_burst = spy
+        for p, g in zip(prompts, gens):
+            eng.submit(p, g)
+        out = eng.run()
+    assert bursts and all(1 <= n <= k + 1 for n in bursts)
+    assert sorted(out) == list(range(len(prompts)))
+    for rid, g in enumerate(gens):
+        assert len(out[rid]) == g
+    al = eng.scheduler.allocator
+    assert al.n_free == al.num_pages - 1
+    return bursts
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000), k=st.integers(1, 4),
+       page_size=st.sampled_from([2, 4, 8]))
+def test_spec_tick_commit_bounds_and_no_page_leak(seed, k, page_size,
+                                                  attn_model):
+    """Hypothesis property: accepted-token count per slot-tick lies in
+    [1, k+1] and the allocator ends with every page back on the free
+    list, across random streams / k / page sizes."""
+    cfg, params = attn_model
+    _drive_and_check(cfg, params, seed, k, page_size)
+
+
+def test_spec_tick_bounds_seed_sweep(attn_model):
+    """Deterministic fallback for the same property where hypothesis is
+    unavailable."""
+    cfg, params = attn_model
+    for seed, k, page in [(0, 3, 4), (1, 1, 2), (2, 4, 8)]:
+        _drive_and_check(cfg, params, seed, k, page)
