@@ -35,7 +35,8 @@ import traceback
 
 _SHAPE_RE = re.compile(r"(?:m(\d+)n(\d+)k(\d+))|(?:_s(\d+)(?:_|$))|"
                        r"(?:b(\d+)_s(\d+))")
-_POLICY_RE = re.compile(r"(bf16x\d(?:_(?:pallas|staged))?|fp32_vpu)")
+_POLICY_RE = re.compile(
+    r"(bf16x\d(?:_(?:pallas|staged))?|int8x\d(?:_pallas)?|fp32_vpu)")
 # speculative-decoding rows (serving_throughput): spec_ngram_* /
 # spec_draft_* accept-rate, tok/s and speedup rows carry the proposer.
 _SPEC_RE = re.compile(r"spec_(ngram|draft)_")

@@ -150,24 +150,37 @@ def _spec_rows(cfg, params, rng):
     return rows
 
 
-def _cache_bytes_per_step(cfg, lens, page_size, paged):
+def _cache_bytes_per_step(cfg, lens, page_size, paged, quantized=False):
     """Bytes of K+V (or latent) cache read by one decode step.
 
     Only KV-bearing layers hold pages: the width sums over the *full*
     pattern (attn/mla mixers), times the pattern-group repeat count.
     Keying the width on ``pattern[0]`` and multiplying by ``n_layers``
     counted phantom KV bytes for the recurrent layers of hybrid
-    attention+SSM patterns (whose state is per-slot, not paged)."""
+    attention+SSM patterns (whose state is per-slot, not paged).
+
+    ``quantized`` prices the int8 pool: 1 byte per element plus one fp32
+    scale per (page, pool leaf, group) — the per-page sidecar the kernel
+    reads alongside each page.  Only meaningful with ``paged=True``."""
     width = 0
+    n_pools = 0
     for spec in cfg.pattern:
         if spec.mixer == "mla":
             width += cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+            n_pools += 2                        # c_pages + r_pages
         elif spec.mixer == "attn":
             width += 2 * cfg.n_kv_heads * cfg.head_dim_
-    dt = np.dtype("float32").itemsize if cfg.param_dtype == "float32" else 2
+            n_pools += 2                        # k_pages + v_pages
+    if quantized:
+        dt = 1
+    else:
+        dt = np.dtype("float32").itemsize if cfg.param_dtype == "float32" \
+            else 2
     per_tok = width * dt * cfg.n_groups
     if paged:
-        return sum(-(-n // page_size) * page_size for n in lens) * per_tok
+        pages = sum(-(-n // page_size) for n in lens)
+        scale_b = pages * n_pools * 4 * cfg.n_groups if quantized else 0
+        return pages * page_size * per_tok + scale_b
     return len(lens) * max(lens) * per_tok
 
 
@@ -257,6 +270,28 @@ def run():
     prod_lens = [257, 1891, 733, 94]
     rows.append(("prod_paged_traffic_ratio",
                  _cache_bytes_per_step(full, prod_lens, 64, True)
+                 / _cache_bytes_per_step(full, [8192] * 4, 64, False)))
+
+    # quantized KV: int8 page payloads + per-page fp32 scales.  The decode
+    # stream reads half the payload bytes of the bf16 pool (a quarter of
+    # dense fp32) plus a ~1% scale sidecar; tok/s is measured on the same
+    # stream so regressions in the dequantizing gather show up here.
+    with policy_scope("bf16x6"):
+        t0 = time.perf_counter()
+        qout, _ = generate_paged(cfg, params, prompts, gen_steps,
+                                 page_size=page_size, max_concurrency=batch,
+                                 quantized_kv=True)
+        dt = time.perf_counter() - t0
+    rows.append(("kv_quant_serve_us", dt * 1e6))
+    rows.append(("kv_quant_tok_s", sum(len(v) for v in qout.values()) / dt))
+    quant_b = _cache_bytes_per_step(cfg, final, page_size, paged=True,
+                                    quantized=True)
+    rows.append(("kv_quant_cache_bytes_per_step", quant_b))
+    rows.append(("kv_quant_traffic_ratio", quant_b / dense_b))
+    rows.append(("kv_quant_vs_paged_ratio", quant_b / paged_b))
+    rows.append(("prod_kv_quant_traffic_ratio",
+                 _cache_bytes_per_step(full, prod_lens, 64, True,
+                                       quantized=True)
                  / _cache_bytes_per_step(full, [8192] * 4, 64, False)))
 
     rows.extend(_spec_rows(cfg, params, rng))

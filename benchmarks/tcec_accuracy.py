@@ -28,7 +28,8 @@ def run():
         rows.append((f"k{k}_fp32_simt_err", fp32))
         # policy selection via the scoped API — the measured call never
         # names a policy, the scope is the only switch.
-        for pol in ("bf16x1", "bf16x3", "bf16x6", "bf16x9"):
+        for pol in ("bf16x1", "bf16x3", "bf16x6", "bf16x9",
+                    "int8x1", "int8x2", "int8x3"):
             with policy_scope(pol):
                 e = max_rel_err(np.asarray(
                     tcec.matmul(jnp.asarray(a), jnp.asarray(b),

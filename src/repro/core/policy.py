@@ -4,11 +4,16 @@ The paper's WMMAe-TCEC fragment takes an optional *policy* template parameter
 selecting (1) wmma vs mma instruction, (2) error correction on/off, (3) Tensor
 Core vs software systolic backend.  The TPU translation:
 
-  * ``backend``      — "mxu" (matrix unit, bf16 passes) vs "vpu"
+  * ``backend``      — "mxu" (matrix unit, low-precision passes) vs "vpu"
                        (plain FP32 vector-unit dot; the FP32-SIMT analogue).
-  * ``passes``       — error-correction depth: 1 (plain bf16 cast),
+  * ``passes``       — error-correction depth: 1 (plain cast/quantize),
                        3 (2-word split, ~fp24), 6 (3-word split, ~fp32,
                        the paper-equivalent accuracy point), 9 (all terms).
+  * ``word_dtype``   — what each split word is stored as: ``"bf16"``
+                       (Dekker-exact mantissa splits, the paper's scheme) or
+                       ``"int8"`` (per-tile-scaled quantization of the
+                       running residual; int32 MMA accumulation rescaled to
+                       fp32 — the quantized-TCEC extension).
   * ``fragment_gen`` — "on_the_fly" (WMMAe: split words generated in
                        registers/VREGs, no staged split matrices — the
                        paper's footprint reduction) vs "staged" (WMMA-API
@@ -32,8 +37,81 @@ from typing import Dict, Literal, Tuple
 Backend = Literal["mxu", "vpu"]
 FragmentGen = Literal["on_the_fly", "staged"]
 Kernel = Literal["xla", "pallas"]
+WordDtype = Literal["bf16", "int8"]
 
-VALID_PASSES = (1, 3, 6, 9)
+# ---------------------------------------------------------------------------
+# Pass schedules — THE single source of truth for (word_dtype, passes).
+#
+# Each entry maps to the cross-term schedule ``((a_word_idx, b_word_idx), …)``
+# in smallest-magnitude-first order so FP32 accumulation preserves low bits
+# (word magnitudes: hi ~ 1, mid ~ 2^-8, lo ~ 2^-16 relative for bf16; for
+# int8 each word's per-tile scale shrinks by ~2^-8 per level, so the same
+# index-sum ordering holds).  ``TcecPolicy.n_words`` and ``VALID_PASSES`` are
+# *derived* from this table — there is no second copy to drift (the old
+# hand-synced triple of VALID_PASSES / an inline n_words dict /
+# core.tcec._SCHEDULES failed silently at first dot when edited unevenly).
+# ---------------------------------------------------------------------------
+SCHEDULES: Dict[Tuple[str, int], Tuple[Tuple[int, int], ...]] = {
+    ("bf16", 1): ((0, 0),),
+    ("bf16", 3): ((1, 0), (0, 1), (0, 0)),
+    ("bf16", 6): ((2, 0), (1, 1), (0, 2), (1, 0), (0, 1), (0, 0)),
+    ("bf16", 9): (
+        (2, 2), (2, 1), (1, 2),
+        (2, 0), (1, 1), (0, 2),
+        (1, 0), (0, 1), (0, 0),
+    ),
+    ("int8", 1): ((0, 0),),
+    ("int8", 3): ((1, 0), (0, 1), (0, 0)),
+    ("int8", 6): ((2, 0), (1, 1), (0, 2), (1, 0), (0, 1), (0, 0)),
+}
+
+
+def schedule_for(word_dtype: str, passes: int) -> Tuple[Tuple[int, int], ...]:
+    """The cross-term pass schedule for a (word_dtype, passes) point."""
+    try:
+        return SCHEDULES[(word_dtype, passes)]
+    except KeyError:
+        valid = valid_passes(word_dtype)
+        raise ValueError(
+            f"no {word_dtype} schedule for passes={passes}; valid pass "
+            f"counts for {word_dtype!r}: {valid}") from None
+
+
+def schedule_n_words(schedule: Tuple[Tuple[int, int], ...]) -> int:
+    """Words per operand a schedule requires (highest word index + 1)."""
+    return 1 + max(max(i, j) for (i, j) in schedule)
+
+
+def valid_passes(word_dtype: str) -> Tuple[int, ...]:
+    return tuple(sorted(p for (dt, p) in SCHEDULES if dt == word_dtype))
+
+
+#: Back-compat view: the bf16 pass counts (the original single-dtype table).
+VALID_PASSES = valid_passes("bf16")
+
+
+def _check_schedule_table() -> None:
+    """Import-time consistency check over the schedule table.
+
+    Raises immediately (not at first dot) if a schedule is malformed: word
+    indices must be contiguous from 0 (a gap means a word is generated but
+    never used, or used but never generated) and the pass count must equal
+    the schedule length.
+    """
+    for (dt, passes), sched in SCHEDULES.items():
+        if len(sched) != passes:
+            raise RuntimeError(
+                f"SCHEDULES[{(dt, passes)}] has {len(sched)} terms; the key "
+                f"promises {passes} passes")
+        used = {i for pair in sched for i in pair}
+        nw = schedule_n_words(sched)
+        if used != set(range(nw)):
+            raise RuntimeError(
+                f"SCHEDULES[{(dt, passes)}] uses word indices {sorted(used)}; "
+                f"expected contiguous 0..{nw - 1}")
+
+
+_check_schedule_table()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,21 +126,46 @@ class TcecPolicy:
     #: footprint-reduced data flow).  Sites the kernel cannot express
     #: (general dot_generals, vpu backend) stay on the XLA path.
     kernel: Kernel = "xla"
+    #: Storage dtype of each split word.  ``"bf16"`` words are Dekker-exact
+    #: mantissa slices; ``"int8"`` words are per-tile-scaled quantizations of
+    #: the running residual (int32 MMA accumulation, rescaled to fp32).
+    word_dtype: WordDtype = "bf16"
 
     def __post_init__(self):
-        if self.passes not in VALID_PASSES:
-            raise ValueError(f"passes must be one of {VALID_PASSES}, got {self.passes}")
         if self.backend not in ("mxu", "vpu"):
             raise ValueError(f"bad backend {self.backend}")
         if self.fragment_gen not in ("on_the_fly", "staged"):
             raise ValueError(f"bad fragment_gen {self.fragment_gen}")
         if self.kernel not in ("xla", "pallas"):
             raise ValueError(f"bad kernel {self.kernel}")
+        if self.word_dtype not in ("bf16", "int8"):
+            raise ValueError(f"bad word_dtype {self.word_dtype}")
+        if (self.word_dtype, self.passes) not in SCHEDULES:
+            raise ValueError(
+                f"passes must be one of {valid_passes(self.word_dtype)} for "
+                f"word_dtype={self.word_dtype!r}, got {self.passes}")
+        if self.word_dtype == "int8" and self.backend == "vpu":
+            raise ValueError("int8 words require the mxu backend (the vpu "
+                             "path is a plain fp32 dot)")
+        if self.word_dtype == "int8" and self.fragment_gen == "staged":
+            raise ValueError(
+                "int8 words are generated on the fly (per-tile scales are "
+                "resolved inside the split schedule; there is no staged "
+                "int8 data flow)")
+
+    @property
+    def schedule(self) -> Tuple[Tuple[int, int], ...]:
+        """The cross-term pass schedule this policy executes."""
+        return schedule_for(self.word_dtype, self.passes)
 
     @property
     def n_words(self) -> int:
-        """How many bf16 words per input matrix this policy splits into."""
-        return {1: 1, 3: 2, 6: 3, 9: 3}[self.passes]
+        """How many split words per input matrix this policy generates.
+
+        Derived from the schedule (highest word index + 1) — never a second
+        hand-maintained table.
+        """
+        return schedule_n_words(self.schedule)
 
     @property
     def error_correction(self) -> bool:
@@ -85,6 +188,14 @@ BF16X6_STAGED = TcecPolicy(passes=6, fragment_gen="staged")
 # Pallas-kernel dispatch: eligible matmuls run the explicit Mosaic kernel.
 BF16X3_PALLAS = TcecPolicy(passes=3, kernel="pallas")
 BF16X6_PALLAS = TcecPolicy(passes=6, kernel="pallas")
+# Quantized TCEC: int8 words with per-tile scales.  Named by WORD count
+# (int8xN = N words), unlike the pass-count-named bf16 presets: each int8
+# word is one byte, so the word count is the traffic story.
+INT8X1 = TcecPolicy(passes=1, word_dtype="int8")
+INT8X2 = TcecPolicy(passes=3, word_dtype="int8")
+INT8X3 = TcecPolicy(passes=6, word_dtype="int8")
+INT8X2_PALLAS = TcecPolicy(passes=3, word_dtype="int8", kernel="pallas")
+INT8X3_PALLAS = TcecPolicy(passes=6, word_dtype="int8", kernel="pallas")
 
 # ---------------------------------------------------------------------------
 # Registry: built-in presets + user registrations, one namespace.
@@ -99,8 +210,23 @@ _REGISTRY: Dict[str, TcecPolicy] = {
     "bf16x6_staged": BF16X6_STAGED,
     "bf16x3_pallas": BF16X3_PALLAS,
     "bf16x6_pallas": BF16X6_PALLAS,
+    "int8x1": INT8X1,
+    "int8x2": INT8X2,
+    "int8x3": INT8X3,
+    "int8x2_pallas": INT8X2_PALLAS,
+    "int8x3_pallas": INT8X3_PALLAS,
 }
 _BUILTIN_NAMES = frozenset(_REGISTRY)
+
+# Every registered policy's (word_dtype, passes) must resolve to a schedule.
+# TcecPolicy.__post_init__ enforces this for each instance, so the registry
+# invariant holds for user registrations too; assert it once at import for
+# the built-ins (a drifted table now fails here, not at first dot).
+for _name, _pol in _REGISTRY.items():
+    if (_pol.word_dtype, _pol.passes) not in SCHEDULES:
+        raise RuntimeError(
+            f"built-in policy {_name!r} has no schedule entry for "
+            f"({_pol.word_dtype}, {_pol.passes})")
 
 # Read-only live view of the registry.  Mutating it raises TypeError; user
 # registrations made through register_policy() appear here immediately, so

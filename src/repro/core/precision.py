@@ -24,6 +24,10 @@ BF16_MANTISSA_BITS = 8
 # Relative reconstruction error bounds (per element, vs FP32 source).
 SPLIT2_REL_ERR = 2.0 ** (-16)
 SPLIT3_REL_ERR = 2.0 ** (-24)
+# Largest finite bf16 value.  fp32 magnitudes in (BF16_MAX, fp32 max] round
+# to ±inf under a plain cast, which used to make the residual
+# ``a - f32(±inf) = ∓inf`` and poison every later word with NaN.
+BF16_MAX = float(jnp.finfo(jnp.bfloat16).max)
 
 
 def _to_bf16(x: jnp.ndarray) -> jnp.ndarray:
@@ -34,10 +38,27 @@ def _back(x_bf16: jnp.ndarray) -> jnp.ndarray:
     return x_bf16.astype(jnp.float32)
 
 
+def bf16_word(rest: jnp.ndarray) -> jnp.ndarray:
+    """bf16 rounding of a split residual, saturating finite overflow.
+
+    A *finite* fp32 value above BF16_MAX saturates to ±BF16_MAX instead of
+    rounding to ±inf, so the Dekker residual ``rest - f32(word)`` stays
+    finite (and exact: the difference of two representable fp32 values this
+    close is representable).  Non-finite inputs pass through unchanged —
+    exact ±inf/NaN propagation is handled at the dot level (the non-finite
+    guard), not by clamping them away here.
+    """
+    w = _to_bf16(rest)
+    sat = jnp.isfinite(rest) & jnp.isinf(_back(w))
+    return jnp.where(sat, jnp.where(rest > 0, jnp.float32(BF16_MAX),
+                                    jnp.float32(-BF16_MAX)).astype(jnp.bfloat16),
+                     w)
+
+
 def split2(a: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """FP32 -> (hi, lo) bf16 words; a ~= hi + lo with ~2^-16 rel err."""
     a = a.astype(jnp.float32)
-    hi = _to_bf16(a)
+    hi = bf16_word(a)
     lo = _to_bf16(a - _back(hi))
     return hi, lo
 
@@ -45,7 +66,7 @@ def split2(a: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
 def split3(a: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """FP32 -> (hi, mid, lo) bf16 words; a ~= hi + mid + lo with ~2^-24 rel err."""
     a = a.astype(jnp.float32)
-    hi = _to_bf16(a)
+    hi = bf16_word(a)
     r1 = a - _back(hi)
     mid = _to_bf16(r1)
     lo = _to_bf16(r1 - _back(mid))

@@ -1,0 +1,132 @@
+"""Shared int8 quantization primitives.
+
+One implementation backs every int8 surface in the repo:
+
+  * the quantized-TCEC split schedule (``split_int8`` — per-tile-scaled int8
+    words of the running residual; ``repro.kernels.tcec_core`` and the XLA
+    twins in ``core.tcec`` / ``repro.tcec``),
+  * EF-int8 gradient compression (``quantize_blocks`` / ``dequantize_blocks``
+    via ``repro.optim.compression``),
+  * the quantized paged KV pool (``repro.serving.paged_cache`` — per-page
+    scales over the same ``amax / 127`` contract).
+
+Quantization contract (symmetric, zero-point-free):
+
+    scale = max(|x|) / 127            (floored at ``TINY`` so all-zero
+                                       tiles stay exactly zero after the
+                                       round trip instead of dividing by 0)
+    q     = clip(round(x / scale), -127, 127)  as int8
+    x̂     = q * scale
+
+so per-element ``|x - x̂| <= scale / 2`` for finite inputs, the amax element
+round-trips to exactly ±127 * scale, and all-zero tiles round-trip bitwise.
+Non-finite values quantize to 0 with a scale computed over the finite values
+only — exact ±inf/NaN propagation is a *dot-level* contract handled by the
+non-finite guard in the TCEC paths, never by the quantizer.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["TINY", "amax_scale", "quantize_q", "dequantize_q", "split_int8",
+           "quantize_blocks", "dequantize_blocks"]
+
+#: Scale floor: keeps all-zero (and denormal-only) tiles from dividing by
+#: zero while quantizing every representable fp32 magnitude to 0 exactly.
+TINY = 1e-12
+
+
+def amax_scale(x: jnp.ndarray, axis=None, keepdims: bool = False
+               ) -> jnp.ndarray:
+    """``max|x| / 127`` over ``axis`` (fp32, floored at ``TINY``).
+
+    Non-finite elements are excluded from the max so a single inf/NaN cannot
+    blow up the scale for the rest of the tile.
+    """
+    mag = jnp.where(jnp.isfinite(x), jnp.abs(x), 0.0).astype(jnp.float32)
+    amax = jnp.max(mag, axis=axis, keepdims=keepdims)
+    return jnp.maximum(amax / 127.0, TINY)
+
+
+def quantize_q(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Symmetric int8 quantization of ``x`` at ``scale`` (broadcastable).
+
+    Non-finite elements map to 0 (see module docstring for why).
+    """
+    x = jnp.where(jnp.isfinite(x), x, 0.0).astype(jnp.float32)
+    return jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+
+
+def dequantize_q(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def split_int8(x: jnp.ndarray, n_words: int
+               ) -> Tuple[Sequence[jnp.ndarray], Sequence[jnp.ndarray]]:
+    """Split ``x`` into ``n_words`` per-tile-scaled int8 words.
+
+    Word ``i`` is the int8 quantization of the running residual at its own
+    scalar scale ``s_i = max|rest| / 127``; each level shrinks the residual
+    by ~2^-8 (|rest| <= s_i/2 after word ``i``), so the word index plays the
+    role the bf16 mantissa slice plays in the Dekker splits and the same
+    smallest-magnitude-first schedules apply.
+
+    Returns ``(words, scales)``: ``words[i]`` int8 like ``x``, ``scales[i]``
+    scalar fp32.  The reconstruction is ``sum_i words[i] * scales[i]``.
+    """
+    words, scales = [], []
+    rest = jnp.where(jnp.isfinite(x), x, 0.0).astype(jnp.float32)
+    for _ in range(n_words):
+        s = amax_scale(rest)
+        w = jnp.clip(jnp.round(rest / s), -127, 127).astype(jnp.int8)
+        words.append(w)
+        scales.append(s)
+        rest = rest - w.astype(jnp.float32) * s
+    return tuple(words), tuple(scales)
+
+
+# ---------------------------------------------------------------------------
+# Flat per-block quantization (the EF-int8 gradient-compression layout).
+# ---------------------------------------------------------------------------
+
+def _pad_to(flat: jnp.ndarray, block: int) -> Tuple[jnp.ndarray, int]:
+    pad = (-flat.size) % block
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat, pad
+
+
+def quantize_blocks(x: jnp.ndarray, block: int = 256):
+    """Flatten ``x`` and quantize per contiguous ``block`` elements.
+
+    Returns ``(q, scale, meta)`` where ``q`` is int8 of shape
+    ``(nblocks, block)``, ``scale`` is fp32 ``(nblocks, 1)``, and ``meta``
+    records ``(shape, pad, dtype_name)`` — the source dtype rides along so
+    ``dequantize_blocks`` can restore bf16 (or any) leaves instead of
+    silently widening everything to fp32.
+    """
+    dtype_name = jnp.dtype(x.dtype).name
+    flat, pad = _pad_to(x.astype(jnp.float32).reshape(-1), block)
+    blocks = flat.reshape(-1, block)
+    scale = amax_scale(blocks, axis=1, keepdims=True)
+    q = quantize_q(blocks, scale)
+    return q, scale, (x.shape, pad, dtype_name)
+
+
+def dequantize_blocks(q: jnp.ndarray, scale: jnp.ndarray, meta) -> jnp.ndarray:
+    """Inverse of ``quantize_blocks`` — restores shape AND source dtype.
+
+    Accepts the legacy 2-tuple ``(shape, pad)`` meta (pre-dtype recording)
+    for old checkpoints, defaulting to fp32.
+    """
+    if len(meta) == 3:
+        shape, pad, dtype_name = meta
+    else:  # legacy meta from before dtype was recorded
+        shape, pad = meta
+        dtype_name = "float32"
+    flat = dequantize_q(q, scale).reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape).astype(jnp.dtype(dtype_name))

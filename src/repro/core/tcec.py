@@ -37,11 +37,13 @@ from typing import Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from .policy import TcecPolicy
+from .policy import SCHEDULES, TcecPolicy
 from .context import resolve_policy
 from .precision import split2, split3
+from .quant import split_int8
 
-__all__ = ["tc_matmul", "tc_dot_general", "split_words"]
+__all__ = ["tc_matmul", "tc_dot_general", "split_words", "sanitize_nonfinite",
+           "nonfinite_guard"]
 
 
 def split_words(a: jnp.ndarray, n_words: int, staged: bool) -> Sequence[jnp.ndarray]:
@@ -63,21 +65,15 @@ def split_words(a: jnp.ndarray, n_words: int, staged: bool) -> Sequence[jnp.ndar
     return words
 
 
-# Cross-term schedule per pass count: (a_word_idx, b_word_idx) in
-# smallest-magnitude-first order so FP32 accumulation preserves low bits.
-# Shared with the Pallas kernel family (repro.kernels.tcec_matmul) and the
-# einsum frontend (repro.tcec), whose shared custom_vjp backward runs
-# dA = g@B^T / dB = A^T@g through the same pass table.
-_SCHEDULES = {
-    1: ((0, 0),),
-    3: ((1, 0), (0, 1), (0, 0)),
-    6: ((2, 0), (1, 1), (0, 2), (1, 0), (0, 1), (0, 0)),
-    9: (
-        (2, 2), (2, 1), (1, 2),
-        (2, 0), (1, 1), (0, 2),
-        (1, 0), (0, 1), (0, 0),
-    ),
-}
+# Back-compat view of the bf16 pass tables.  The single source of truth is
+# ``core.policy.SCHEDULES`` keyed on (word_dtype, passes) — shared with the
+# Pallas kernel family (repro.kernels.tcec_matmul) and the einsum frontend
+# (repro.tcec), whose shared custom_vjp backward runs dA = g@B^T /
+# dB = A^T@g through the same pass table.  ``TcecPolicy.schedule`` /
+# ``TcecPolicy.n_words`` are derived from that table, so this alias exists
+# only for external callers of the old name.
+_SCHEDULES = {p: sched for (dt, p), sched in SCHEDULES.items()
+              if dt == "bf16"}
 
 
 def _dot(a, b, dimension_numbers, preferred):
@@ -85,6 +81,40 @@ def _dot(a, b, dimension_numbers, preferred):
         a, b, dimension_numbers=dimension_numbers,
         preferred_element_type=preferred,
     )
+
+
+def sanitize_nonfinite(x: jnp.ndarray) -> jnp.ndarray:
+    """Zero out ±inf/NaN so split schedules never see them.
+
+    A split word of a non-finite value poisons every later word (the
+    residual becomes ``inf - inf = NaN``); the sanitized operands keep the
+    schedule finite and ``nonfinite_guard`` restores the fp32 reference's
+    exact ±inf/NaN pattern on the output.  For all-finite inputs this is the
+    identity (bitwise), so guarded paths stay bitwise-stable.
+    """
+    return jnp.where(jnp.isfinite(x), x, 0.0).astype(jnp.float32)
+
+
+def nonfinite_guard(out: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
+                    ref_fn) -> jnp.ndarray:
+    """Make a split-schedule result propagate ±inf/NaN exactly like the fp32
+    reference dot.
+
+    ``out`` must be computed from sanitized operands (finite everywhere).
+    When any input element is non-finite, ``ref_fn(a, b)`` computes the fp32
+    reference contraction on the *original* operands and its ±inf/NaN output
+    pattern replaces ``out`` at exactly those positions.  The reference dot
+    lives inside a ``lax.cond`` so the common all-finite case never pays for
+    it at runtime.
+    """
+    ok = jnp.all(jnp.isfinite(a)) & jnp.all(jnp.isfinite(b))
+
+    def _fix(ops):
+        o, a_, b_ = ops
+        ref = ref_fn(a_, b_)
+        return jnp.where(jnp.isfinite(ref), o, ref)
+
+    return jax.lax.cond(ok, lambda ops: ops[0], _fix, (out, a, b))
 
 
 def tc_dot_general(
@@ -102,17 +132,44 @@ def tc_dot_general(
         # "FP32 SIMT" analogue: plain FP32 dot on the vector unit.
         return _dot(a.astype(jnp.float32), b.astype(jnp.float32),
                     dimension_numbers, jnp.float32)
+
+    def _ref(a_, b_):
+        return _dot(a_.astype(jnp.float32), b_.astype(jnp.float32),
+                    dimension_numbers, jnp.float32)
+
+    if policy.word_dtype == "int8":
+        # Per-tile-scaled int8 words of the running residual; int32 MMA
+        # accumulation rescaled to fp32 per pass (smallest scale product
+        # first — the schedule ordering is shared with the bf16 tables).
+        a32, b32 = a.astype(jnp.float32), b.astype(jnp.float32)
+        aw, sa = split_int8(a32, policy.n_words)
+        bw, sb = split_int8(b32, policy.n_words)
+        acc = None
+        for (i, j) in policy.schedule:
+            term = _dot(aw[i], bw[j], dimension_numbers,
+                        jnp.int32).astype(jnp.float32) * (sa[i] * sb[j])
+            acc = term if acc is None else acc + term
+        return nonfinite_guard(acc, a32, b32, _ref)
+
     if policy.passes == 1 and a.dtype == jnp.bfloat16 and b.dtype == jnp.bfloat16:
         return _dot(a, b, dimension_numbers, jnp.float32)
 
     staged = policy.fragment_gen == "staged"
-    aw = split_words(a, policy.n_words, staged)
-    bw = split_words(b, policy.n_words, staged)
+    if not policy.error_correction:
+        # Plain single-word cast: ±inf/NaN propagate through the bf16 dot
+        # naturally, no guard needed.
+        aw = split_words(a, 1, staged)
+        bw = split_words(b, 1, staged)
+        return _dot(aw[0], bw[0], dimension_numbers, jnp.float32)
+
+    a32, b32 = a.astype(jnp.float32), b.astype(jnp.float32)
+    aw = split_words(sanitize_nonfinite(a32), policy.n_words, staged)
+    bw = split_words(sanitize_nonfinite(b32), policy.n_words, staged)
     acc = None
-    for (i, j) in _SCHEDULES[policy.passes]:
+    for (i, j) in policy.schedule:
         term = _dot(aw[i], bw[j], dimension_numbers, jnp.float32)
         acc = term if acc is None else acc + term
-    return acc
+    return nonfinite_guard(acc, a32, b32, _ref)
 
 
 def tc_matmul(a: jnp.ndarray, b: jnp.ndarray,

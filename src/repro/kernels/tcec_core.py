@@ -29,11 +29,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.policy import TcecPolicy
+from repro.core.precision import bf16_word
+from repro.core.quant import split_int8 as split_int8_vregs
 from repro.core.tcec import _SCHEDULES as SCHEDULES
 
 __all__ = [
-    "SCHEDULES", "MATMUL_DN", "round_up", "split_vregs", "mma_passes",
-    "policy_dot", "dot_params", "tcec_einsum", "compiler_params",
+    "SCHEDULES", "MATMUL_DN", "round_up", "split_vregs", "split_int8_vregs",
+    "mma_passes", "mma_passes_int8", "policy_dot", "dot_params",
+    "tcec_einsum", "compiler_params",
 ]
 
 # (m, k) @ (k, n) dimension_numbers — the default contraction.
@@ -52,11 +55,19 @@ def split_vregs(x: jnp.ndarray, n_words: int) -> List[jnp.ndarray]:
     residual, so ``x ~= sum(words)`` with the error bounded by the last
     word's truncation (~2^-8 per word).  ``n_words == 1`` is the plain bf16
     cast (the uncorrected policy).
+
+    Finite fp32 values above bf16 max saturate to ±BF16_MAX instead of
+    rounding to ±inf (which used to make the residual ``inf - inf = NaN``
+    and poison every later word and MXU pass); non-finite *inputs* still
+    pass through, with exact ±inf/NaN output handled by the callers'
+    non-finite guard.
     """
+    if n_words == 1:
+        return [x.astype(jnp.bfloat16)]
     words = []
     rest = x
     for _ in range(n_words - 1):
-        w = rest.astype(jnp.bfloat16)
+        w = bf16_word(rest)
         words.append(w)
         rest = rest - w.astype(jnp.float32)
     words.append(rest.astype(jnp.bfloat16))
@@ -78,20 +89,48 @@ def mma_passes(aw: Sequence[jnp.ndarray], bw: Sequence[jnp.ndarray],
     return acc
 
 
+def mma_passes_int8(aw: Sequence[jnp.ndarray], sa: Sequence[jnp.ndarray],
+                    bw: Sequence[jnp.ndarray], sb: Sequence[jnp.ndarray],
+                    schedule, dn=MATMUL_DN) -> jnp.ndarray:
+    """The int8 pass schedule: int32 MMA accumulation rescaled to fp32.
+
+    Each pass contracts two int8 words into int32 (the quantized MMA data
+    path) and rescales by the product of the words' per-tile scales; scale
+    products shrink by ~2^-8 per schedule level, so the shared
+    smallest-magnitude-first ordering keeps low bits exactly as in the bf16
+    tables.
+    """
+    acc = None
+    for (i, j) in schedule:
+        term = jax.lax.dot_general(
+            aw[i], bw[j], dn,
+            preferred_element_type=jnp.int32).astype(jnp.float32)
+        term = term * (sa[i] * sb[j])
+        acc = term if acc is None else acc + term
+    return acc
+
+
 def policy_dot(a: jnp.ndarray, b: jnp.ndarray, dn=MATMUL_DN, *,
-               n_words: int, schedule, vpu: bool) -> jnp.ndarray:
+               n_words: int, schedule, vpu: bool,
+               word_dtype: str = "bf16") -> jnp.ndarray:
     """Policy-selected-precision dot for Pallas kernel bodies.
 
     All policy facets arrive as static Python values (``dot_params``
     derives them from a ``TcecPolicy``), so this traces inside a kernel
     body exactly like hand-written splitting: vpu = plain fp32 VPU dot;
-    otherwise split both operands in VREGs and accumulate the scheduled
-    MXU passes.
+    ``word_dtype == "int8"`` quantizes the running residual per tile (the
+    tile being whatever block the kernel hands in) and rescales int32 MMA
+    passes; otherwise split both operands into bf16 words in VREGs and
+    accumulate the scheduled MXU passes.
     """
     if vpu:
         return jax.lax.dot_general(
             a.astype(jnp.float32), b.astype(jnp.float32), dn,
             preferred_element_type=jnp.float32)
+    if word_dtype == "int8":
+        aw, sa = split_int8_vregs(a.astype(jnp.float32), n_words)
+        bw, sb = split_int8_vregs(b.astype(jnp.float32), n_words)
+        return mma_passes_int8(aw, sa, bw, sb, schedule, dn)
     aw = split_vregs(a.astype(jnp.float32), n_words)
     bw = split_vregs(b.astype(jnp.float32), n_words)
     return mma_passes(aw, bw, schedule, dn)
@@ -99,8 +138,8 @@ def policy_dot(a: jnp.ndarray, b: jnp.ndarray, dn=MATMUL_DN, *,
 
 def dot_params(policy: TcecPolicy) -> Dict:
     """Static ``policy_dot`` kwargs for a policy (kernel-launch helper)."""
-    return dict(n_words=policy.n_words, schedule=SCHEDULES[policy.passes],
-                vpu=policy.backend == "vpu")
+    return dict(n_words=policy.n_words, schedule=policy.schedule,
+                vpu=policy.backend == "vpu", word_dtype=policy.word_dtype)
 
 
 def tcec_einsum(eq: str, a: jnp.ndarray, b: jnp.ndarray,

@@ -48,10 +48,13 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.policy import TcecPolicy
 from repro.core.context import resolve_policy
-from repro.core.tcec import _SCHEDULES, split_words
+from repro.core.tcec import (nonfinite_guard, sanitize_nonfinite,
+                             split_words)
 # The split/accumulate arithmetic is shared with the flash-attention kernel
 # and the XLA attention twins — one implementation in kernels/tcec_core.
 from .tcec_core import split_vregs as _split_vregs, mma_passes as _mma_passes
+from .tcec_core import (split_int8_vregs as _split_int8_vregs,
+                        mma_passes_int8 as _mma_passes_int8)
 from .tcec_core import compiler_params as _shared_compiler_params
 from .tcec_core import round_up as _round_up
 
@@ -67,7 +70,8 @@ def _block2d(ref):
     return ref[0] if len(ref.shape) == 3 else ref[...]
 
 
-def _tcec_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_words, schedule, nk, vpu):
+def _tcec_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_words, schedule, nk, vpu,
+                 word_dtype="bf16"):
     """Grid: (b, m/bm, n/bn, k/bk); k innermost ('arbitrary')."""
     k_idx = pl.program_id(3)
 
@@ -82,6 +86,12 @@ def _tcec_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_words, schedule, nk, vpu):
         acc_ref[...] += jax.lax.dot_general(
             a, b, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
+    elif word_dtype == "int8":
+        # Quantized TCEC: per-(bm,bk)/(bk,bn)-tile int8 words generated in
+        # VREGs, int32 MMA passes rescaled to fp32 per schedule term.
+        aw, sa = _split_int8_vregs(a, n_words)
+        bw, sb = _split_int8_vregs(b, n_words)
+        acc_ref[...] += _mma_passes_int8(aw, sa, bw, sb, schedule)
     else:
         # The footprint reduction: split in VREGs, no staged word buffers.
         aw = _split_vregs(a, n_words)
@@ -188,6 +198,23 @@ def _compiler_params():
         ("parallel", "parallel", "parallel", "arbitrary"))
 
 
+def _needs_guard(pol: TcecPolicy) -> bool:
+    """Split-schedule policies need the host-level non-finite guard.
+
+    Plain bf16 casts and vpu fp32 dots propagate ±inf/NaN through the kernel
+    naturally; corrected bf16 splits and int8 quantization do not (the
+    split/quantize of a non-finite word poisons the schedule), so the host
+    wrapper sanitizes the operands and restores the fp32 reference's exact
+    ±inf/NaN pattern afterwards.
+    """
+    return pol.backend == "mxu" and (pol.error_correction
+                                     or pol.word_dtype == "int8")
+
+
+def _matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
 def tcec_matmul_pallas(a: jnp.ndarray, b: jnp.ndarray,
                        policy: TcecPolicy | str | None = None,
                        block: Tuple[int, int, int] | None = None,
@@ -211,6 +238,10 @@ def _tcec_matmul_pallas(a: jnp.ndarray, b: jnp.ndarray,
                         interpret: bool = False) -> jnp.ndarray:
     pol = policy
     nb, m, n, k = _check_shapes(a, b)
+    a0, b0 = a.astype(jnp.float32), b.astype(jnp.float32)
+    guarded = _needs_guard(pol)
+    if guarded:
+        a, b = sanitize_nonfinite(a0), sanitize_nonfinite(b0)
     bm, bn, bk = block or default_blocks(m, n, k)
     mp, np_, kp = pad_amounts(m, n, k, (bm, bn, bk))
     a = _pad_last2(a.astype(jnp.float32), mp, kp)
@@ -220,8 +251,8 @@ def _tcec_matmul_pallas(a: jnp.ndarray, b: jnp.ndarray,
     grid = (nb, mp // bm, np_ // bn, nk)
     kernel = functools.partial(
         _tcec_kernel, n_words=pol.n_words,
-        schedule=_SCHEDULES[pol.passes], nk=nk,
-        vpu=pol.backend == "vpu")
+        schedule=pol.schedule, nk=nk,
+        vpu=pol.backend == "vpu", word_dtype=pol.word_dtype)
     out = pl.pallas_call(
         kernel,
         grid=grid,
@@ -236,7 +267,10 @@ def _tcec_matmul_pallas(a: jnp.ndarray, b: jnp.ndarray,
         interpret=interpret,
     )(a3, b)
     out = out[:, :m, :n]
-    return out if a.ndim == 3 else out[0]
+    out = out if a.ndim == 3 else out[0]
+    if guarded:
+        out = nonfinite_guard(out, a0, b0, _matmul_ref)
+    return out
 
 
 def tcec_matmul_staged(a: jnp.ndarray, b: jnp.ndarray,
@@ -260,7 +294,16 @@ def _tcec_matmul_staged(a: jnp.ndarray, b: jnp.ndarray,
             "tcec_matmul_staged stages bf16 split words by construction; a "
             "vpu (plain-fp32) policy has no staged data flow — use "
             "tcec_matmul_pallas, which honors backend=\"vpu\" exactly")
+    if pol.word_dtype != "bf16":
+        raise ValueError(
+            "tcec_matmul_staged stages bf16 split words by construction; "
+            f"word_dtype={pol.word_dtype!r} policies generate per-tile-"
+            "scaled words on the fly — use tcec_matmul_pallas")
     nb, m, n, k = _check_shapes(a, b)
+    a0, b0 = a.astype(jnp.float32), b.astype(jnp.float32)
+    guarded = _needs_guard(pol)
+    if guarded:
+        a, b = sanitize_nonfinite(a0), sanitize_nonfinite(b0)
     bm, bn, bk = block or default_blocks(m, n, k)
     mp, np_, kp = pad_amounts(m, n, k, (bm, bn, bk))
     a = _pad_last2(a.astype(jnp.float32), mp, kp)
@@ -273,7 +316,7 @@ def _tcec_matmul_staged(a: jnp.ndarray, b: jnp.ndarray,
     bw = split_words(b, pol.n_words, staged=True)
     kernel = functools.partial(
         _staged_kernel, n_words=pol.n_words,
-        schedule=_SCHEDULES[pol.passes], nk=nk)
+        schedule=pol.schedule, nk=nk)
     in_specs = (
         [_in_spec(3, bm, bk, "a")] * pol.n_words
         + [_in_spec(b.ndim, bk, bn, "b")] * pol.n_words
@@ -289,7 +332,10 @@ def _tcec_matmul_staged(a: jnp.ndarray, b: jnp.ndarray,
         interpret=interpret,
     )(*aw, *bw)
     out = out[:, :m, :n]
-    return out if a.ndim == 3 else out[0]
+    out = out if a.ndim == 3 else out[0]
+    if guarded:
+        out = nonfinite_guard(out, a0, b0, _matmul_ref)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -372,7 +418,16 @@ def _tcec_matmul_staged_db(a: jnp.ndarray, b: jnp.ndarray,
             "tcec_matmul_staged_db stages bf16 split words by construction; "
             "a vpu (plain-fp32) policy has no staged data flow — use "
             "tcec_matmul_pallas, which honors backend=\"vpu\" exactly")
+    if pol.word_dtype != "bf16":
+        raise ValueError(
+            "tcec_matmul_staged_db stages bf16 split words by construction; "
+            f"word_dtype={pol.word_dtype!r} policies generate per-tile-"
+            "scaled words on the fly — use tcec_matmul_pallas")
     nb, m, n, k = _check_shapes(a, b)
+    a0, b0 = a.astype(jnp.float32), b.astype(jnp.float32)
+    guarded = _needs_guard(pol)
+    if guarded:
+        a, b = sanitize_nonfinite(a0), sanitize_nonfinite(b0)
     bm, bn, bk = block or default_blocks(m, n, k)
     mp, np_, kp = pad_amounts(m, n, k, (bm, bn, bk))
     a = _pad_last2(a.astype(jnp.float32), mp, kp)
@@ -384,7 +439,7 @@ def _tcec_matmul_staged_db(a: jnp.ndarray, b: jnp.ndarray,
     w_dt = aw[0].dtype
     kernel = functools.partial(
         _staged_db_kernel, n_words=pol.n_words,
-        schedule=_SCHEDULES[pol.passes], nk=nk, bm=bm, bn=bn, bk=bk,
+        schedule=pol.schedule, nk=nk, bm=bm, bn=bn, bk=bk,
         rhs_batched=b.ndim == 3)
     out = pl.pallas_call(
         kernel,
@@ -404,7 +459,10 @@ def _tcec_matmul_staged_db(a: jnp.ndarray, b: jnp.ndarray,
         interpret=interpret,
     )(*aw, *bw)
     out = out[:, :m, :n]
-    return out if a.ndim == 3 else out[0]
+    out = out if a.ndim == 3 else out[0]
+    if guarded:
+        out = nonfinite_guard(out, a0, b0, _matmul_ref)
+    return out
 
 
 def tcec_matmul_auto(a: jnp.ndarray, b: jnp.ndarray,
@@ -441,8 +499,9 @@ def tcec_matmul_auto(a: jnp.ndarray, b: jnp.ndarray,
 from repro.tcec.epilogue import ACTIVATIONS as _EPILOGUE_ACTS  # noqa: E402
 
 
-def _fused_kernel(*refs, n_words, schedule, nk, vpu, frag_rule, k_log, n_log,
-                  bk, bn, has_b, has_bias, has_res, scale, activation):
+def _fused_kernel(*refs, n_words, schedule, nk, vpu, word_dtype, frag_rule,
+                  k_log, n_log, bk, bn, has_b, has_bias, has_res, scale,
+                  activation):
     """Grid: (b, m/bm, n/bn, k/bk); k innermost ('arbitrary').
 
     refs: a, [b], [bias], [residual], o, acc-scratch.  When ``frag_rule`` is
@@ -478,6 +537,10 @@ def _fused_kernel(*refs, n_words, schedule, nk, vpu, frag_rule, k_log, n_log,
         acc_ref[...] += jax.lax.dot_general(
             a, b, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
+    elif word_dtype == "int8":
+        aw, sa = _split_int8_vregs(a, n_words)
+        bw, sb = _split_int8_vregs(b, n_words)
+        acc_ref[...] += _mma_passes_int8(aw, sa, bw, sb, schedule)
     else:
         aw = _split_vregs(a, n_words)
         bw = _split_vregs(b, n_words)
@@ -545,6 +608,13 @@ def _tcec_matmul_fused(a, b, policy: TcecPolicy, frag, bias, residual,
         raise ValueError(
             f"residual shape {residual.shape} does not match output "
             f"({m}, {n})")
+    a0 = a.astype(jnp.float32)
+    b0 = None if b is None else b.astype(jnp.float32)
+    guarded = _needs_guard(pol)
+    if guarded:
+        a = sanitize_nonfinite(a0)
+        if b is not None:
+            b = sanitize_nonfinite(b0)
     bm, bn, bk = block or default_blocks(m, n, k)
     mp, np_, kp = pad_amounts(m, n, k, (bm, bn, bk))
     a = _pad_last2(a.astype(jnp.float32), mp, kp)
@@ -571,8 +641,8 @@ def _tcec_matmul_fused(a, b, policy: TcecPolicy, frag, bias, residual,
 
     o_dt = jnp.dtype(out_dtype) if out_dtype is not None else jnp.float32
     kernel = functools.partial(
-        _fused_kernel, n_words=pol.n_words, schedule=_SCHEDULES[pol.passes],
-        nk=nk, vpu=pol.backend == "vpu",
+        _fused_kernel, n_words=pol.n_words, schedule=pol.schedule,
+        nk=nk, vpu=pol.backend == "vpu", word_dtype=pol.word_dtype,
         frag_rule=None if frag is None else frag.rule,
         k_log=k_log, n_log=n_log, bk=bk, bn=bn,
         has_b=frag is None, has_bias=bias is not None,
@@ -588,7 +658,37 @@ def _tcec_matmul_fused(a, b, policy: TcecPolicy, frag, bias, residual,
         interpret=interpret,
     )(*inputs)
     out = out[:, :m, :n]
-    return out if a.ndim == 3 else out[0]
+    out = out if a.ndim == 3 else out[0]
+    if guarded:
+        # Epilogue-aware non-finite guard: wherever the fp32 reference *dot*
+        # is ±inf/NaN, recompute the epilogue chain on the reference value
+        # and substitute — the kernel saw sanitized operands, so its output
+        # is finite (and exact) everywhere else.
+        ok = jnp.all(jnp.isfinite(a0))
+        if b0 is not None:
+            ok = ok & jnp.all(jnp.isfinite(b0))
+
+        def _fix(o):
+            if b0 is None:
+                ig = jax.lax.broadcasted_iota(jnp.int32, (k_log, n_log), 0)
+                jg = jax.lax.broadcasted_iota(jnp.int32, (k_log, n_log), 1)
+                bb = frag.rule(ig, jg).astype(jnp.float32)
+            else:
+                bb = b0
+            ref = _matmul_ref(a0, bb)
+            mask = jnp.isfinite(ref)
+            if scale != 1.0:
+                ref = ref * jnp.float32(scale)
+            if bias is not None:
+                ref = ref + bias.astype(jnp.float32)
+            if activation is not None:
+                ref = _EPILOGUE_ACTS[activation](ref)
+            if residual is not None:
+                ref = ref + residual.astype(jnp.float32)
+            return jnp.where(mask, o, ref.astype(o.dtype))
+
+        out = jax.lax.cond(ok, lambda o: o, _fix, out)
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -409,24 +409,39 @@ def gqa_apply(p, x: jnp.ndarray, cfg: ArchConfig, positions: jnp.ndarray,
         # offset axes never — under a mesh the constraint keeps GSPMD from
         # re-replicating the appended pool across the model axis mid-step
         # (matches parallel.sharding.paged_cache_pspecs).
-        k_pages = shard_hint(
-            _pc.append_pages(cache["k_pages"], k, block_table, seq_lens),
-            None, None, "kv", None)
-        v_pages = shard_hint(
-            _pc.append_pages(cache["v_pages"], v, block_table, seq_lens),
-            None, None, "kv", None)
+        k_scales = v_scales = None
+        if "k_scales" in cache:
+            # quantized pools: int8 payload + per-page fp32 scale sidecar
+            kp, k_scales = _pc.append_pages(cache["k_pages"], k, block_table,
+                                            seq_lens,
+                                            scales=cache["k_scales"])
+            vp, v_scales = _pc.append_pages(cache["v_pages"], v, block_table,
+                                            seq_lens,
+                                            scales=cache["v_scales"])
+        else:
+            kp = _pc.append_pages(cache["k_pages"], k, block_table, seq_lens)
+            vp = _pc.append_pages(cache["v_pages"], v, block_table, seq_lens)
+        k_pages = shard_hint(kp, None, None, "kv", None)
+        v_pages = shard_hint(vp, None, None, "kv", None)
         if s == 1:
             o = _pa.paged_decode_attention(
                 q[:, 0], k_pages, v_pages, block_table,
-                seq_lens.astype(jnp.int32) + 1)[:, None]
+                seq_lens.astype(jnp.int32) + 1,
+                k_scales=k_scales, v_scales=v_scales)[:, None]
         else:
             row_pos = seq_lens[:, None].astype(jnp.int32) \
                 + jnp.arange(s, dtype=jnp.int32)[None]
             o = _pa.paged_prefill_attention(q, k_pages, v_pages,
-                                            block_table, row_pos)
+                                            block_table, row_pos,
+                                            k_scales=k_scales,
+                                            v_scales=v_scales)
         o = shard_hint(o, "batch", None, "heads", None)
         y = dense(o.reshape(b, s, h * hd), p["wo"], pol)
-        return y.astype(x.dtype), {"k_pages": k_pages, "v_pages": v_pages}
+        new_cache = {"k_pages": k_pages, "v_pages": v_pages}
+        if k_scales is not None:
+            new_cache["k_scales"] = k_scales
+            new_cache["v_scales"] = v_scales
+        return y.astype(x.dtype), new_cache
 
     if cache is not None:
         # decode: insert k/v at cache_index, attend against full cache
@@ -515,22 +530,31 @@ def mla_apply(p, x: jnp.ndarray, cfg: ArchConfig, positions: jnp.ndarray,
         # --- paged absorbed decode: latent cache lives in page pools ---
         from repro.serving import paged_cache as _pc
         from repro.serving import paged_attention as _pa
-        c_pages = _pc.append_pages(cache["c_pages"], c_kv, block_table,
-                                   seq_lens)
-        r_pages = _pc.append_pages(cache["r_pages"], k_rope, block_table,
-                                   seq_lens)
+        c_scales = r_scales = None
+        if "c_scales" in cache:
+            c_pages, c_scales = _pc.append_pages(
+                cache["c_pages"], c_kv, block_table, seq_lens,
+                scales=cache["c_scales"])
+            r_pages, r_scales = _pc.append_pages(
+                cache["r_pages"], k_rope, block_table, seq_lens,
+                scales=cache["r_scales"])
+        else:
+            c_pages = _pc.append_pages(cache["c_pages"], c_kv, block_table,
+                                       seq_lens)
+            r_pages = _pc.append_pages(cache["r_pages"], k_rope, block_table,
+                                       seq_lens)
         q_c = tcec.einsum("bqhn,lhn->bqhl", q_nope, w_uk,
                           site="attn", policy=apol)
         if s == 1:
             o_c = _pa.paged_mla_decode_attention(
                 q_c[:, 0], q_rope[:, 0], c_pages, r_pages, block_table,
                 seq_lens.astype(jnp.int32) + 1, scale=scale,
-                policy=apol)[:, None]
+                policy=apol, c_scales=c_scales, r_scales=r_scales)[:, None]
         else:                                   # chunked prefill
             row_pos = seq_lens[:, None].astype(jnp.int32) \
                 + jnp.arange(s, dtype=jnp.int32)[None]
-            c = _pc.gather_pages(c_pages, block_table)
-            r = _pc.gather_pages(r_pages, block_table)
+            c = _pc.gather_pages(c_pages, block_table, scales=c_scales)
+            r = _pc.gather_pages(r_pages, block_table, scales=r_scales)
             valid = jnp.arange(c.shape[1], dtype=jnp.int32)[None, None] \
                 <= row_pos[..., None]
             o_c = mla_absorbed_attention(q_c, q_rope, c, r, valid, scale,
@@ -539,7 +563,11 @@ def mla_apply(p, x: jnp.ndarray, cfg: ArchConfig, positions: jnp.ndarray,
             tcec.einsum("bqhl,lhv->bqhv", o_c, w_uv, site="attn", policy=apol),
             "batch", None, "heads", None)
         y = dense(o.reshape(b, s, h * vd).astype(x.dtype), p["wo"], pol)
-        return y.astype(x.dtype), {"c_pages": c_pages, "r_pages": r_pages}
+        new_cache = {"c_pages": c_pages, "r_pages": r_pages}
+        if c_scales is not None:
+            new_cache["c_scales"] = c_scales
+            new_cache["r_scales"] = r_scales
+        return y.astype(x.dtype), new_cache
 
     if cache is not None:
         # --- absorbed decode: never re-expand K/V from the latent cache ---

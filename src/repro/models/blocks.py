@@ -179,47 +179,72 @@ def block_cache_spec(cfg: ArchConfig, spec: BlockSpec, b: int, S: int,
 
 
 def block_paged_cache_spec(cfg: ArchConfig, spec: BlockSpec, slots: int,
-                           num_pages: int, page_size: int) -> Optional[Dict]:
+                           num_pages: int, page_size: int,
+                           quantized: bool = False) -> Optional[Dict]:
     """Paged decode-cache layout for one block (``repro.serving``).
 
     Sequence-shaped attention caches become shared page pools ``(num_pages,
     page_size, *tail)`` addressed through per-request block tables; the
     recurrent mixers' O(1) states keep their dense per-slot layout
-    ``(slots, ...)`` (there is nothing sequence-shaped to page)."""
+    ``(slots, ...)`` (there is nothing sequence-shaped to page).
+
+    ``quantized=True`` stores int8 page payloads plus a per-page fp32 scale
+    sidecar per pool (``*_scales (num_pages,)`` — a parallel array, so page
+    ids / block tables / COW / sharding are untouched)."""
     kvh, hd = cfg.n_kv_heads, cfg.head_dim_
-    dt = jnp.dtype(cfg.param_dtype)
+    dt = jnp.int8 if quantized else jnp.dtype(cfg.param_dtype)
+    scale = jax.ShapeDtypeStruct((num_pages,), jnp.float32)
     if spec.mixer == "attn":
-        return {"mixer": {
+        out = {
             "k_pages": jax.ShapeDtypeStruct((num_pages, page_size, kvh, hd), dt),
             "v_pages": jax.ShapeDtypeStruct((num_pages, page_size, kvh, hd), dt),
-        }}
+        }
+        if quantized:
+            out["k_scales"] = scale
+            out["v_scales"] = scale
+        return {"mixer": out}
     if spec.mixer == "mla":
         m = cfg.mla
-        return {"mixer": {
+        out = {
             "c_pages": jax.ShapeDtypeStruct(
                 (num_pages, page_size, m.kv_lora_rank), dt),
             "r_pages": jax.ShapeDtypeStruct(
                 (num_pages, page_size, m.qk_rope_head_dim), dt),
-        }}
+        }
+        if quantized:
+            out["c_scales"] = scale
+            out["r_scales"] = scale
+        return {"mixer": out}
     # recurrent mixers: per-slot dense state, identical to the batch layout
     return block_cache_spec(cfg, spec, slots, 0)
 
 
-def block_paged_cache_axes(cfg: ArchConfig, spec: BlockSpec) -> Optional[Dict]:
+def block_paged_cache_axes(cfg: ArchConfig, spec: BlockSpec,
+                           quantized: bool = False) -> Optional[Dict]:
     """Logical axis names matching ``block_paged_cache_spec`` (pre-stacking).
 
     Pool leaves ``(num_pages, page_size, *tail)``: neither the page axis
     nor the in-page offset is ever sharded (any device may need to resolve
     any physical page id its block table names); the kv-head axis rides the
     ``kv`` rule — tensor-parallel over ``model`` when divisible, replicated
-    otherwise.  MLA latent pools have no head axis and replicate.  Per-slot
-    recurrent states reuse the dense batch layout (slot axis == "batch")."""
+    otherwise.  MLA latent pools have no head axis and replicate.  Scale
+    sidecars ``(num_pages,)`` replicate (they are page-axis-parallel, and
+    the page axis never shards).  Per-slot recurrent states reuse the dense
+    batch layout (slot axis == "batch")."""
     if spec.mixer == "attn":
-        return {"mixer": {"k_pages": (None, None, "kv", None),
-                          "v_pages": (None, None, "kv", None)}}
+        out = {"k_pages": (None, None, "kv", None),
+               "v_pages": (None, None, "kv", None)}
+        if quantized:
+            out["k_scales"] = (None,)
+            out["v_scales"] = (None,)
+        return {"mixer": out}
     if spec.mixer == "mla":
-        return {"mixer": {"c_pages": (None, None, None),
-                          "r_pages": (None, None, None)}}
+        out = {"c_pages": (None, None, None),
+               "r_pages": (None, None, None)}
+        if quantized:
+            out["c_scales"] = (None,)
+            out["r_scales"] = (None,)
+        return {"mixer": out}
     return block_cache_axes(cfg, spec)
 
 

@@ -329,7 +329,8 @@ def decode_step_paged(params, tokens: jnp.ndarray, caches: Any,
     return logits, new_caches
 
 
-_POOL_KEYS = frozenset(("k_pages", "v_pages", "c_pages", "r_pages"))
+_POOL_KEYS = frozenset(("k_pages", "v_pages", "c_pages", "r_pages",
+                        "k_scales", "v_scales", "c_scales", "r_scales"))
 
 
 def _restore_recurrent_rows(new_caches, old_caches, n_acc, active):
@@ -427,18 +428,20 @@ def init_decode_caches(cfg: ArchConfig, b: int, max_len: int):
 
 
 def paged_cache_specs(cfg: ArchConfig, slots: int, num_pages: int,
-                      page_size: int) -> Any:
+                      page_size: int, quantized: bool = False) -> Any:
     """Abstract *paged* cache pytree (stacked over groups): attention KV /
     MLA latent caches as shared page pools, recurrent states per-slot.
-    Encoder-decoder and vision frontends are not paged (no decode-time
-    growth to page)."""
+    ``quantized=True`` makes the pools int8 with per-page fp32 scale
+    sidecar leaves.  Encoder-decoder and vision frontends are not paged
+    (no decode-time growth to page)."""
     if cfg.encoder_layers or cfg.vision_tokens:
         raise NotImplementedError(
             "paged serving covers decoder-only architectures")
     from .blocks import block_paged_cache_spec
     group = {}
     for i, spec in enumerate(cfg.pattern):
-        c = block_paged_cache_spec(cfg, spec, slots, num_pages, page_size)
+        c = block_paged_cache_spec(cfg, spec, slots, num_pages, page_size,
+                                   quantized=quantized)
         if c is not None:
             group[f"pos{i}"] = c
     return jax.tree.map(
@@ -447,13 +450,14 @@ def paged_cache_specs(cfg: ArchConfig, slots: int, num_pages: int,
 
 
 def init_paged_decode_caches(cfg: ArchConfig, slots: int, num_pages: int,
-                             page_size: int):
+                             page_size: int, quantized: bool = False):
     """Concrete zero paged caches (pools + per-slot states)."""
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
-                        paged_cache_specs(cfg, slots, num_pages, page_size))
+                        paged_cache_specs(cfg, slots, num_pages, page_size,
+                                          quantized=quantized))
 
 
-def paged_cache_axes(cfg: ArchConfig) -> Any:
+def paged_cache_axes(cfg: ArchConfig, quantized: bool = False) -> Any:
     """Logical-axis tree matching ``paged_cache_specs`` (stacked: +'layers').
 
     Feeds ``repro.parallel.sharding.paged_cache_pspecs``: page pools shard
@@ -462,7 +466,7 @@ def paged_cache_axes(cfg: ArchConfig) -> Any:
     from .blocks import block_paged_cache_axes
     group = {}
     for i, spec in enumerate(cfg.pattern):
-        a = block_paged_cache_axes(cfg, spec)
+        a = block_paged_cache_axes(cfg, spec, quantized=quantized)
         if a is not None:
             group[f"pos{i}"] = a
 

@@ -11,14 +11,22 @@ Pure-JAX: quantize/dequantize are jittable and shardable; the reduction
 itself stays an XLA all-reduce (int8 summation needs a widened dtype, so the
 wire format is int8 + fp32 scale per block; the sum happens post-dequant on
 the reduced precision values — per-pod partial sums stay fp32 locally).
+
+The quantization arithmetic is the repo-wide int8 contract of
+``repro.core.quant`` (one implementation shared with the quantized-TCEC
+split schedule and the quantized paged KV pool); ``quantize``/``dequantize``
+here are thin wrappers.  ``meta`` records the source dtype, so a bf16 leaf
+round-trips as bf16 instead of silently widening to fp32.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.quant import dequantize_blocks, quantize_blocks
 
 
 @dataclasses.dataclass(frozen=True)
@@ -27,30 +35,16 @@ class CompressionConfig:
     enabled: bool = True
 
 
-def _pad_to(x: jnp.ndarray, block: int) -> Tuple[jnp.ndarray, int]:
-    flat = x.reshape(-1)
-    pad = (-flat.shape[0]) % block
-    if pad:
-        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
-    return flat, pad
-
-
 def quantize(x: jnp.ndarray, block: int = 256):
-    """fp -> (int8 values, fp32 per-block scales, original shape/pad)."""
-    flat, pad = _pad_to(x.astype(jnp.float32), block)
-    blocks = flat.reshape(-1, block)
-    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
-    scale = jnp.maximum(scale, 1e-12)
-    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
-    return q, scale.astype(jnp.float32), (x.shape, pad)
+    """fp -> (int8 ``(nblocks, block)``, fp32 per-block scales ``(nblocks,
+    1)``, meta ``(shape, pad, dtype_name)``)."""
+    return quantize_blocks(x, block)
 
 
 def dequantize(q: jnp.ndarray, scale: jnp.ndarray, meta) -> jnp.ndarray:
-    shape, pad = meta
-    flat = (q.astype(jnp.float32) * scale).reshape(-1)
-    if pad:
-        flat = flat[:-pad]
-    return flat.reshape(shape)
+    """Inverse of ``quantize``: restores the original shape AND dtype
+    (legacy 2-tuple ``(shape, pad)`` metas dequantize to fp32)."""
+    return dequantize_blocks(q, scale, meta)
 
 
 def compress_leaf(g: jnp.ndarray, err: jnp.ndarray, cfg: CompressionConfig):

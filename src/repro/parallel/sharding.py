@@ -116,17 +116,20 @@ def cache_pspecs(cfg, mesh: Mesh, b: int, max_len: int, rules=None):
 
 
 def paged_cache_pspecs(cfg, mesh: Mesh, slots: int, num_pages: int,
-                       page_size: int, rules=None):
+                       page_size: int, rules=None, quantized: bool = False):
     """PartitionSpec tree for the *paged* serving caches.
 
     Page pools shard their kv-head axis over ``model`` when divisible
     (tensor-parallel decode reads only its own heads' pages) and stay
     replicated otherwise; the page axis itself is never sharded — every
     device must resolve any physical page id its block table names.
+    Quantized pools' per-page scale sidecars replicate (page-axis-parallel).
     Per-slot recurrent states shard the slot axis over the data axes."""
     from repro.models.model import paged_cache_specs, paged_cache_axes
-    return tree_pspecs(paged_cache_specs(cfg, slots, num_pages, page_size),
-                       paged_cache_axes(cfg), mesh, rules)
+    return tree_pspecs(paged_cache_specs(cfg, slots, num_pages, page_size,
+                                         quantized=quantized),
+                       paged_cache_axes(cfg, quantized=quantized),
+                       mesh, rules)
 
 
 def batch_pspecs(batch_tree, mesh: Mesh):

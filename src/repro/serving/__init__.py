@@ -23,8 +23,9 @@ Speculative decoding (``repro.spec``) rides the same engine:
 into a batched multi-token verify tick committing ``[1, k+1]`` tokens per
 slot, streams bitwise-identical per policy to the plain engine.
 """
-from .paged_cache import (append_pages, copy_page, gather_pages, init_pool,
-                          pages_needed, NULL_PAGE)
+from .paged_cache import (append_pages, copy_page, gather_pages,
+                          init_page_scales, init_pool, pages_needed,
+                          reset_page_scales, NULL_PAGE)
 from .paged_attention import (paged_decode_attention,
                               paged_decode_attention_pallas,
                               paged_decode_attention_xla,
@@ -36,8 +37,8 @@ from .scheduler import (PageAllocator, PrefillChunk, Request, Scheduler,
 from .engine import PagedServingEngine
 
 __all__ = [
-    "append_pages", "copy_page", "gather_pages", "init_pool", "pages_needed",
-    "NULL_PAGE",
+    "append_pages", "copy_page", "gather_pages", "init_page_scales",
+    "init_pool", "pages_needed", "reset_page_scales", "NULL_PAGE",
     "paged_decode_attention", "paged_decode_attention_pallas",
     "paged_decode_attention_xla", "paged_mla_decode_attention",
     "paged_prefill_attention",

@@ -44,7 +44,7 @@ from repro.models import (decode_step_paged, init_paged_decode_caches,
                           prefill)
 from repro.models.model import verify_step_paged
 from .paged_cache import (NULL_PAGE, copy_page, pages_needed,
-                          write_prefill_prefix)
+                          reset_page_scales, write_prefill_prefix)
 from .scheduler import Request, Scheduler, StepPlan
 
 __all__ = ["PagedServingEngine"]
@@ -111,6 +111,16 @@ class PagedServingEngine:
     reason single-token ticks keep them safe: a position only becomes
     readable once a *real* append at it advances ``seq_lens`` past it,
     and every real append overwrites the position first.
+
+    ``quantized_kv=True`` stores the page pools as int8 payloads with a
+    per-page fp32 scale sidecar (``repro.serving.paged_cache``): decode
+    streams ~2-4x fewer cache bytes; page ids, block tables, COW sharing
+    and the sharding contract are untouched (the sidecar is a parallel
+    ``(P,)`` array).  Scales grow by scatter-max during a page's residency
+    and are zeroed for a request's fresh pages at admission (recycled pages
+    would otherwise inherit the previous tenant's scale and only ratchet
+    upward).  Off (the default), no code path changes — token streams stay
+    bitwise-identical to an engine without the feature.
     """
 
     def __init__(self, cfg: ArchConfig, params, *,
@@ -121,10 +131,12 @@ class PagedServingEngine:
                  prefix_cache: bool = False,
                  mesh=None,
                  eos_id: Optional[int] = None,
-                 speculative=None):
+                 speculative=None,
+                 quantized_kv: bool = False):
         tuned = None
         if page_size is None or prefill_chunk == "auto":
-            tuned = self._tuned_plan(cfg, max_seq_len)
+            tuned = self._tuned_plan(cfg, max_seq_len,
+                                     quantized=quantized_kv)
         if page_size is None:
             page_size = 16 if tuned is None else tuned.page_size
         if prefill_chunk == "auto":
@@ -141,6 +153,7 @@ class PagedServingEngine:
         self.cfg = cfg
         self.page_size = page_size
         self.prefix_cache = prefix_cache
+        self.quantized_kv = quantized_kv
         self.eos_id = eos_id
         self.npages_per_seq = pages_needed(max_seq_len, page_size)
         if num_pages is None:
@@ -159,7 +172,8 @@ class PagedServingEngine:
             self.proposer = build_proposer(speculative, max_seq_len)
             self._spec_stats = SpecStats()
         self.caches = init_paged_decode_caches(cfg, max_concurrency,
-                                               num_pages, page_size)
+                                               num_pages, page_size,
+                                               quantized=quantized_kv)
         self.mesh = mesh
         self._replicated = None
         if mesh is not None:
@@ -170,7 +184,8 @@ class PagedServingEngine:
                 self.caches,
                 shd.shardings_of(
                     shd.paged_cache_pspecs(cfg, mesh, max_concurrency,
-                                           num_pages, page_size), mesh))
+                                           num_pages, page_size,
+                                           quantized=quantized_kv), mesh))
             self._replicated = shd.replicated(mesh)
         self.params = params
         self.block_table = np.full((max_concurrency, self.npages_per_seq),
@@ -186,6 +201,8 @@ class PagedServingEngine:
         self._prefill_fn = jax.jit(functools.partial(prefill, cfg=cfg))
         self._write_fn = jax.jit(write_prefill_prefix, donate_argnums=(0,))
         self._copy_fn = jax.jit(copy_page, donate_argnums=(0,))
+        self._reset_scales_fn = jax.jit(reset_page_scales,
+                                        donate_argnums=(0,))
         self._verify_fn = jax.jit(
             lambda p, t, c, bt, sl, act, nd: verify_step_paged(
                 p, t, c, bt, sl, cfg, n_draft=nd, active=act),
@@ -213,7 +230,8 @@ class PagedServingEngine:
         return arr
 
     @staticmethod
-    def _tuned_plan(cfg: ArchConfig, max_seq_len: int):
+    def _tuned_plan(cfg: ArchConfig, max_seq_len: int,
+                    quantized: bool = False):
         """The ``repro.tune`` paged plan for this architecture's KV-cache
         geometry under the resolved ``"attn"`` policy, or ``None`` when
         tuning is off."""
@@ -228,7 +246,8 @@ class PagedServingEngine:
         else:
             kvh, d = cfg.n_kv_heads, cfg.head_dim_
             dv = cfg.head_dim_
-        return tune.paged_plan(max_seq_len, kvh, d, dv, policy=pol)
+        return tune.paged_plan(max_seq_len, kvh, d, dv, policy=pol,
+                               quantized=quantized)
 
     # -- submission ---------------------------------------------------------
 
@@ -271,6 +290,18 @@ class PagedServingEngine:
                 self.caches = self._copy_fn(
                     self.caches, self._host(st.boundary_src),
                     self._host(row[st.n_shared]))
+            if self.quantized_kv:
+                # recycled pages keep their stale scale (nothing is zeroed
+                # on eviction) and scales only ever grow mid-residency —
+                # zero the *fresh* pages' scales at admission so each
+                # tenant quantizes against its own magnitudes.  Shared
+                # prefix pages (and the COW boundary clone, which holds
+                # live tokens at the source's scale) must keep theirs.
+                keep = st.n_shared + (1 if st.boundary_src is not None else 0)
+                fresh = list(row[keep:])
+                fresh += [NULL_PAGE] * (self.npages_per_seq - len(fresh))
+                self.caches = self._reset_scales_fn(self.caches,
+                                                    self._host(fresh))
             self.seq_lens[slot] = st.cached_upto
 
         for chunk in plan.prefill:

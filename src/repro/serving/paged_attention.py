@@ -63,11 +63,18 @@ def _corrected(pol: TcecPolicy) -> bool:
 # ---------------------------------------------------------------------------
 
 def _paged_kernel(bt_ref, sl_ref, q_ref, k_ref, v_ref, *rest,
-                  page, npages, scale, dot_kw, has_rope):
+                  page, npages, scale, dot_kw, has_rope, quantized):
+    rest = list(rest)
+    ks_ref = vs_ref = k2s_ref = None
+    if quantized:
+        ks_ref, vs_ref = rest[:2]
+        rest = rest[2:]
     if has_rope:
-        q2_ref, k2_ref, o_ref, m_ref, l_ref, acc_ref = rest
-    else:
-        o_ref, m_ref, l_ref, acc_ref = rest
+        q2_ref, k2_ref = rest[:2]
+        rest = rest[2:]
+        if quantized:
+            k2s_ref, rest = rest[0], rest[1:]
+    o_ref, m_ref, l_ref, acc_ref = rest
     bi = pl.program_id(0)
     ji = pl.program_id(2)
 
@@ -80,12 +87,19 @@ def _paged_kernel(bt_ref, sl_ref, q_ref, k_ref, v_ref, *rest,
     q = q_ref[0, 0].astype(jnp.float32)              # (rep, d)
     k = k_ref[0, :, 0].astype(jnp.float32)           # (page, d)
     v = v_ref[0, :, 0].astype(jnp.float32)           # (page, dv)
+    if quantized:
+        # int8 page payloads: dequantize at this page's scalar scale right
+        # after the page DMA — the gather twin multiplies the same factor.
+        k = k * ks_ref[0, 0]
+        v = v * vs_ref[0, 0]
 
     # QK^T at policy-selected precision (split words live in VREGs).
     s = policy_dot(q, k, _QK_DN, **dot_kw)
     if has_rope:
         q2 = q2_ref[0, 0].astype(jnp.float32)        # (rep, d2)
         k2 = k2_ref[0, :, 0].astype(jnp.float32)     # (page, d2)
+        if quantized:
+            k2 = k2 * k2s_ref[0, 0]
         s = s + policy_dot(q2, k2, _QK_DN, **dot_kw)
     s = s * scale
 
@@ -114,12 +128,14 @@ def _paged_kernel(bt_ref, sl_ref, q_ref, k_ref, v_ref, *rest,
 @functools.partial(
     jax.jit, static_argnames=("policy", "scale", "interpret"))
 def _paged_pallas(q, k_pages, v_pages, q2, k2_pages, block_table, seq_lens,
-                  policy: TcecPolicy, scale: float, interpret: bool):
+                  policy: TcecPolicy, scale: float, interpret: bool,
+                  k_scales=None, v_scales=None, k2_scales=None):
     b, kvh, rep, d = q.shape
     page = k_pages.shape[1]
     dv = v_pages.shape[-1]
     npages = block_table.shape[1]
     has_rope = q2 is not None
+    quantized = k_scales is not None
 
     # kv heads ride the grid (GQA: h = kvh * rep, no repeated-head copies);
     # the page axis is innermost and 'arbitrary' so (m, l, acc) scratch
@@ -132,12 +148,23 @@ def _paged_pallas(q, k_pages, v_pages, q2, k2_pages, block_table, seq_lens,
         del j, bt, sl
         return (b_, g, 0, 0)
 
+    def scale_map(b_, g, j, bt, sl):
+        del g, sl
+        return (bt[b_, j], 0)
+
+    scale_spec = pl.BlockSpec((1, 1), scale_map)
+
     in_specs = [
         pl.BlockSpec((1, 1, rep, d), q_map),
         pl.BlockSpec((1, page, 1, d), kv_map),
         pl.BlockSpec((1, page, 1, dv), kv_map),
     ]
     operands = [q, k_pages, v_pages]
+    if quantized:
+        # per-page fp32 scales ride as (P, 1) blocks resolved through the
+        # same block-table index map as their pages.
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scales.reshape(-1, 1), v_scales.reshape(-1, 1)]
     if has_rope:
         d2 = q2.shape[-1]
         in_specs += [
@@ -145,6 +172,9 @@ def _paged_pallas(q, k_pages, v_pages, q2, k2_pages, block_table, seq_lens,
             pl.BlockSpec((1, page, 1, d2), kv_map),
         ]
         operands += [q2, k2_pages]
+        if quantized:
+            in_specs += [scale_spec]
+            operands += [k2_scales.reshape(-1, 1)]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -160,7 +190,7 @@ def _paged_pallas(q, k_pages, v_pages, q2, k2_pages, block_table, seq_lens,
     return pl.pallas_call(
         functools.partial(_paged_kernel, page=page, npages=npages,
                           scale=scale, dot_kw=dot_params(policy),
-                          has_rope=has_rope),
+                          has_rope=has_rope, quantized=quantized),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, kvh, rep, dv), jnp.float32),
         compiler_params=_compiler_params(),
@@ -177,7 +207,9 @@ def paged_decode_attention_pallas(q, k_pages, v_pages, block_table, seq_lens,
                                   *, scale: Optional[float] = None,
                                   policy: TcecPolicy | str | None = None,
                                   interpret: Optional[bool] = None,
-                                  q2=None, k2_pages=None) -> jnp.ndarray:
+                                  q2=None, k2_pages=None,
+                                  k_scales=None, v_scales=None,
+                                  k2_scales=None) -> jnp.ndarray:
     """Fused paged decode attention (one query token per request).
 
     q ``(b, h, d)``; ``k_pages (P, page, kvh, d)``; ``v_pages (P, page,
@@ -185,6 +217,9 @@ def paged_decode_attention_pallas(q, k_pages, v_pages, block_table, seq_lens,
     ``i`` attends to its first ``seq_lens[i]`` logical positions; a zero
     length emits zeros.  ``(q2, k2_pages)`` is the optional second score
     operand pair (MLA's rope term, added before the online softmax).
+    ``k_scales``/``v_scales``/``k2_scales`` ``(P,)`` fp32 mark int8 pools:
+    each page dequantizes at its own scale right after its DMA (int8 page
+    reads stream half the bytes of bf16, a quarter of fp32).
     Returns ``(b, h, dv)`` fp32 for corrected/vpu policies, ``q.dtype``
     for the plain bf16 policy (the framework-wide dtype contract).
     """
@@ -202,7 +237,8 @@ def paged_decode_attention_pallas(q, k_pages, v_pages, block_table, seq_lens,
     q2h = None if q2 is None else q2.reshape(b, kvh, rep, q2.shape[-1])
     out = _paged_pallas(qh, k_pages, v_pages, q2h, k2_pages,
                         block_table, seq_lens, pol, float(scale),
-                        bool(interpret))
+                        bool(interpret), k_scales=k_scales,
+                        v_scales=v_scales, k2_scales=k2_scales)
     out = out.reshape(b, h, v_pages.shape[-1])
     return out if _corrected(pol) else out.astype(q.dtype)
 
@@ -212,15 +248,17 @@ def paged_decode_attention_pallas(q, k_pages, v_pages, block_table, seq_lens,
 # ---------------------------------------------------------------------------
 
 def paged_decode_attention_xla(q, k_pages, v_pages, block_table, seq_lens,
-                               *, policy: TcecPolicy | str | None = None
-                               ) -> jnp.ndarray:
+                               *, policy: TcecPolicy | str | None = None,
+                               k_scales=None, v_scales=None) -> jnp.ndarray:
     """XLA twin: gather the block table's pages and run the *contiguous*
     ``decode_attention`` on the virtual cache — identical arithmetic to the
-    dense decode path by construction (parity is exact per policy)."""
+    dense decode path by construction (parity is exact per policy).
+    Quantized pools (``k_scales``/``v_scales`` given) dequantize during the
+    gather, so the kernel and twin see identical fp32 page values."""
     from repro.models.attention import decode_attention
     pol = resolve_policy(policy, "attn")
-    kv = gather_pages(k_pages, block_table)      # (b, Sv, kvh, d)
-    vv = gather_pages(v_pages, block_table)
+    kv = gather_pages(k_pages, block_table, scales=k_scales)  # (b, Sv, kvh, d)
+    vv = gather_pages(v_pages, block_table, scales=v_scales)
     o = decode_attention(q[:, None], kv, vv,
                          seq_lens.astype(jnp.int32) - 1, policy=pol)
     return o[:, 0]
@@ -228,7 +266,8 @@ def paged_decode_attention_xla(q, k_pages, v_pages, block_table, seq_lens,
 
 def paged_decode_attention(q, k_pages, v_pages, block_table, seq_lens,
                            *, policy: TcecPolicy | str | None = None,
-                           interpret: Optional[bool] = None) -> jnp.ndarray:
+                           interpret: Optional[bool] = None,
+                           k_scales=None, v_scales=None) -> jnp.ndarray:
     """Policy-dispatching paged decode attention (GQA/MHA).
 
     Resolves the ``"attn"`` site from the active ``policy_scope``: a policy
@@ -239,16 +278,17 @@ def paged_decode_attention(q, k_pages, v_pages, block_table, seq_lens,
     if pol.kernel == "pallas" and pol.backend == "mxu":
         return paged_decode_attention_pallas(
             q, k_pages, v_pages, block_table, seq_lens, policy=pol,
-            interpret=interpret)
+            interpret=interpret, k_scales=k_scales, v_scales=v_scales)
     return paged_decode_attention_xla(q, k_pages, v_pages, block_table,
-                                      seq_lens, policy=pol)
+                                      seq_lens, policy=pol,
+                                      k_scales=k_scales, v_scales=v_scales)
 
 
 def paged_mla_decode_attention(q_c, q_rope, c_pages, r_pages, block_table,
                                seq_lens, *, scale: float,
                                policy: TcecPolicy | str | None = None,
-                               interpret: Optional[bool] = None
-                               ) -> jnp.ndarray:
+                               interpret: Optional[bool] = None,
+                               c_scales=None, r_scales=None) -> jnp.ndarray:
     """Paged MLA absorbed decode: ``softmax(q_c c^T + q_r r^T) c``.
 
     ``q_c (b, h, lora)``, ``q_rope (b, h, rope)``; ``c_pages (P, page,
@@ -258,16 +298,19 @@ def paged_mla_decode_attention(q_c, q_rope, c_pages, r_pages, block_table,
     the GQA kernel at ``kvh == 1`` with the rope term as the second score
     operand; the XLA twin calls the same ``mla_absorbed_attention`` core the
     contiguous decode path runs, so parity is exact per policy.
+    ``c_scales``/``r_scales`` ``(P,)`` mark quantized latent pools (the
+    latent page serves as both K and V, so its scale applies to both).
     """
     pol = resolve_policy(policy, "attn")
     if pol.kernel == "pallas" and pol.backend == "mxu":
         return paged_decode_attention_pallas(
             q_c, c_pages[:, :, None], c_pages[:, :, None], block_table,
             seq_lens, scale=scale, policy=pol, interpret=interpret,
-            q2=q_rope, k2_pages=r_pages[:, :, None])
+            q2=q_rope, k2_pages=r_pages[:, :, None],
+            k_scales=c_scales, v_scales=c_scales, k2_scales=r_scales)
     from repro.models.attention import mla_absorbed_attention
-    c = gather_pages(c_pages, block_table)       # (b, Sv, lora)
-    r = gather_pages(r_pages, block_table)
+    c = gather_pages(c_pages, block_table, scales=c_scales)  # (b, Sv, lora)
+    r = gather_pages(r_pages, block_table, scales=r_scales)
     sv = c.shape[1]
     valid = jnp.arange(sv, dtype=jnp.int32)[None, None] \
         < seq_lens.astype(jnp.int32)[:, None, None]       # (b, 1, Sv)
@@ -277,8 +320,8 @@ def paged_mla_decode_attention(q_c, q_rope, c_pages, r_pages, block_table,
 
 
 def paged_prefill_attention(q, k_pages, v_pages, block_table, row_pos,
-                            *, policy: TcecPolicy | str | None = None
-                            ) -> jnp.ndarray:
+                            *, policy: TcecPolicy | str | None = None,
+                            k_scales=None, v_scales=None) -> jnp.ndarray:
     """Chunked-prefill attention against a paged cache (XLA).
 
     ``q (b, s, h, d)`` is a prompt chunk whose tokens sit at absolute
@@ -288,8 +331,8 @@ def paged_prefill_attention(q, k_pages, v_pages, block_table, row_pos,
     """
     pol = resolve_policy(policy, "attn")
     b, sq, h, d = q.shape
-    kv = gather_pages(k_pages, block_table)      # (b, Sv, kvh, d)
-    vv = gather_pages(v_pages, block_table)
+    kv = gather_pages(k_pages, block_table, scales=k_scales)  # (b, Sv, kvh, d)
+    vv = gather_pages(v_pages, block_table, scales=v_scales)
     kvh = kv.shape[2]
     rep = h // kvh
     sv = kv.shape[1]

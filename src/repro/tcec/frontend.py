@@ -49,7 +49,8 @@ import jax.numpy as jnp
 
 from repro.core.context import resolve_policy
 from repro.core.policy import TcecPolicy
-from repro.core.tcec import _SCHEDULES, split_words
+from repro.core.quant import split_int8
+from repro.core.tcec import nonfinite_guard, sanitize_nonfinite, split_words
 from .epilogue import ACTIVATIONS, Epilogue, NO_EPILOGUE
 from .operands import FragmentOperand
 from .planner import Plan, parse_equation, plan_einsum
@@ -65,6 +66,7 @@ def wide_weight_policy(pol: TcecPolicy, w_dtype) -> TcecPolicy:
     vpu executor instead.  Pallas-kernel policies keep their path (the
     kernel's in-VREG split is the point of selecting it)."""
     if (pol.backend == "mxu" and not pol.error_correction
+            and pol.word_dtype == "bf16"
             and pol.kernel != "pallas"
             and jnp.dtype(w_dtype) != jnp.bfloat16):
         return dataclasses.replace(pol, backend="vpu", kernel="xla")
@@ -133,18 +135,46 @@ def _contract(eq: str, a: jnp.ndarray, b: jnp.ndarray, pol: TcecPolicy,
     if pol.backend == "vpu":
         return jnp.einsum(eq, a.astype(f32), b.astype(f32),
                           preferred_element_type=f32)
+
+    def _ref(a_, b_):
+        return jnp.einsum(eq, a_.astype(f32), b_.astype(f32),
+                          preferred_element_type=f32)
+
+    if pol.word_dtype == "int8":
+        # Per-tile-scaled int8 words of the running residual (both
+        # precision conventions: quantization IS the int8 contract), int32
+        # MMA passes rescaled to fp32, with exact ±inf/NaN propagation via
+        # the non-finite guard (quantization would otherwise absorb them).
+        a32, b32 = a.astype(f32), b.astype(f32)
+        aw, sa = split_int8(a32, pol.n_words)
+        bw, sb = split_int8(b32, pol.n_words)
+        acc = None
+        for (i, j) in pol.schedule:
+            term = jnp.einsum(eq, aw[i], bw[j],
+                              preferred_element_type=jnp.int32).astype(f32)
+            term = term * (sa[i] * sb[j])
+            acc = term if acc is None else acc + term
+        return nonfinite_guard(acc, a32, b32, _ref)
+
     if pol.passes == 1 and precision == "native":
         dt = mma_dtype()
         return jnp.einsum(eq, a.astype(dt), b.astype(dt),
                           preferred_element_type=emit or f32)
     staged = pol.fragment_gen == "staged"
-    aw = split_words(a.astype(f32), pol.n_words, staged)
-    bw = split_words(b.astype(f32), pol.n_words, staged)
+    if not pol.error_correction:
+        # Plain single-word cast: ±inf/NaN propagate through the bf16 dot
+        # naturally.
+        aw = split_words(a.astype(f32), 1, staged)
+        bw = split_words(b.astype(f32), 1, staged)
+        return jnp.einsum(eq, aw[0], bw[0], preferred_element_type=f32)
+    a32, b32 = a.astype(f32), b.astype(f32)
+    aw = split_words(sanitize_nonfinite(a32), pol.n_words, staged)
+    bw = split_words(sanitize_nonfinite(b32), pol.n_words, staged)
     acc = None
-    for (i, j) in _SCHEDULES[pol.passes]:
+    for (i, j) in pol.schedule:
         term = jnp.einsum(eq, aw[i], bw[j], preferred_element_type=f32)
         acc = term if acc is None else acc + term
-    return acc
+    return nonfinite_guard(acc, a32, b32, _ref)
 
 
 def _bwd_operand(lhs_labels: str, lhs, rhs_labels: str, rhs,
@@ -304,6 +334,7 @@ def _einsum_core_bwd(spec: _Spec, pol: TcecPolicy, res, g):
         # native width so the TP all-reduce of dx runs at bf16 wire width;
         # db keeps fp32 accumulation (it contracts the long token dim).
         emit_da = mma_dtype() if (pol.backend == "mxu" and pol.passes == 1
+                                  and pol.word_dtype == "bf16"
                                   and spec.precision == "native") else None
         da = _bwd_operand(spec.out, g, spec.ib, bb, spec.ia, a.shape, pol,
                           spec.precision, emit=emit_da)

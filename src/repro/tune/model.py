@@ -74,12 +74,14 @@ PAGE_DMA_OVERHEAD_S = 5e-7
 def score_paged(max_seq_len: int, kvh: int, d: int, dv: int,
                 cand: PagedCandidate, policy: TcecPolicy,
                 mean_seq_fill: float = 0.5,
-                chip: Optional[ChipSpec] = None) -> float:
+                chip: Optional[ChipSpec] = None,
+                quantized: bool = False) -> float:
     """Predicted seconds of one decode step per request, plus the amortized
     prefill cost of the chunk granularity.
 
-    Decode streams the request's live cache once (bf16 pages) and pays one
-    DMA per page — big pages amortize DMA overhead, small pages waste fewer
+    Decode streams the request's live cache once (bf16 pages — int8 plus a
+    4-byte per-page scale per pool when ``quantized``) and pays one DMA per
+    page — big pages amortize DMA overhead, small pages waste fewer
     internal-fragmentation bytes (~half a page per request).  Prefill at
     ``pages_per_step`` pages per chunk pays one launch per chunk but holds
     chunk x cache working sets in staging.
@@ -88,9 +90,12 @@ def score_paged(max_seq_len: int, kvh: int, d: int, dv: int,
     seq = max(1.0, mean_seq_fill * max_seq_len)
     npages = -(-seq // cand.page_size)
     # Live bytes + the partially-filled tail page's dead bytes.
-    live = seq * kvh * (d + dv) * 2.0
-    waste = 0.5 * cand.page_size * kvh * (d + dv) * 2.0
-    t_decode = ((live + waste) / (chip.hbm_gbps * 1e9)
+    byte_w = 1.0 if quantized else 2.0
+    live = seq * kvh * (d + dv) * byte_w
+    waste = 0.5 * cand.page_size * kvh * (d + dv) * byte_w
+    # fp32 scale sidecar: one scalar per page per pool (k+v, or c+r).
+    scale_bytes = npages * 2 * 4.0 if quantized else 0.0
+    t_decode = ((live + waste + scale_bytes) / (chip.hbm_gbps * 1e9)
                 + npages * PAGE_DMA_OVERHEAD_S
                 + npages * policy.passes * GRID_STEP_OVERHEAD_S)
     chunk = cand.page_size * cand.pages_per_step

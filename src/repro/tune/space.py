@@ -59,6 +59,10 @@ def matmul_variants(policy: TcecPolicy) -> Tuple[str, ...]:
     """
     if policy.backend == "vpu":
         return ("vpu",)
+    if policy.word_dtype == "int8":
+        # int8 words carry per-tile scales resolved inside the split — there
+        # is no staged int8 data flow (the staged kernels stage bf16 words).
+        return ("fused",)
     if policy.n_words == 1:
         return ("fused",)         # one word: nothing to stage
     return ("fused", "staged", "staged_db")

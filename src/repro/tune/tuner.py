@@ -275,17 +275,21 @@ def attention_plan(sq: int, skv: int, d: int, dv: int, *,
 
 def paged_plan(max_seq_len: int, kvh: int, d: int, dv: int, *,
                policy: TcecPolicy | str,
-               site: str = "attn") -> Optional[PagedPlan]:
+               site: str = "attn",
+               quantized: bool = False) -> Optional[PagedPlan]:
     """Page-size / pages-per-step plan for the paged serving engine, or
-    ``None`` when tuning is off.  Analytic in every mode: measuring engine
-    throughput in-process would drag model weights and a scheduler into the
-    tuner — ``benchmarks/serving_throughput.py`` owns that measurement."""
+    ``None`` when tuning is off.  ``quantized`` scores int8 page payloads
+    (+ per-page scale traffic) instead of bf16.  Analytic in every mode:
+    measuring engine throughput in-process would drag model weights and a
+    scheduler into the tuner — ``benchmarks/serving_throughput.py`` owns
+    that measurement."""
     if mode() == "off":
         return None
     pol = get_policy(policy)
     best = None
     for c in space.paged_candidates(max_seq_len):
-        t = model.score_paged(max_seq_len, kvh, d, dv, c, pol)
+        t = model.score_paged(max_seq_len, kvh, d, dv, c, pol,
+                              quantized=quantized)
         if best is None or (t, repr(c)) < best[:2]:
             best = (t, repr(c), c)
     if best is None:

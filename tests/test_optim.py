@@ -97,6 +97,31 @@ def test_quantize_roundtrip_error_bound(seed, block):
     assert np.all(err <= bound)
 
 
+def test_dequantize_restores_dtype_and_accepts_legacy_meta():
+    """Regression: ``dequantize`` must restore the leaf's original dtype —
+    a bf16 gradient leaf used to come back fp32 through the EF-int8 wire
+    format and silently widen the optimizer state.  Legacy 2-tuple
+    ``(shape, pad)`` metas (pre-dtype on-disk captures) still dequantize,
+    defaulting to fp32."""
+    rng = np.random.default_rng(0)
+    x16 = jnp.asarray(rng.standard_normal(100), jnp.bfloat16)
+    q, scale, meta = comp.quantize(x16, 64)
+    x_hat = comp.dequantize(q, scale, meta)
+    assert x_hat.dtype == jnp.bfloat16 and x_hat.shape == x16.shape
+    x32 = jnp.asarray(rng.standard_normal((7, 9)), jnp.float32)
+    q, scale, meta = comp.quantize(x32, 64)
+    out = comp.dequantize(q, scale, meta)
+    assert out.dtype == jnp.float32 and out.shape == x32.shape
+    legacy = comp.dequantize(q, scale, (meta[0], meta[1]))
+    assert legacy.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(legacy), np.asarray(out))
+    # compress_leaf keeps the leaf dtype end-to-end
+    g = jnp.asarray(rng.standard_normal(64), jnp.bfloat16)
+    g_hat, err = comp.compress_leaf(g, jnp.zeros((64,), jnp.float32),
+                                    comp.CompressionConfig(block=32))
+    assert g_hat.dtype == jnp.bfloat16 and err.dtype == jnp.float32
+
+
 def test_error_feedback_is_unbiased_over_time():
     """Constant gradient: EF compensates so the mean applied grad converges."""
     g = jnp.full((512,), 0.37, jnp.float32)

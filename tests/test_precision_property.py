@@ -134,6 +134,88 @@ def test_bf16x6_attention_error_bound_vs_skv_and_spread(log2skv, spread, seed):
     assert e_xla < bound, (e_xla, bound, skv, spread)
 
 
+# ---------------------------------------------------------------------------
+# int8 quantization invariants (the quantized-TCEC / quantized-KV contract)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=200, deadline=None)
+@given(finite_f32)
+def test_int8_roundtrip_error_bound(a):
+    """Symmetric int8 at the amax scale: per-element round-trip error is at
+    most scale/2 (+ fp32 roundoff in the scale itself)."""
+    from repro.core.quant import amax_scale, dequantize_q, quantize_q
+    x = jnp.asarray(a)
+    s = amax_scale(x)
+    rec = np.asarray(dequantize_q(quantize_q(x, s), s))
+    bound = float(s) * 0.5001 + 1e-30
+    assert np.all(np.abs(rec - a) <= bound), (np.abs(rec - a).max(), bound)
+
+
+def test_int8_roundtrip_edge_blocks():
+    """All-zero blocks round-trip exactly (TINY-floored scale quantizes 0
+    to 0); a single spike dominates the scale but zeros STAY exact; ±inf
+    and NaN map to q=0 and never poison the tile's scale."""
+    from repro.core.quant import TINY, amax_scale, dequantize_q, quantize_q
+    zero = jnp.zeros((16,), jnp.float32)
+    s = amax_scale(zero)
+    assert float(s) == float(np.float32(TINY))   # fp32 image of the floor
+    np.testing.assert_array_equal(
+        np.asarray(dequantize_q(quantize_q(zero, s), s)), np.zeros(16))
+    spike = zero.at[3].set(1e30)
+    s = amax_scale(spike)
+    rec = np.asarray(dequantize_q(quantize_q(spike, s), s))
+    assert abs(rec[3] - 1e30) <= float(s) * 0.5001
+    assert np.all(rec[np.arange(16) != 3] == 0.0)
+    bad = jnp.asarray([np.inf, -np.inf, np.nan, 2.0], jnp.float32)
+    s = amax_scale(bad)
+    assert float(s) == float(np.float32(2.0 / 127.0))   # finite-masked amax
+    q = np.asarray(quantize_q(bad, s))
+    assert list(q[:3]) == [0, 0, 0] and q[3] == 127
+
+
+@settings(max_examples=100, deadline=None)
+@given(finite_f32, st.integers(1, 3))
+def test_split_int8_words_reconstruct_and_scales_shrink(a, n_words):
+    """``split_int8``: scales are non-increasing (each word quantizes a
+    residual at most half an ulp of the previous scale) and the word sum
+    reconstructs within the last scale/2 plus the fp32 roundoff of the
+    residual updates (which dominates once the third word's scale drops
+    below ~2^-24 of the amax)."""
+    from repro.core.quant import TINY, split_int8
+    words, scales = split_int8(jnp.asarray(a), n_words)
+    sc = [float(s) for s in scales]
+    assert all(sc[i + 1] <= sc[i] for i in range(n_words - 1))
+    rec = np.zeros(a.shape, np.float64)
+    for w, s in zip(words, sc):
+        rec += np.asarray(w, np.float64) * s
+    amax = float(np.max(np.abs(a))) if a.size else 0.0
+    bound = (max(sc[-1], TINY) * 0.5001
+             + 8.0 * n_words * 2.0 ** -24 * amax + 1e-30)
+    assert np.all(np.abs(rec - a.astype(np.float64)) <= bound)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 24), st.integers(2, 24), st.integers(2, 24),
+       st.integers(0, 2 ** 31 - 1))
+def test_int8_policy_error_ladder(m, k, n, seed):
+    """The int8 ladder mirrors the bf16 one: each extra word tightens the
+    error monotonically, and three words beat uncorrected bf16."""
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    b = rng.standard_normal((k, n)).astype(np.float32)
+    ref = a.astype(np.float64) @ b.astype(np.float64)
+    scale = np.max(np.abs(ref)) + 1e-30
+
+    def err(policy):
+        out = np.asarray(tc_matmul(jnp.asarray(a), jnp.asarray(b), policy))
+        return np.max(np.abs(out - ref)) / scale
+
+    e1, e2, e3 = err("int8x1"), err("int8x2"), err("int8x3")
+    assert e2 <= e1 * 1.5 + 1e-7
+    assert e3 <= e2 * 1.5 + 1e-7
+    assert e3 <= err("bf16x1") * 1.5 + 1e-7
+
+
 @settings(max_examples=50, deadline=None)
 @given(st.integers(0, 2 ** 31 - 1))
 def test_tcec_matches_fp32_accuracy(seed):

@@ -1,0 +1,417 @@
+"""Quantized paged KV pool: int8 page payloads + per-page fp32 scales.
+
+The pool contract under quantization: page ids, block tables, COW and
+sharding are untouched — only the payload dtype (int8) and a ``(P,)`` scale
+sidecar change.  The invariants pinned here:
+
+  * append/gather round-trip error <= page scale / 2 per element,
+  * pages an append does not touch stay BITWISE stable (requantize ratio
+    is exactly 1.0 for them),
+  * scales only grow during residency; ``reset_page_scales`` zeroes them at
+    admission so recycled pages never ratchet,
+  * ``copy_page`` clones the scale with the payload (COW boundary pages
+    keep their live tokens' scale),
+  * the XLA decode twin on a quantized pool equals dense decode over the
+    dequantized gather exactly; the Pallas kernel dequantizes in-kernel and
+    agrees with the twin,
+  * model-level: quantized decode logits stay within a measured relative
+    error band of the unquantized pool (the accuracy gate), and
+  * the quantized-off engine path is bit-identical to the default engine.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, BlockSpec, MlaConfig
+from repro.core.context import policy_scope
+from repro.models import (init_params, prefill, decode_step_paged,
+                          init_paged_decode_caches)
+from repro.serving import (append_pages, copy_page, gather_pages,
+                           init_page_scales, init_pool,
+                           paged_decode_attention_pallas,
+                           paged_decode_attention_xla,
+                           paged_mla_decode_attention,
+                           reset_page_scales, NULL_PAGE)
+from repro.serving.paged_cache import write_prefill_prefix
+from repro.models.attention import decode_attention, mla_absorbed_attention
+
+POOL, PAGE = 11, 8
+# measured max relative logit delta of the tiny 2-layer models under
+# int8-quantized KV is ~1.9e-2 (attn) / ~1.2e-2 (mla) — the bound carries
+# ~5x headroom and gates the end-to-end accuracy of the quantized pool.
+LOGIT_REL_TOL = 0.1
+
+
+def _quant_pool(rng, tail, rows=((3, 7, 1), (5, 2, 4)), fills=None):
+    """An int8 pool + scales holding known fp32 values on two block rows."""
+    pool = init_pool(POOL, PAGE, tail, jnp.float32, quantized=True)
+    scales = init_page_scales(POOL)
+    bt = jnp.asarray(rows, np.int32)
+    vals = jnp.asarray(rng.standard_normal(
+        (len(rows), PAGE * len(rows[0])) + tail).astype(np.float32))
+    if fills is not None:
+        vals = vals * jnp.asarray(fills, jnp.float32).reshape(
+            (len(rows),) + (1,) * (vals.ndim - 1))
+    pool, scales = append_pages(pool, vals, bt,
+                                jnp.zeros((len(rows),), jnp.int32), scales)
+    return pool, scales, bt, vals
+
+
+# ---------------------------------------------------------------------------
+# pool primitives
+# ---------------------------------------------------------------------------
+
+def test_quantized_append_gather_roundtrip():
+    rng = np.random.default_rng(0)
+    pool, scales, bt, vals = _quant_pool(rng, (2, 4))
+    got = np.asarray(gather_pages(pool, bt, scales=scales))
+    # per-element quantization error <= the owning page's scale / 2
+    err = np.abs(got - np.asarray(vals))
+    s_page = np.asarray(scales)[np.asarray(bt)]          # (b, npages)
+    bound = np.repeat(s_page, PAGE, axis=1) / 2.0
+    assert np.all(err <= bound.reshape(bound.shape + (1, 1)) + 1e-7)
+    assert np.max(err) > 0                               # it IS lossy
+
+
+def test_append_partial_roundtrip_and_zero_page_exact():
+    """Appending mid-page round-trips, and never-written pages gather as
+    exact zeros (scale 0 = no live magnitude)."""
+    rng = np.random.default_rng(1)
+    pool = init_pool(POOL, PAGE, (1, 2), jnp.float32, quantized=True)
+    scales = init_page_scales(POOL)
+    bt = jnp.asarray([[4, 6, 9]], np.int32)
+    new = jnp.asarray(rng.standard_normal((1, 5, 1, 2)).astype(np.float32))
+    pool, scales = append_pages(pool, new, bt,
+                                jnp.asarray([6], np.int32), scales)
+    got = np.asarray(gather_pages(pool, bt, scales=scales))
+    smax = float(np.max(np.asarray(scales)))
+    assert np.max(np.abs(got[0, 6:11] - np.asarray(new[0]))) <= smax / 2 + 1e-7
+    # positions before the append and the untouched third page: exact zero
+    assert np.all(got[0, :6] == 0.0) and np.all(got[0, 16:] == 0.0)
+
+
+def test_untouched_pages_stay_bitwise_stable():
+    """An append to one block row must not change other pages' payload OR
+    scale by a single bit (the requantize ratio is exactly 1.0 there) —
+    the quantized analogue of the COW/prefix-sharing stability contract."""
+    rng = np.random.default_rng(2)
+    pool, scales, bt, _ = _quant_pool(rng, (2, 4))
+    before_pool = np.asarray(pool).copy()
+    before_scales = np.asarray(scales).copy()
+    # append 100x-larger tokens to row 1 only -> its pages requantize
+    big = jnp.asarray(100 * rng.standard_normal((2, 3, 2, 4)),
+                      jnp.float32).at[0].set(0.0)
+    bt2 = jnp.asarray([[NULL_PAGE, NULL_PAGE, NULL_PAGE], [5, 2, 4]],
+                      np.int32)
+    pool2, scales2 = append_pages(pool, big, bt2,
+                                  jnp.asarray([0, 12], np.int32), scales)
+    # positions 12..14 live on logical page 1 -> physical page 2; the idle
+    # row's writes land on the scratch page
+    touched = {2, NULL_PAGE}
+    for p in range(POOL):
+        if p in touched:
+            continue
+        np.testing.assert_array_equal(np.asarray(pool2)[p], before_pool[p])
+        assert float(np.asarray(scales2)[p]) == float(before_scales[p])
+    assert float(np.asarray(scales2)[2]) > float(before_scales[2])
+
+
+def test_scale_growth_requantizes_existing_payload():
+    """Bigger late tokens grow the page scale; the earlier tokens are
+    requantized by the exact ratio and stay within the NEW scale/2 band."""
+    rng = np.random.default_rng(3)
+    pool = init_pool(POOL, PAGE, (2,), jnp.float32, quantized=True)
+    scales = init_page_scales(POOL)
+    bt = jnp.asarray([[3]], np.int32)
+    small = jnp.asarray(rng.standard_normal((1, 4, 2)) * 0.01, jnp.float32)
+    pool, scales = append_pages(pool, small, bt,
+                                jnp.asarray([0], np.int32), scales)
+    s0 = float(np.asarray(scales)[3])
+    big = jnp.asarray(rng.standard_normal((1, 4, 2)) * 10.0, jnp.float32)
+    pool, scales = append_pages(pool, big, bt,
+                                jnp.asarray([4], np.int32), scales)
+    s1 = float(np.asarray(scales)[3])
+    assert s1 > s0 * 100
+    got = np.asarray(gather_pages(pool, bt, scales=scales))
+    assert np.max(np.abs(got[0, :4] - np.asarray(small[0]))) <= s1 / 2 + 1e-7
+    assert np.max(np.abs(got[0, 4:8] - np.asarray(big[0]))) <= s1 / 2 + 1e-7
+
+
+def test_reset_page_scales_zeroes_only_named_pages():
+    rng = np.random.default_rng(4)
+    scales = jnp.asarray(np.abs(rng.standard_normal((2, POOL))), jnp.float32)
+    pools = {"blk": {
+        "k_pages": jnp.ones((2, POOL, PAGE, 2), jnp.int8),
+        "k_scales": scales,
+        "state": jnp.ones((2, 3), jnp.float32),
+    }}
+    # repeats and NULL_PAGE padding are legal (one compiled shape at admit)
+    out = reset_page_scales(pools, jnp.asarray([3, 3, 7, NULL_PAGE], np.int32))
+    got = np.asarray(out["blk"]["k_scales"])
+    assert np.all(got[:, [3, 7, NULL_PAGE]] == 0.0)
+    keep = [p for p in range(POOL) if p not in (3, 7, NULL_PAGE)]
+    np.testing.assert_array_equal(got[:, keep], np.asarray(scales)[:, keep])
+    np.testing.assert_array_equal(np.asarray(out["blk"]["k_pages"]),
+                                  np.asarray(pools["blk"]["k_pages"]))
+    np.testing.assert_array_equal(np.asarray(out["blk"]["state"]),
+                                  np.asarray(pools["blk"]["state"]))
+
+
+def test_copy_page_clones_scale_with_payload():
+    """The COW boundary copy must carry the source page's scale: the clone
+    holds live tokens quantized AT that scale, so zeroing or dropping it
+    would corrupt them."""
+    rng = np.random.default_rng(5)
+    tree = {"blk": {
+        "k_pages": jnp.asarray(rng.integers(-127, 128, (2, POOL, PAGE, 2)),
+                               jnp.int8),
+        "k_scales": jnp.asarray(np.abs(rng.standard_normal((2, POOL))),
+                                jnp.float32),
+    }}
+    out = copy_page(tree, jnp.int32(3), jnp.int32(8))
+    np.testing.assert_array_equal(np.asarray(out["blk"]["k_pages"][:, 8]),
+                                  np.asarray(tree["blk"]["k_pages"][:, 3]))
+    np.testing.assert_array_equal(np.asarray(out["blk"]["k_scales"][:, 8]),
+                                  np.asarray(tree["blk"]["k_scales"][:, 3]))
+    keep = [p for p in range(POOL) if p != 8]
+    np.testing.assert_array_equal(np.asarray(out["blk"]["k_scales"][:, keep]),
+                                  np.asarray(tree["blk"]["k_scales"][:, keep]))
+
+
+# ---------------------------------------------------------------------------
+# attention over quantized pages
+# ---------------------------------------------------------------------------
+
+def test_quantized_twin_equals_dense_decode_over_dequantized_gather():
+    """The XLA twin's contract is unchanged by quantization: dequantize the
+    gather, run the same ``decode_attention`` — parity is exact."""
+    rng = np.random.default_rng(6)
+    pool_k, sk, bt, _ = _quant_pool(rng, (2, 16))
+    pool_v, sv, _, _ = _quant_pool(rng, (2, 16))
+    q = jnp.asarray(rng.standard_normal((2, 4, 16)).astype(np.float32))
+    sl = jnp.asarray([21, 9], np.int32)
+    out = paged_decode_attention_xla(q, pool_k, pool_v, bt, sl,
+                                     policy="bf16x6",
+                                     k_scales=sk, v_scales=sv)
+    kd = gather_pages(pool_k, bt, scales=sk)
+    vd = gather_pages(pool_v, bt, scales=sv)
+    ref = decode_attention(q[:, None], kd, vd, sl - 1, policy="bf16x6")[:, 0]
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("policy", ["bf16x6", "fp32_vpu"])
+def test_quantized_kernel_matches_twin(policy):
+    """The Pallas kernel reads int8 pages + the per-page scalar sidecar and
+    dequantizes in VMEM — it must agree with the twin to fp32 roundoff
+    (online vs plain softmax order only)."""
+    rng = np.random.default_rng(7)
+    pool_k, sk, bt, _ = _quant_pool(rng, (2, 16))
+    pool_v, sv, _, _ = _quant_pool(rng, (2, 16))
+    q = jnp.asarray(rng.standard_normal((2, 4, 16)).astype(np.float32))
+    sl = jnp.asarray([21, 9], np.int32)
+    out_k = np.asarray(paged_decode_attention_pallas(
+        q, pool_k, pool_v, bt, sl, policy=policy, interpret=True,
+        k_scales=sk, v_scales=sv), np.float32)
+    out_t = np.asarray(paged_decode_attention_xla(
+        q, pool_k, pool_v, bt, sl, policy=policy,
+        k_scales=sk, v_scales=sv), np.float32)
+    np.testing.assert_allclose(out_k, out_t, rtol=1e-5, atol=1e-5)
+
+
+def test_quantized_mla_twin_equals_absorbed_attention():
+    rng = np.random.default_rng(8)
+    pool_c, sc, bt, _ = _quant_pool(rng, (16,))
+    pool_r, sr, _, _ = _quant_pool(rng, (8,))
+    q_c = jnp.asarray(rng.standard_normal((2, 4, 16)).astype(np.float32))
+    q_r = jnp.asarray(rng.standard_normal((2, 4, 8)).astype(np.float32))
+    sl = jnp.asarray([21, 9], np.int32)
+    scale = 1.0 / np.sqrt(16 + 8)
+    out = paged_mla_decode_attention(q_c, q_r, pool_c, pool_r, bt, sl,
+                                     scale=scale, policy="bf16x6",
+                                     c_scales=sc, r_scales=sr)
+    c = gather_pages(pool_c, bt, scales=sc)
+    r = gather_pages(pool_r, bt, scales=sr)
+    sv = PAGE * int(bt.shape[1])
+    valid = jnp.arange(sv, dtype=jnp.int32)[None, None] < sl[:, None, None]
+    ref = mla_absorbed_attention(q_c[:, None], q_r[:, None], c, r, valid,
+                                 scale, "bf16x6")[:, 0]
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# model level: quantized pools vs fp pools
+# ---------------------------------------------------------------------------
+
+def _tiny_cfg(mixer):
+    mla = MlaConfig(kv_lora_rank=16, q_lora_rank=0, qk_nope_head_dim=8,
+                    qk_rope_head_dim=4, v_head_dim=8) if mixer == "mla" \
+        else None
+    return ArchConfig(
+        name=f"tiny-q-{mixer}", family="dense", n_layers=2, d_model=32,
+        n_heads=4, n_kv_heads=2 if mixer == "attn" else 4, d_ff=64,
+        vocab=128, pattern=(BlockSpec(mixer, "dense"),), mla=mla,
+        remat="none")
+
+
+def test_quantized_cache_spec_shapes():
+    for mixer, pool_keys, scale_keys in (
+            ("attn", ("k_pages", "v_pages"), ("k_scales", "v_scales")),
+            ("mla", ("c_pages", "r_pages"), ("c_scales", "r_scales"))):
+        cfg = _tiny_cfg(mixer)
+        qc = init_paged_decode_caches(cfg, 2, 9, PAGE, quantized=True)
+        fc = init_paged_decode_caches(cfg, 2, 9, PAGE)
+        blk_q, blk_f = qc["pos0"]["mixer"], fc["pos0"]["mixer"]
+        for pk, sk in zip(pool_keys, scale_keys):
+            assert blk_q[pk].dtype == jnp.int8
+            assert blk_q[sk].dtype == jnp.float32
+            assert blk_q[sk].shape == blk_q[pk].shape[:1] + (9,)
+            assert blk_f[pk].dtype != jnp.int8
+            assert sk not in blk_f
+        # int8 pools halve the bf16 payload (or quarter fp32)
+        assert blk_q[pool_keys[0]].nbytes * 2 <= blk_f[pool_keys[0]].nbytes
+
+
+@pytest.mark.parametrize("mixer", ["attn", "mla"])
+@pytest.mark.parametrize("policy", ["fp32_vpu", "bf16x6"])
+def test_quantized_decode_logits_within_error_band(mixer, policy):
+    """The accuracy gate: drive identical token inputs through quantized
+    and fp paged pools for several steps; the max relative logit delta
+    stays inside the measured band (and is nonzero — it really quantizes)."""
+    cfg = _tiny_cfg(mixer)
+    rng = jax.random.PRNGKey(0)
+    params = init_params(rng, cfg)
+    prompt = jax.random.randint(rng, (1, 11), 0, cfg.vocab)
+    slots = 2
+    with policy_scope(policy):
+        logits_p, pf = prefill(params, {"tokens": prompt}, cfg)
+        row = jnp.asarray([2, 5, 7], np.int32)
+        bt = jnp.full((slots, 3), NULL_PAGE, jnp.int32).at[0].set(row)
+        pools_f = init_paged_decode_caches(cfg, slots, 9, PAGE)
+        pools_q = init_paged_decode_caches(cfg, slots, 9, PAGE,
+                                           quantized=True)
+        pools_f = write_prefill_prefix(pools_f, pf, row, jnp.int32(0))
+        pools_q = write_prefill_prefix(pools_q, pf, row, jnp.int32(0))
+        tok = jnp.argmax(logits_p, -1)[:, None].astype(jnp.int32)
+        tok = jnp.zeros((slots, 1), jnp.int32).at[0].set(tok[0])
+        seq = jnp.zeros((slots,), jnp.int32).at[0].set(11)
+        worst = 0.0
+        for _ in range(4):
+            lf, pools_f = decode_step_paged(params, tok, pools_f, bt, seq,
+                                            cfg)
+            lq, pools_q = decode_step_paged(params, tok, pools_q, bt, seq,
+                                            cfg)
+            rel = float(jnp.max(jnp.abs(lf[0] - lq[0]))
+                        / jnp.max(jnp.abs(lf[0])))
+            worst = max(worst, rel)
+            tok = tok.at[0].set(jnp.argmax(lf[0], -1)[None]
+                                .astype(jnp.int32))
+            seq = seq.at[0].add(1)
+    assert 0.0 < worst < LOGIT_REL_TOL, worst
+
+
+# ---------------------------------------------------------------------------
+# engine level
+# ---------------------------------------------------------------------------
+
+def _serve_cfg():
+    return ArchConfig(
+        name="tiny-q-serve", family="dense", n_layers=2, d_model=32,
+        n_heads=4, n_kv_heads=2, d_ff=64, vocab=128,
+        pattern=(BlockSpec("attn", "dense"),), qkv_bias=True,
+        tie_embeddings=True, remat="none")
+
+
+@pytest.fixture(scope="module")
+def serve_model():
+    cfg = _serve_cfg()
+    return cfg, init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _streams(cfg, params, **kw):
+    from repro.serving import PagedServingEngine
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(0, cfg.vocab, n)) for n in (5, 11, 8, 3)]
+    eng = PagedServingEngine(cfg, params, page_size=4, max_concurrency=2,
+                             max_seq_len=24, **kw)
+    rids = [eng.submit(p, g) for p, g in zip(prompts, (4, 3, 5, 4))]
+    out = eng.run()
+    return [out[r] for r in rids]
+
+
+def test_engine_quantized_off_is_bitwise_default(serve_model):
+    """``quantized_kv=False`` IS the default engine — stream-identical per
+    policy (the no-regression gate for the quantized extension)."""
+    cfg, params = serve_model
+    for policy in ("fp32_vpu", "bf16x6"):
+        with policy_scope(policy):
+            base = _streams(cfg, params)
+            off = _streams(cfg, params, quantized_kv=False)
+        assert base == off, policy
+
+
+def test_engine_quantized_streams_decode_and_recycle(serve_model):
+    """The quantized engine serves a full mixed stream (page recycling
+    across admissions included — ``reset_page_scales`` keeps recycled
+    pages from ratcheting) and, on this tiny config, greedy argmax is
+    robust to the ~2% logit perturbation: streams match the baseline."""
+    cfg, params = serve_model
+    with policy_scope("bf16x6"):
+        base = _streams(cfg, params)
+        quant = _streams(cfg, params, quantized_kv=True)
+    assert [len(s) for s in quant] == [len(s) for s in base]
+    assert quant == base
+
+
+def test_engine_quantized_with_prefix_cache_and_chunked_prefill(serve_model):
+    """Quantized pools + prefix sharing + COW + chunked prefill compose:
+    the cached engine's streams equal the uncached quantized engine's."""
+    cfg, params = serve_model
+    rng = np.random.default_rng(1)
+    shared = list(rng.integers(0, cfg.vocab, 9))
+    prompts = [shared + list(rng.integers(0, cfg.vocab, k))
+               for k in (3, 5, 2)]
+    prompts.append(list(prompts[0]))
+
+    def run(prefix_cache):
+        from repro.serving import PagedServingEngine
+        eng = PagedServingEngine(cfg, params, page_size=4,
+                                 max_concurrency=2, max_seq_len=24,
+                                 prefill_chunk=4, prefix_cache=prefix_cache,
+                                 quantized_kv=True)
+        rids = [eng.submit(p, 4) for p in prompts]
+        out = eng.run()
+        return eng, [out[r] for r in rids]
+
+    with policy_scope("bf16x6"):
+        _, cold = run(False)
+        eng, hot = run(True)
+    assert hot == cold
+    assert eng.scheduler.prefix_stats["cached_tokens"] > 0
+
+
+# ---------------------------------------------------------------------------
+# footprint accounting (the benchmark's bytes model)
+# ---------------------------------------------------------------------------
+
+def test_quantized_cache_bytes_at_least_halved():
+    import importlib.util
+    import pathlib
+    path = pathlib.Path(__file__).resolve().parent.parent / "benchmarks" \
+        / "serving_throughput.py"
+    spec = importlib.util.spec_from_file_location("serving_throughput", path)
+    bench = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(bench)
+    from repro.configs import get_config
+    lens = [257, 1891, 733, 94]
+    for name in ("qwen2-0.5b", "deepseek-v2-236b"):
+        cfg = get_config(name)
+        dense = bench._cache_bytes_per_step(cfg, [8192] * 4, 64, False)
+        paged = bench._cache_bytes_per_step(cfg, lens, 64, True)
+        quant = bench._cache_bytes_per_step(cfg, lens, 64, True,
+                                            quantized=True)
+        # acceptance: >= 2x fewer decode cache bytes than the dense stream
+        # and ~half the bf16 paged payload (per-page scales cost ~1%)
+        assert quant * 2 <= dense, name
+        assert quant <= 0.52 * paged, name
+        assert quant > 0.45 * paged, name

@@ -23,6 +23,19 @@ def _arr(*shape):
     return jnp.asarray(RNG.standard_normal(shape).astype(np.float32))
 
 
+def _int8_words(x, n_words):
+    """Independent per-tile int8 split (the quantized-TCEC reference)."""
+    words, scales = [], []
+    rest = x.astype(jnp.float32)
+    for _ in range(n_words):
+        s = jnp.maximum(jnp.max(jnp.abs(rest)) / 127.0, 1e-12)
+        w = jnp.clip(jnp.round(rest / s), -127, 127).astype(jnp.int8)
+        words.append(w)
+        scales.append(s)
+        rest = rest - w.astype(jnp.float32) * s
+    return words, scales
+
+
 def _legacy_strict(eq, a, b, pol):
     """Independent reimplementation of the pre-frontend tcec_einsum
     arithmetic (the parity reference: NOT routed through the frontend)."""
@@ -30,6 +43,16 @@ def _legacy_strict(eq, a, b, pol):
     if pol.backend == "vpu":
         return jnp.einsum(eq, a.astype(f32), b.astype(f32),
                           preferred_element_type=f32)
+    if pol.word_dtype == "int8":
+        aw, sa = _int8_words(a, pol.n_words)
+        bw, sb = _int8_words(b, pol.n_words)
+        acc = None
+        for (i, j) in pol.schedule:
+            t = jnp.einsum(eq, aw[i], bw[j],
+                           preferred_element_type=jnp.int32).astype(f32)
+            t = t * (sa[i] * sb[j])
+            acc = t if acc is None else acc + t
+        return acc
     staged = pol.fragment_gen == "staged"
     aw = split_words(a.astype(f32), pol.n_words, staged)
     bw = split_words(b.astype(f32), pol.n_words, staged)
@@ -58,9 +81,19 @@ def test_frontend_strict_parity_every_policy(name, case):
     got = tcec.einsum(eq, a, b, policy=pol, precision="strict")
     ref = _legacy_strict(eq, a, b, pol)
     if pol.kernel == "pallas" and case != "mla_absorbed":
-        # kernel path: same schedule, different k-accumulation blocking
-        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
-                                   rtol=1e-5, atol=1e-5)
+        if pol.word_dtype == "int8":
+            # per-(block) kernel scales legitimately differ from the
+            # whole-operand reference scales — gate both against the
+            # fp64 oracle at the measured ladder level instead.
+            oracle = np.einsum(eq, np.asarray(a, np.float64),
+                               np.asarray(b, np.float64))
+            bound = {3: 1e-3, 6: 1e-5}[pol.passes]
+            assert max_rel_err(got, oracle) < bound
+            assert max_rel_err(ref, oracle) < bound
+        else:
+            # kernel path: same schedule, different k-accumulation blocking
+            np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                       rtol=1e-5, atol=1e-5)
     else:
         np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
 
